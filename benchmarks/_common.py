@@ -1,0 +1,51 @@
+"""Shared helpers for the benchmark harness (one module per paper table)."""
+
+from __future__ import annotations
+
+import json
+import time
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.dismec import DiSMECConfig, train
+from repro.core.prediction import evaluate, predict_topk
+from repro.data.xmc import XMCDataset, load_paper_like
+
+# The scaled-down name-alikes of the paper's Table 1 datasets.
+DATASETS = ("wiki31k_like", "amazon670k_like", "delicious200k_like",
+            "wikilshtc325k_like")
+
+
+def load(name: str) -> XMCDataset:
+    return load_paper_like(name, seed=0)
+
+
+def fit_dismec(data: XMCDataset, *, C: float = 1.0, delta: float = 0.01,
+               eps: float = 0.01):
+    t0 = time.time()
+    model = train(jnp.asarray(data.X_train), jnp.asarray(data.Y_train),
+                  DiSMECConfig(C=C, delta=delta, eps=eps,
+                               label_batch=min(data.n_labels, 1024)))
+    return model, time.time() - t0
+
+
+def score(model_W, data: XMCDataset) -> dict:
+    _, idx = predict_topk(jnp.asarray(data.X_test), model_W, 5)
+    return evaluate(jnp.asarray(data.Y_test), idx)
+
+
+def print_table(title: str, rows: list[dict], cols: list[str]):
+    print(f"\n== {title} ==")
+    hdr = " | ".join(f"{c:>12s}" for c in cols)
+    print(hdr)
+    print("-" * len(hdr))
+    for r in rows:
+        print(" | ".join(
+            f"{r[c]:12.4f}" if isinstance(r[c], float) else f"{str(r[c]):>12s}"
+            for c in cols))
+
+
+def emit_json(path: str, obj):
+    with open(path, "a") as f:
+        f.write(json.dumps(obj) + "\n")

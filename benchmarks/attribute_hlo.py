@@ -1,0 +1,102 @@
+"""Attribute trip-corrected FLOPs and collective bytes in a compiled HLO to
+their op_name metadata — the dry-run 'profiler' used for SSPerf iterations.
+
+Usage: PYTHONPATH=src python -m benchmarks.attribute_hlo /tmp/file.txt \
+           [--what coll|flops] [--top 15]
+"""
+
+from __future__ import annotations
+
+import argparse
+import re
+from collections import Counter
+
+from repro.launch import hlo_cost as hc
+
+META = re.compile(r'op_name="([^"]*)"')
+
+
+def attribute(text: str, what: str = "coll") -> Counter:
+    comps = hc.parse_module(text)
+    parsed = {}
+    for name, lines in comps.items():
+        instrs = []
+        for ln in lines:
+            m = hc._INSTR.match(ln)
+            if m:
+                instrs.append({"name": m.group(1), "type": m.group(2),
+                               "op": m.group(3), "rest": m.group(4),
+                               "line": ln})
+        parsed[name] = instrs
+    symtab = {c: {i["name"]: i["type"] for i in instrs}
+              for c, instrs in parsed.items()}
+    memo: dict = {}
+
+    def walk(cname: str) -> Counter:
+        if cname in memo:
+            return memo[cname]
+        memo[cname] = Counter()
+        total: Counter = Counter()
+        syms = symtab.get(cname, {})
+        for ins in parsed.get(cname, []):
+            op, line = ins["op"], ins["line"]
+            mm = META.search(line)
+            key = mm.group(1) if mm else "?"
+            if what == "flops" and op == "dot":
+                dims = hc._shape_dims(ins["type"]) or []
+                out_prod = 1
+                for d in dims:
+                    out_prod *= d
+                ops = hc._OPERANDS_SPLIT.findall(ins["rest"].split("),")[0])
+                lhs = hc._shape_dims(syms.get(ops[0] if ops else "", "")) or []
+                cm = hc._LHS_C.search(line)
+                cprod = 1
+                if cm and lhs:
+                    for ci in cm.group(1).split(","):
+                        if ci:
+                            cprod *= lhs[int(ci)]
+                total[key] += 2.0 * out_prod * cprod
+            if what == "coll":
+                kind = op[:-6] if op.endswith("-start") else op
+                if kind in hc.COLLECTIVES:
+                    ob = sum(hc._shape_bytes(syms.get(o, ""))
+                             for o in hc._OPERANDS_SPLIT.findall(
+                                 ins["rest"].split("),")[0].split(")")[0])
+                             if o in syms)
+                    total[(kind, key)] += ob
+            if op == "while":
+                b = hc._BODY.search(line)
+                t = hc._TRIP.search(line)
+                trips = float(t.group(1)) if t else 1.0
+                if b:
+                    for k, v in walk(b.group(1)).items():
+                        total[k] += v * trips
+            else:
+                cm2 = hc._CALLS.search(line)
+                if cm2:
+                    for k, v in walk(cm2.group(1)).items():
+                        total[k] += v
+        memo[cname] = total
+        return total
+
+    entry = next(c for c in parsed if c.startswith("main"))
+    return walk(entry)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("path")
+    ap.add_argument("--what", default="coll", choices=["coll", "flops"])
+    ap.add_argument("--top", type=int, default=15)
+    args = ap.parse_args()
+    total = attribute(open(args.path).read(), args.what)
+    s = sum(total.values())
+    unit = "GB" if args.what == "coll" else "GFLOP"
+    print(f"total {s / 1e9:.2f} {unit}")
+    for k, v in total.most_common(args.top):
+        label = f"{k[0]:18s} {k[1][-95:]}" if isinstance(k, tuple) else k[-110:]
+        print(f"{v / 1e9:10.2f} ({v / s * 100:5.1f}%) {label}")
+
+
+if __name__ == "__main__":
+    main()

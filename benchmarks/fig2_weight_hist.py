@@ -1,0 +1,58 @@
+"""Paper Figure 2: distribution of learnt weights before/after pruning.
+
+Claim: l2-regularized OvR training leaves the overwhelming mass of weights
+in a narrow band around 0 ("ambiguous weights"); step 7 removes them.
+
+Usage: PYTHONPATH=src python -m benchmarks.fig2_weight_hist
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks._common import fit_dismec, load
+from repro.core.pruning import ambiguous_fraction, prune, weight_histogram
+
+
+def _ascii_hist(counts, edges, height: int = 12) -> str:
+    counts = np.asarray(counts, np.float64)
+    logc = np.log10(np.maximum(counts, 1.0))
+    top = logc.max() or 1.0
+    lines = []
+    for h in range(height, 0, -1):
+        row = "".join("#" if logc[i] / top * height >= h else " "
+                      for i in range(len(counts)))
+        lines.append(f"10^{top * h / height:4.1f}|{row}")
+    lines.append("      " + "-" * len(counts))
+    lines.append(f"      {edges[0]:+.2f}{'':{max(len(counts) - 12, 1)}s}"
+                 f"{edges[-1]:+.2f}")
+    return "\n".join(lines)
+
+
+def run(dataset: str = "wiki31k_like") -> dict:
+    data = load(dataset)
+    model, _ = fit_dismec(data, delta=0.0)
+    W = model.W
+    before, edges = weight_histogram(W, bins=61, lim=0.1)
+    after, _ = weight_histogram(prune(W, 0.01), bins=61, lim=0.1)
+    # Exclude exact zeros from the "after" plot (they are the removed mass).
+    Wp = np.asarray(prune(W, 0.01))
+    after_nz, _ = np.histogram(Wp[Wp != 0.0], bins=np.linspace(-0.1, 0.1, 62))
+    return {"before": np.asarray(before), "after_nz": after_nz,
+            "edges": np.asarray(edges),
+            "ambiguous_frac": float(ambiguous_fraction(W, 0.01))}
+
+
+def main():
+    out = run()
+    print("== Fig 2a: learnt weight distribution (log10 counts) ==")
+    print(_ascii_hist(out["before"], out["edges"]))
+    print(f"\nambiguous |w| < 0.01 fraction: {out['ambiguous_frac']:.3f} "
+          "(paper: 0.96 at Wiki-31K scale; smaller here at toy D)")
+    print("\n== Fig 2b: after pruning (zeros removed) ==")
+    print(_ascii_hist(out["after_nz"], out["edges"]))
+    return out
+
+
+if __name__ == "__main__":
+    main()

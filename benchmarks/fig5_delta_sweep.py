@@ -1,0 +1,50 @@
+"""Paper Figure 5: impact of Delta on P@k and model size (WikiLSHTC-325K
+in the paper; wikilshtc325k_like here).
+
+Claim: Delta=0.01 preserves accuracy while shrinking the model by orders of
+magnitude; much larger Delta degrades P@k monotonically.
+
+Usage: PYTHONPATH=src python -m benchmarks.fig5_delta_sweep
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from benchmarks._common import fit_dismec, load, print_table, score
+from repro.core.pruning import nnz, prune
+
+DELTAS = (0.0, 0.005, 0.01, 0.05, 0.1, 0.2, 0.4)
+
+
+def run(dataset: str = "wikilshtc325k_like") -> list[dict]:
+    data = load(dataset)
+    model, _ = fit_dismec(data, delta=0.0)     # train once, sweep pruning
+    rows = []
+    for d in DELTAS:
+        W = prune(model.W, d)
+        ev = score(W, data)
+        rows.append({"delta": d, "nnz": int(nnz(W)),
+                     "size_mb": float(nnz(W)) * 8 / 1e6,
+                     "density": float(nnz(W)) / W.size, **ev})
+    return rows
+
+
+def main():
+    rows = run()
+    print_table("Fig 5: Delta sweep (model size vs accuracy)", rows,
+                ["delta", "nnz", "size_mb", "density", "P@1", "P@3", "P@5"])
+    # Claims:
+    r0 = next(r for r in rows if r["delta"] == 0.0)
+    r001 = next(r for r in rows if r["delta"] == 0.01)
+    rbig = rows[-1]
+    print("\nClaims:")
+    print(f"  Delta=0.01 lossless: dP@1 = {r001['P@1'] - r0['P@1']:+.4f} "
+          f"(paper: ~0), size x{r0['nnz'] / max(r001['nnz'], 1):.1f} smaller")
+    print(f"  Large Delta degrades: P@1 {r001['P@1']:.3f} -> {rbig['P@1']:.3f}"
+          f" at Delta={rbig['delta']}")
+    return rows
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,145 @@
+"""Roofline analysis (deliverable g): three terms per (arch x shape), from
+the dry-run's compiled artifacts (dryrun_results.jsonl).
+
+Terms (TPU v5e: 197 TFLOP/s bf16, 819 GB/s HBM, ~50 GB/s/link ICI):
+
+  compute_s    = flops_corrected / 197e12
+                 trip-count-corrected HLO flops (launch/hlo_cost.py): XLA's
+                 cost_analysis counts while bodies once, undercounting layer
+                 scans; the corrected model multiplies by known_trip_count.
+  memory_s     = (argument_bytes + output_bytes + 2*temp_bytes) / 819e9
+                 a MIN-TRAFFIC FLOOR: every input buffer read once, every
+                 output written once, every temp written+read once. The HLO
+                 instruction-level byte counts (upper bound, also reported)
+                 overcount CPU-pipeline fusion boundaries by 10-50x and are
+                 not representative of a fusing TPU pipeline; the floor and
+                 the upper bracket the truth and agree on dominance for all
+                 pairs where it matters (EXPERIMENTS.md SSRoofline).
+  collective_s = trip-corrected operand bytes of all-gather/all-reduce/
+                 reduce-scatter/all-to-all/collective-permute / 50e9.
+
+MODEL_FLOPS = 6 N D per train token (2 N D per inference token), N = active
+params (MoE: routed top-k + shared). useful = MODEL_FLOPS / HLO_flops
+exposes remat/capacity/padding waste.
+
+Usage: PYTHONPATH=src python -m benchmarks.roofline [--json FILE] [--mesh M]
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+
+PEAK = 197e12
+HBM = 819e9
+ICI = 50e9
+CHIPS = {"16x16": 256, "2x16x16": 512}
+
+TOKENS = {"train_4k": 4096 * 256, "prefill_32k": 32768 * 32,
+          "decode_32k": 128, "long_500k": 1}
+
+
+def model_flops_global(arch: str, shape: str) -> float:
+    from repro.configs.registry import get_config
+    cfg = get_config(arch)
+    n_active = cfg.active_param_count()
+    mult = 6.0 if shape == "train_4k" else 2.0
+    return mult * n_active * TOKENS[shape]
+
+
+def analyse(rec: dict) -> dict:
+    chips = CHIPS[rec["mesh"]]
+    comp = rec["flops_corrected"] / PEAK
+    mem_floor = (rec["argument_bytes"] + rec["output_bytes"]
+                 + 2 * rec["temp_bytes"]) / HBM
+    mem_upper = rec["hbm_bytes_corrected"] / HBM
+    coll = sum(rec["collective_bytes_corrected"].values()) / ICI
+    terms = {"compute": comp, "memory": mem_floor, "collective": coll}
+    dom = max(terms, key=terms.get)
+    mf = model_flops_global(rec["arch"], rec["shape"]) / chips
+    total = max(comp, mem_floor, coll)
+    return {
+        "arch": rec["arch"], "shape": rec["shape"], "mesh": rec["mesh"],
+        "compute_s": comp, "memory_s": mem_floor, "memory_upper_s": mem_upper,
+        "collective_s": coll, "dominant": dom,
+        "bound_s": total,
+        "model_flops_per_chip": mf,
+        "useful_ratio": mf / rec["flops_corrected"]
+        if rec["flops_corrected"] else 0.0,
+        "peak_gb": rec["peak_bytes"] / 1e9,
+    }
+
+
+def lever(r: dict) -> str:
+    """One sentence: what moves the dominant term down (per-pair)."""
+    arch, shape, dom = r["arch"], r["shape"], r["dominant"]
+    if dom == "collective":
+        if "moe" in arch or arch.startswith(("mixtral", "qwen2-moe")):
+            return ("expert-parallel all-to-all dominates: overlap a2a with "
+                    "shared-expert compute; cap tokens/expert")
+        return ("TP all-reduce dominates: switch wo/w2 outputs to "
+                "reduce-scatter + sequence-sharded residual (1/2 bytes)")
+    if dom == "memory":
+        if shape in ("decode_32k", "long_500k"):
+            return ("KV/state cache streaming dominates: shrink cache dtype "
+                    "(bf16->f8), shard cache length over more devices, or "
+                    "fuse cache read into the attention kernel")
+        return ("activation traffic dominates: recompute cheap elementwise "
+                "in bwd (less temp), bf16 activations, bigger microbatch to "
+                "amortize weight reads")
+    if r["useful_ratio"] < 0.5:
+        return ("compute-bound with low useful ratio: cut remat recompute "
+                "and head/vocab padding waste before anything else")
+    return ("genuinely compute-bound near peak: only bf16/int8 matmuls or "
+            "more chips move this")
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--json", default="dryrun_results.jsonl")
+    ap.add_argument("--mesh", default="16x16",
+                    help="roofline table mesh (single pod per the brief)")
+    ap.add_argument("--markdown", action="store_true")
+    args = ap.parse_args()
+
+    recs = [json.loads(l) for l in open(args.json)]
+    seen, rows = set(), []
+    for r in reversed(recs):                     # last result per key wins
+        if r.get("skipped") or "error" in r or r["mesh"] != args.mesh:
+            continue
+        key = (r["arch"], r["shape"])
+        if key in seen:
+            continue
+        seen.add(key)
+        rows.append(analyse(r))
+    rows.sort(key=lambda r: (r["arch"], r["shape"]))
+
+    if args.markdown:
+        print("| arch | shape | compute_s | memory_s | collective_s | "
+              "dominant | useful | peak GB |")
+        print("|---|---|---|---|---|---|---|---|")
+        for r in rows:
+            print(f"| {r['arch']} | {r['shape']} | {r['compute_s']:.4f} | "
+                  f"{r['memory_s']:.4f} | {r['collective_s']:.4f} | "
+                  f"{r['dominant']} | {r['useful_ratio']:.3f} | "
+                  f"{r['peak_gb']:.1f} |")
+    else:
+        hdr = (f"{'arch':22s} {'shape':12s} {'compute_s':>10s} "
+               f"{'memory_s':>10s} {'collect_s':>10s} {'dominant':>10s} "
+               f"{'useful':>7s} {'peakGB':>7s}")
+        print(hdr)
+        print("-" * len(hdr))
+        for r in rows:
+            print(f"{r['arch']:22s} {r['shape']:12s} {r['compute_s']:10.4f} "
+                  f"{r['memory_s']:10.4f} {r['collective_s']:10.4f} "
+                  f"{r['dominant']:>10s} {r['useful_ratio']:7.3f} "
+                  f"{r['peak_gb']:7.1f}")
+    print()
+    for r in rows:
+        print(f"{r['arch']} x {r['shape']}: {r['dominant']}-bound "
+              f"({r['bound_s']:.3f}s) -> {lever(r)}")
+    return rows
+
+
+if __name__ == "__main__":
+    main()

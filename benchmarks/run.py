@@ -1,0 +1,66 @@
+"""Benchmark harness entry point: one module per paper table/figure.
+
+  PYTHONPATH=src python -m benchmarks.run            # everything
+  PYTHONPATH=src python -m benchmarks.run --only fig5_delta_sweep
+
+Modules (deliverable d):
+  table2_accuracy        Table 2 + Fig 3 (P@k / nDCG@k vs baselines)
+  fig2_weight_hist       Fig 2 (weight distribution pre/post prune)
+  fig4_l1_vs_l2          Fig 4 (l1 underfits vs l2+prune)
+  fig5_delta_sweep       Fig 5 (Delta vs size vs accuracy)
+  table3_scaling         SS4.3 (double-parallelization scaling)
+  table_model_size       SS4.2 (model size accounting + paper-scale check)
+  table_prediction_speed SS4.3 (prediction latency + BSR flops ratio)
+  c_validation_sweep     SS3.3 (C tuned on validation) + shard balance
+  roofline               deliverable (g): 3-term roofline from the dry-run
+"""
+
+from __future__ import annotations
+
+import argparse
+import importlib
+import sys
+import time
+import traceback
+
+MODULES = [
+    "table2_accuracy",
+    "fig2_weight_hist",
+    "fig4_l1_vs_l2",
+    "fig5_delta_sweep",
+    "table3_scaling",
+    "table_model_size",
+    "table_prediction_speed",
+    "c_validation_sweep",
+    "roofline",
+]
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default=None,
+                    help="comma-separated module subset")
+    args = ap.parse_args()
+    mods = args.only.split(",") if args.only else MODULES
+
+    failures = []
+    for name in mods:
+        print(f"\n{'=' * 72}\n== benchmarks.{name}\n{'=' * 72}")
+        t0 = time.time()
+        try:
+            mod = importlib.import_module(f"benchmarks.{name}")
+            if name == "roofline":
+                sys.argv = ["roofline"]          # default args
+            mod.main()
+            print(f"\n[benchmarks.{name} done in {time.time() - t0:.1f}s]")
+        except Exception:
+            traceback.print_exc()
+            failures.append(name)
+    if failures:
+        print(f"\nFAILED benchmarks: {failures}")
+        sys.exit(1)
+    print(f"\nAll {len(mods)} benchmarks completed.")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,49 @@
+"""Quickstart: the paper end-to-end in ~40 lines of public API.
+
+Generates a power-law XMC dataset (paper Fig. 1 statistics), trains DiSMEC
+(Algorithm 1: batched TRON + Delta-pruning), evaluates P@k / nDCG@k
+(paper §3.2), and serves through the block-sparse predict kernel (§2.2.1).
+
+Run: PYTHONPATH=src python examples/quickstart.py
+"""
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.dismec import DiSMECConfig, train
+from repro.core.prediction import evaluate, predict_topk
+from repro.core.pruning import to_block_sparse
+from repro.data.xmc import make_xmc_dataset
+from repro.kernels.bsr_predict import ops as bsr_ops
+
+
+def main():
+    # 1. Power-law XMC data (Eq. 1.1: N_r = N_1 r^-beta).
+    data = make_xmc_dataset(n_train=1500, n_test=500, n_features=4096,
+                            n_labels=512, beta=1.0, seed=0)
+    print("dataset:", data.stats())
+
+    # 2. Algorithm 1: one-vs-rest squared-hinge SVMs, batched TRON solver,
+    #    Delta=0.01 ambiguity pruning (steps 3-7).
+    cfg = DiSMECConfig(C=1.0, delta=0.01, label_batch=512)
+    model = train(jnp.asarray(data.X_train), jnp.asarray(data.Y_train), cfg)
+    print(f"model: {model.W.shape}, density "
+          f"{model.nnz / model.W.size:.3f} after Delta-pruning")
+
+    # 3. Evaluate (paper Table 2 metrics).
+    _, topk = predict_topk(jnp.asarray(data.X_test), model.W, 5)
+    print("metrics:", evaluate(jnp.asarray(data.Y_test), topk))
+
+    # 4. Serving path (paper §2.2.1): block-sparse model, zero blocks
+    #    skipped by the Pallas kernel (interpret mode on CPU).
+    bsr = to_block_sparse(model.W, (128, 128))
+    scores = bsr_ops.bsr_predict(jnp.asarray(data.X_test), bsr)
+    _, topk_bsr = jax.lax.top_k(scores[:, :model.n_labels], 5)
+    agree = float((topk == topk_bsr).mean())
+    print(f"BSR serving: block density {bsr.density:.3f}, "
+          f"executes {bsr_ops.model_flops(bsr, 500) / bsr_ops.dense_flops(bsr, 500):.2f}x dense FLOPs, "
+          f"top-k agreement {agree:.4f}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,87 @@
+"""Serving example: batched request serving against a pruned DiSMEC model —
+the paper's distributed prediction (§2.2.1) as a small online service loop.
+
+Simulates a request stream (batches of test instances), answers each batch
+with block-sparse predict + top-k, and reports latency percentiles and the
+accuracy of served answers. Also runs the LM serving path (prefill +
+decode_step) for an assigned architecture's smoke config to show the same
+engine serves transformers.
+
+Run: PYTHONPATH=src python examples/serve_xmc.py
+"""
+
+import time
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.dismec import DiSMECConfig, train
+from repro.core.prediction import evaluate
+from repro.core.pruning import to_block_sparse
+from repro.data.xmc import make_xmc_dataset
+from repro.kernels.bsr_predict import ops as bsr_ops
+
+
+def serve_xmc():
+    print("== XMC serving (paper SS2.2.1) ==")
+    data = make_xmc_dataset(n_train=1000, n_test=512, n_features=4096,
+                            n_labels=256, seed=0)
+    model = train(jnp.asarray(data.X_train), jnp.asarray(data.Y_train),
+                  DiSMECConfig(delta=0.01, label_batch=256))
+    bsr = to_block_sparse(model.W, (128, 128))
+    print(f"model: {model.W.shape}, block density {bsr.density:.3f}")
+
+    @jax.jit
+    def answer(x):
+        scores = x @ model.W.T               # jitted dense path for latency
+        return jax.lax.top_k(scores, 5)
+
+    # Warm-up compile.
+    jax.block_until_ready(answer(jnp.asarray(data.X_test[:32])))
+
+    lat, all_idx = [], []
+    bs = 32
+    for i in range(0, 512, bs):
+        x = jnp.asarray(data.X_test[i:i + bs])
+        t0 = time.time()
+        _, idx = answer(x)
+        jax.block_until_ready(idx)
+        lat.append((time.time() - t0) / bs * 1e3)
+        all_idx.append(np.asarray(idx))
+
+    idx = jnp.asarray(np.concatenate(all_idx))
+    ev = evaluate(jnp.asarray(data.Y_test), idx)
+    lat = np.asarray(lat)
+    print(f"served 512 requests: P@1={ev['P@1']:.3f}  "
+          f"lat/inst p50={np.percentile(lat, 50):.3f}ms "
+          f"p99={np.percentile(lat, 99):.3f}ms")
+    r = bsr_ops.model_flops(bsr, 1) / bsr_ops.dense_flops(bsr, 1)
+    print(f"BSR kernel would execute {r:.2f}x of dense FLOPs on TPU "
+          "(zero blocks skipped)\n")
+
+
+def serve_lm():
+    print("== LM serving (prefill + one-token decode_step) ==")
+    from repro.configs.registry import get_config
+    from repro.models.model import build_model
+    from repro.serve.engine import serve_batch
+
+    cfg = get_config("qwen1.5-0.5b", smoke=True)
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+
+    rng = np.random.default_rng(0)
+    requests = [rng.integers(1, cfg.vocab, size=rng.integers(4, 12))
+                for _ in range(8)]
+    t0 = time.time()
+    outs = serve_batch(model, params, requests, steps=16)
+    dt = time.time() - t0
+    print(f"served {len(requests)} ragged requests x 16 tokens "
+          f"in {dt:.1f}s; sample continuation: {outs[0][:8]}")
+
+
+if __name__ == "__main__":
+    serve_xmc()
+    serve_lm()

@@ -1,0 +1,70 @@
+"""End-to-end driver (deliverable b): train a ~100M-parameter LM whose
+output layer is the paper's technique — a DiSMEC one-vs-rest extreme
+classification head — for a few hundred steps.
+
+The arch is the assigned qwen1.5-0.5b family reduced to ~100M params
+(the full config is exercised by the multi-pod dry-run; this driver proves
+the training loop converges on real hardware — here, CPU).
+
+Run: PYTHONPATH=src python examples/train_lm_dismec_head.py \
+        [--steps 300] [--head dismec|softmax]
+"""
+
+import argparse
+import dataclasses
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.data.lm import make_lm_batch_iterator
+from repro.models.model import build_model
+from repro.train.trainer import train_loop
+
+
+def make_100m_config(head_type: str) -> ArchConfig:
+    """~100M params: 6L x d512 x ffn 2048, 32k vocab (qwen-style GQA)."""
+    return ArchConfig(
+        name="qwen-100m", family="dense", n_layers=6, d_model=512,
+        n_heads=8, n_kv_heads=8, d_ff=2048, vocab=32768, qkv_bias=True,
+        head_type=head_type, dtype="float32",
+        source="reduced qwen1.5 family [hf:Qwen/Qwen1.5-0.5B]",
+    )
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=300)
+    ap.add_argument("--head", choices=["dismec", "softmax"],
+                    default="dismec")
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=128)
+    args = ap.parse_args()
+
+    cfg = make_100m_config(args.head)
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    n_params = sum(p.size for p in jax.tree.leaves(params))
+    print(f"arch {cfg.name}: {n_params / 1e6:.1f}M params, "
+          f"head={cfg.head_type} over vocab {cfg.padded_vocab()}")
+
+    batches = make_lm_batch_iterator(cfg.vocab, args.seq, args.batch, seed=0)
+    t0 = time.time()
+    params, hist = train_loop(model, params, batches, steps=args.steps,
+                              lr=3e-4, warmup=20, log_every=20)
+    dt = time.time() - t0
+    for h in hist:
+        print(f"  step {h['step']:4d}  loss {h['loss']:10.4f}  "
+              f"lr {h['lr']:.2e}")
+    toks = args.steps * args.batch * args.seq
+    print(f"\ntrained {args.steps} steps ({toks} tokens) in {dt:.1f}s "
+          f"({toks / dt:.0f} tok/s on CPU)")
+    first = hist[0]["loss"]
+    last = hist[-1]["loss"]
+    print(f"loss {first:.2f} -> {last:.2f} "
+          f"({'DECREASED OK' if last < first else 'NOT DECREASED'})")
+
+
+if __name__ == "__main__":
+    main()

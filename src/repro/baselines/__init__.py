@@ -1,0 +1,21 @@
+"""The paper's comparison methods (Table 2), reimplemented in JAX.
+
+Scaled to the synthetic reproduction datasets; each returns a model object
+with .predict_topk(X, k) so benchmarks/table2_accuracy.py can score all
+methods identically.
+
+  l1_svm     l1-regularized OvR squared hinge (FISTA) — paper's L1-SVM column
+  leml       global low-rank embedding via alternating ridge — LEML
+  sleec      cluster -> local SVD embedding -> kNN decode — SLEEC-lite
+  fastxml    ensemble of balanced random feature-space trees — FastXML-lite
+  pd_sparse  multiclass hinge with l1 prox — PD-Sparse-lite
+"""
+
+from repro.baselines.l1_svm import train_l1_svm
+from repro.baselines.leml import train_leml
+from repro.baselines.sleec import train_sleec
+from repro.baselines.fastxml import train_fastxml
+from repro.baselines.pd_sparse import train_pd_sparse
+
+__all__ = ["train_l1_svm", "train_leml", "train_sleec", "train_fastxml",
+           "train_pd_sparse"]

@@ -1,0 +1,84 @@
+"""FastXML-lite: ensemble of random feature-space partition trees
+(paper §3.3, [21]).
+
+Miniature of FastXML: each tree recursively splits the feature space with a
+random-then-refined linear separator; leaves store the label distribution of
+their training points ranked by frequency (the nDCG-optimal leaf ranking for
+uniform relevance). Prediction averages leaf distributions over the ensemble.
+Exhibits the paper's critique: cascaded hard partitions lose tail labels.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+Array = jax.Array
+
+
+@dataclasses.dataclass
+class _Node:
+    w: np.ndarray | None = None
+    left: "._Node" = None
+    right: "._Node" = None
+    leaf_scores: np.ndarray | None = None
+
+
+@dataclasses.dataclass
+class FastXMLModel:
+    trees: list
+    n_labels: int
+
+    def predict_topk(self, X, k: int = 5):
+        Xn = np.asarray(X)
+        scores = np.zeros((len(Xn), self.n_labels), np.float32)
+        for tree in self.trees:
+            for i, x in enumerate(Xn):
+                node = tree
+                while node.leaf_scores is None:
+                    node = node.left if x @ node.w <= 0 else node.right
+                scores[i] += node.leaf_scores
+        return jax.lax.top_k(jnp.asarray(scores / len(self.trees)), k)
+
+
+def _build(X, Y, rng, depth, max_depth, min_leaf):
+    node = _Node()
+    if depth >= max_depth or len(X) <= min_leaf or Y.sum() == 0:
+        freq = Y.sum(0).astype(np.float32)
+        node.leaf_scores = freq / max(freq.max(), 1.0)
+        return node
+    # Random hyperplane, refined by 3 sign-LDA-ish iterations: move the
+    # plane toward balancing while separating label distributions.
+    w = rng.standard_normal(X.shape[1]).astype(np.float32)
+    for _ in range(3):
+        side = X @ w > 0
+        if side.all() or (~side).all():
+            break
+        mu1 = X[side].mean(0)
+        mu0 = X[~side].mean(0)
+        w = (mu1 - mu0).astype(np.float32)
+    side = X @ w > 0
+    if side.all() or (~side).all():          # unsplittable: make a leaf
+        freq = Y.sum(0).astype(np.float32)
+        node.leaf_scores = freq / max(freq.max(), 1.0)
+        return node
+    node.w = w
+    node.left = _build(X[~side], Y[~side], rng, depth + 1, max_depth,
+                       min_leaf)
+    node.right = _build(X[side], Y[side], rng, depth + 1, max_depth,
+                        min_leaf)
+    return node
+
+
+def train_fastxml(X, Y, *, n_trees: int = 5, max_depth: int = 8,
+                  min_leaf: int = 16, seed: int = 0) -> FastXMLModel:
+    Xn = np.asarray(X, np.float32)
+    Yn = np.asarray(Y, np.float32)
+    trees = []
+    for t in range(n_trees):
+        rng = np.random.default_rng(seed + t)
+        trees.append(_build(Xn, Yn, rng, 0, max_depth, min_leaf))
+    return FastXMLModel(trees=trees, n_labels=Yn.shape[1])

@@ -1,0 +1,66 @@
+"""L1-SVM baseline (paper §3.3): l1-regularized OvR squared hinge via FISTA.
+
+The paper's point (Fig. 4, §4.1): l1 gives sparser models but UNDERFITS
+versus l2 + Delta-pruning. benchmarks/fig4_l1_vs_l2.py measures exactly that.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.losses import (l1_grad_smooth_part, l1_objective_smooth_part,
+                               soft_threshold)
+
+Array = jax.Array
+
+
+@dataclasses.dataclass
+class LinearModel:
+    W: Array
+
+    def predict_topk(self, X: Array, k: int = 5):
+        return jax.lax.top_k(X @ self.W.T, k)
+
+    @property
+    def nnz(self) -> int:
+        return int(jnp.sum(self.W != 0.0))
+
+
+@partial(jax.jit, static_argnames=("n_steps",))
+def _fista(X, S, C, lam, step, n_steps: int):
+    L, N = S.shape
+    D = X.shape[1]
+    W = jnp.zeros((L, D), jnp.float32)
+    Z = W
+    t = jnp.float32(1.0)
+
+    def body(carry, _):
+        W, Z, t = carry
+        g = l1_grad_smooth_part(Z, X, S, C)
+        W_new = soft_threshold(Z - step * g, step * lam)
+        t_new = 0.5 * (1.0 + jnp.sqrt(1.0 + 4.0 * t * t))
+        Z_new = W_new + ((t - 1.0) / t_new) * (W_new - W)
+        return (W_new, Z_new, t_new), None
+
+    (W, _, _), _ = jax.lax.scan(body, (W, Z, t), None, length=n_steps)
+    return W
+
+
+def train_l1_svm(X: Array, Y: Array, *, C: float = 1.0, lam: float = 0.05,
+                 n_steps: int = 300) -> LinearModel:
+    S = (2.0 * Y.T - 1.0).astype(jnp.float32)
+    X = jnp.asarray(X, jnp.float32)
+    # Lipschitz estimate for the smooth part: 2C * sigma_max(X)^2 via a few
+    # power iterations.
+    v = jnp.ones((X.shape[1],)) / jnp.sqrt(X.shape[1])
+    for _ in range(8):
+        v = X.T @ (X @ v)
+        v = v / (jnp.linalg.norm(v) + 1e-12)
+    sigma2 = jnp.linalg.norm(X @ v) ** 2
+    step = 1.0 / (2.0 * C * sigma2 + 1e-6)
+    W = _fista(X, S, C, lam, step, n_steps)
+    return LinearModel(W=W)

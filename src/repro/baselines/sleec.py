@@ -1,0 +1,91 @@
+"""SLEEC-lite: sparse local embeddings (paper §3.3, [6]).
+
+Miniature of SLEEC's pipeline: (1) k-means cluster the training points,
+(2) per cluster, learn a local low-rank label embedding (SVD of the cluster
+label submatrix) and a linear regressor into the embedding space,
+(3) predict by routing a test point to its nearest cluster centroid and
+kNN-decoding label vectors of the cluster's training points in embedding
+space. Captures the locally-low-rank assumption the paper critiques.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+Array = jax.Array
+
+
+@dataclasses.dataclass
+class SLEECModel:
+    centroids: np.ndarray          # (n_clusters, D)
+    regressors: list               # per cluster: (D, r)
+    embeddings: list               # per cluster: (n_c, r) training embeddings
+    labels: list                   # per cluster: (n_c, L) label rows
+    knn: int
+
+    def predict_topk(self, X, k: int = 5):
+        Xn = np.asarray(X)
+        n = len(Xn)
+        L = self.labels[0].shape[1]
+        scores = np.zeros((n, L), np.float32)
+        cid = np.argmax(Xn @ self.centroids.T, axis=1)
+        for c in range(len(self.centroids)):
+            idx = np.nonzero(cid == c)[0]
+            if len(idx) == 0:
+                continue
+            Z = Xn[idx] @ self.regressors[c]                 # (m, r)
+            sim = Z @ self.embeddings[c].T                   # (m, n_c)
+            kk = min(self.knn, sim.shape[1])
+            nbr = np.argpartition(-sim, kk - 1, axis=1)[:, :kk]
+            for j, row in enumerate(idx):
+                w = sim[j, nbr[j]]
+                w = np.maximum(w, 0) + 1e-6
+                scores[row] = (w[:, None] * self.labels[c][nbr[j]]).sum(0)
+        s = jnp.asarray(scores)
+        return jax.lax.top_k(s, k)
+
+
+def _kmeans(X: np.ndarray, k: int, iters: int = 15, seed: int = 0):
+    rng = np.random.default_rng(seed)
+    C = X[rng.choice(len(X), size=k, replace=False)].copy()
+    for _ in range(iters):
+        a = np.argmax(X @ C.T, axis=1)      # cosine-ish (rows normalized)
+        for c in range(k):
+            pts = X[a == c]
+            if len(pts):
+                C[c] = pts.mean(0)
+                nc = np.linalg.norm(C[c])
+                if nc > 0:
+                    C[c] /= nc
+    return C, a
+
+
+def train_sleec(X, Y, *, n_clusters: int = 4, rank: int = 32, knn: int = 15,
+                ridge: float = 0.1, seed: int = 0) -> SLEECModel:
+    Xn = np.asarray(X, np.float32)
+    Yn = np.asarray(Y, np.float32)
+    D = Xn.shape[1]
+    C, assign = _kmeans(Xn, n_clusters, seed=seed)
+    regs, embs, labs = [], [], []
+    for c in range(n_clusters):
+        idx = np.nonzero(assign == c)[0]
+        if len(idx) < 2:
+            idx = np.arange(len(Xn))        # degenerate cluster: global
+        Yc = Yn[idx]
+        Xc = Xn[idx]
+        r = min(rank, *Yc.shape)
+        # Local label embedding: top-r right factors of the label submatrix.
+        U, s, Vt = np.linalg.svd(Yc, full_matrices=False)
+        Z = U[:, :r] * s[:r]                # (n_c, r) label embeddings
+        # Linear regressor X -> Z (ridge).
+        G = Xc.T @ Xc + ridge * np.eye(D, dtype=np.float32)
+        Wr = np.linalg.solve(G, Xc.T @ Z)   # (D, r)
+        regs.append(Wr.astype(np.float32))
+        embs.append(Z.astype(np.float32))
+        labs.append(Yc)
+    return SLEECModel(centroids=C, regressors=regs, embeddings=embs,
+                      labels=labs, knn=knn)

@@ -1,0 +1,107 @@
+"""DiSMECHead — the paper's technique as a first-class extreme output layer.
+
+Assigned architectures have vocabularies of 32k-256k: exactly XMC scale.
+This module makes the LM output layer a DiSMEC one-vs-rest machine:
+
+  * the (V, d) head weight is sharded over the mesh `model` axis — the
+    paper's layer-1 label batching, as sharding;
+  * training minimizes the per-label l2-regularized squared-hinge objective
+    (Eq. 2.2) summed over the vocabulary. Because every label's loss touches
+    only *its* weight row, a label-sharded device computes its shard's loss
+    against (replicated-activation) features with NO logits collective —
+    only a scalar psum. A softmax-CE head (the usual LM loss) needs a
+    max+sum all-reduce over the vocab axis; the contrast is measured in
+    EXPERIMENTS.md §Roofline;
+  * at serving time the head is Delta-pruned (pruning.py) and evaluated with
+    the block-sparse predict kernel + distributed top-k (prediction.py) —
+    paper §2.2.1 as a serving feature.
+
+Functions are pure (weights passed explicitly) so they drop into any backbone
+in models/. One-positive-per-token LM targets are a special case of the
+multi-hot XMC objective and are computed without materializing the (T, V)
+sign matrix.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+Array = jax.Array
+
+# Head weight partition spec: labels (vocab) over `model`, features replicated.
+HEAD_PSPEC = P("model", None)
+
+
+def init_head(rng: Array, vocab: int, d_model: int,
+              dtype=jnp.float32) -> Array:
+    scale = d_model ** -0.5
+    return (jax.random.normal(rng, (vocab, d_model)) * scale).astype(dtype)
+
+
+def ovr_squared_hinge_loss(W: Array, feats: Array, targets: Array,
+                           *, C: float = 1.0, reg: float = 1e-6,
+                           valid: Array | None = None) -> Array:
+    """DiSMEC OvR loss for one-positive-per-token targets.
+
+    W       : (V, d) head weights (label-sharded under pjit)
+    feats   : (..., d) features from the backbone
+    targets : (...,) int target ids
+    valid   : optional (...,) 0/1 mask of real (non-pad) tokens
+
+    For token t with target y: s_l = +1 iff l == y else -1, so
+
+      loss_t = max(0, 1 - z_y)^2 + sum_{l != y} max(0, 1 + z_l)^2
+
+    computed as sum_l max(0,1+z_l)^2 - max(0,1+z_y)^2 + max(0,1-z_y)^2,
+    i.e. without building the (T, V) sign matrix. The l2 term ||W||^2 is the
+    per-label regularizer of Eq. 2.2 (scaled by `reg` per token count).
+    """
+    f2 = feats.reshape(-1, feats.shape[-1]).astype(jnp.float32)
+    t2 = targets.reshape(-1)
+    z = f2 @ W.T.astype(jnp.float32)                       # (T, V) logits
+    neg = jnp.maximum(1.0 + z, 0.0)
+    neg_sum = jnp.sum(neg * neg, axis=-1)                  # all labels as negatives
+    z_y = jnp.take_along_axis(z, t2[:, None], axis=1)[:, 0]
+    neg_y = jnp.maximum(1.0 + z_y, 0.0)
+    pos_y = jnp.maximum(1.0 - z_y, 0.0)
+    per_tok = neg_sum - neg_y * neg_y + pos_y * pos_y
+    if valid is not None:
+        v = valid.reshape(-1).astype(jnp.float32)
+        per_tok = per_tok * v
+        denom = jnp.maximum(jnp.sum(v), 1.0)
+    else:
+        denom = per_tok.shape[0]
+    l2 = reg * jnp.sum(W.astype(jnp.float32) ** 2)
+    return C * jnp.sum(per_tok) / denom + l2
+
+
+def ovr_multihot_loss(W: Array, feats: Array, Y: Array,
+                      *, C: float = 1.0, reg: float = 1e-6) -> Array:
+    """Full multi-hot XMC objective (Eq. 2.2 summed over labels).
+
+    feats : (N, d), Y : (N, V) multi-hot. Used by the linear-XMC repro path
+    (backbone = identity) and multi-label fine-tuning.
+    """
+    S = 2.0 * Y.astype(jnp.float32) - 1.0                  # (N, V)
+    z = feats.astype(jnp.float32) @ W.T.astype(jnp.float32)
+    h = jnp.maximum(1.0 - S * z, 0.0)
+    l2 = reg * jnp.sum(W.astype(jnp.float32) ** 2)
+    return C * jnp.mean(jnp.sum(h * h, axis=-1)) + l2
+
+
+def softmax_xent_loss(W: Array, feats: Array, targets: Array,
+                      valid: Array | None = None) -> Array:
+    """Baseline head: standard softmax cross-entropy (needs vocab collectives
+    when label-sharded — the contrast DiSMEC removes)."""
+    f2 = feats.reshape(-1, feats.shape[-1]).astype(jnp.float32)
+    t2 = targets.reshape(-1)
+    z = f2 @ W.T.astype(jnp.float32)
+    logz = jax.nn.logsumexp(z, axis=-1)
+    z_y = jnp.take_along_axis(z, t2[:, None], axis=1)[:, 0]
+    nll = logz - z_y
+    if valid is not None:
+        v = valid.reshape(-1).astype(jnp.float32)
+        return jnp.sum(nll * v) / jnp.maximum(jnp.sum(v), 1.0)
+    return jnp.mean(nll)

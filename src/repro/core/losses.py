@@ -1,0 +1,95 @@
+"""Objective/gradient/Hessian-vector products for DiSMEC's per-label solves.
+
+The paper (Eq. 2.2) trains, for every label l, an l2-regularized
+squared-hinge binary SVM over the shared design matrix X:
+
+    f(w) = ||w||^2 + C * sum_i max(0, 1 - s_i w^T x_i)^2
+
+All quantities here are *batched over labels*: weights have shape (L, D) and
+sign matrices (L, N) (or (N, L) transposed views), so a whole label shard is
+driven through the MXU at once — this is the paper's "one label per core"
+layer-2 parallelism recast as matmul batching (DESIGN.md §2).
+
+Conventions
+-----------
+X : (N, D) dense design matrix (replicated or data-sharded; see dismec.py)
+S : (L, N) sign matrix in {+1, -1}
+W : (L, D) weight matrix, one row per label
+All math is done in f32 accumulation regardless of input dtype.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+Array = jax.Array
+
+
+def margins(W: Array, X: Array, S: Array) -> Array:
+    """z_{l,i} = 1 - s_{l,i} * <w_l, x_i>   of shape (L, N)."""
+    scores = W @ X.T  # (L, N)
+    return 1.0 - S * scores
+
+
+def active_mask(W: Array, X: Array, S: Array) -> Array:
+    """Active set I_l = {i : z_{l,i} > 0} as a float mask, (L, N)."""
+    return (margins(W, X, S) > 0.0).astype(jnp.float32)
+
+
+def objective(W: Array, X: Array, S: Array, C: float) -> Array:
+    """f(w_l) per label, shape (L,)."""
+    z = margins(W, X, S)
+    hinge = jnp.maximum(z, 0.0)
+    return jnp.sum(W * W, axis=-1) + C * jnp.sum(hinge * hinge, axis=-1)
+
+
+def objective_and_grad(W: Array, X: Array, S: Array, C: float) -> tuple[Array, Array]:
+    """Returns (f, grad) with f:(L,), grad:(L, D).
+
+    grad f(w_l) = 2 w_l + 2C X_I^T (X_I w_l - s_I)
+                = 2 w_l - 2C sum_{i in I} s_i z_i x_i      [since s_i^2 = 1]
+    (the paper quotes the gradient of f/2; we optimize f itself — same argmin).
+    """
+    scores = W @ X.T                       # (L, N)
+    z = 1.0 - S * scores                   # margins
+    act = (z > 0.0).astype(scores.dtype)   # active mask
+    # residual r_{l,i} = act * (score - s) = -act * s * z  (since s^2=1)
+    r = act * (scores - S)                 # (L, N)
+    f = jnp.sum(W * W, axis=-1) + C * jnp.sum(act * z * z, axis=-1)
+    grad = 2.0 * W + 2.0 * C * (r @ X)     # (L, D)
+    return f, grad
+
+
+def hessian_vp(V: Array, X: Array, act: Array, C: float) -> Array:
+    """Generalized-Hessian vector product, batched over labels.
+
+    H_l = 2 I + 2C X^T D_l X  with D_l = diag(active mask for label l);
+    Hv_l = 2 v_l + 2C X^T (act_l * (X v_l)).
+
+    V   : (L, D) directions
+    act : (L, N) active mask captured at the current Newton iterate
+    """
+    Xv = V @ X.T                # (L, N)
+    return 2.0 * V + 2.0 * C * ((act * Xv) @ X)
+
+
+def l1_objective_smooth_part(W: Array, X: Array, S: Array, C: float) -> Array:
+    """Smooth part of the l1-SVM baseline objective: C * sum hinge^2 (no reg)."""
+    z = margins(W, X, S)
+    hinge = jnp.maximum(z, 0.0)
+    return C * jnp.sum(hinge * hinge, axis=-1)
+
+
+def l1_grad_smooth_part(W: Array, X: Array, S: Array, C: float) -> Array:
+    """Gradient of the smooth part for proximal-gradient l1-SVM."""
+    scores = W @ X.T
+    z = 1.0 - S * scores
+    act = (z > 0.0).astype(scores.dtype)
+    r = act * (scores - S)
+    return 2.0 * C * (r @ X)
+
+
+def soft_threshold(W: Array, tau: float) -> Array:
+    """Prox of tau*||.||_1 — used by the l1-SVM baseline."""
+    return jnp.sign(W) * jnp.maximum(jnp.abs(W) - tau, 0.0)

@@ -1,0 +1,174 @@
+"""Batched trust-region Newton (TRON) solver for DiSMEC's per-label problems.
+
+Liblinear solves each binary problem with TRON [Lin, Weng, Keerthi 2008]:
+an outer trust-region Newton loop whose steps are computed by Steihaug-Toint
+truncated conjugate gradient on the generalized Hessian. The paper trains one
+label per core; here an entire label shard is solved by ONE batched TRON loop
+— every per-label scalar of the classical algorithm (trust radius Delta_l,
+CG residuals, convergence flag) becomes a vector of length L, and converged
+labels turn into masked no-ops instead of exiting (DESIGN.md §2, "SIMT-style").
+
+This file is deliberately independent of how the data is laid out: callers
+pass `obj_grad_fn(W) -> (f, grad)` and `hvp_fn(V, act) -> H V` plus an
+`act_fn(W)` for the active mask, so dismec.py can inject replicated-X,
+data-sharded (psum) or Pallas-kernel implementations without touching the
+optimizer. All control flow is jax.lax so the whole solve jits/shards.
+"""
+
+from __future__ import annotations
+
+from functools import partial
+from typing import Callable, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+Array = jax.Array
+
+# Liblinear's trust-region constants.
+ETA0, ETA1, ETA2 = 1e-4, 0.25, 0.75
+SIGMA1, SIGMA2, SIGMA3 = 0.25, 0.5, 4.0
+
+
+class TronResult(NamedTuple):
+    W: Array            # (L, D) solution
+    f: Array            # (L,) final objective
+    gnorm: Array        # (L,) final gradient norm
+    n_newton: Array     # (L,) newton iterations used
+    n_cg: Array         # (L,) total CG iterations used
+    converged: Array    # (L,) bool
+
+
+def _boundary_tau(d: Array, p: Array, delta: Array) -> Array:
+    """Smallest tau >= 0 with ||d + tau p|| = delta, batched over labels.
+
+    Solves ||p||^2 tau^2 + 2<d,p> tau + ||d||^2 - delta^2 = 0 per label.
+    """
+    pp = jnp.sum(p * p, axis=-1)
+    dp = jnp.sum(d * p, axis=-1)
+    dd = jnp.sum(d * d, axis=-1)
+    rad = jnp.sqrt(jnp.maximum(dp * dp + pp * (delta * delta - dd), 0.0))
+    # Numerically stable positive root.
+    tau = jnp.where(dp >= 0.0,
+                    (delta * delta - dd) / (dp + rad + 1e-38),
+                    (rad - dp) / (pp + 1e-38))
+    return jnp.maximum(tau, 0.0)
+
+
+def _steihaug_cg(hvp: Callable[[Array], Array], g: Array, delta: Array,
+                 cg_tol: Array, max_cg: int, live: Array):
+    """Batched Steihaug-Toint CG: approximately solve H d = -g, ||d|| <= delta.
+
+    live : (L,) labels still being optimized; dead labels do no work (their
+           updates are masked to zero, the loop still runs lockstep).
+    Returns (d, iters_used_per_label).
+    """
+    L = g.shape[0]
+    d0 = jnp.zeros_like(g)
+    r0 = -g
+    p0 = r0
+    rtr0 = jnp.sum(r0 * r0, axis=-1)
+    done0 = ~live  # dead labels are born done
+    iters0 = jnp.zeros((L,), jnp.int32)
+
+    def cond(state):
+        _, _, _, _, done, _, k = state
+        return (k < max_cg) & (~jnp.all(done))
+
+    def body(state):
+        d, r, p, rtr, done, iters, k = state
+        Hp = hvp(p)                                  # (L, D) one batched matmul chain
+        pHp = jnp.sum(p * Hp, axis=-1)
+        alpha = rtr / jnp.where(pHp != 0.0, pHp, 1.0)
+        neg_curv = pHp <= 0.0
+
+        d_try = d + alpha[:, None] * p
+        over = jnp.sqrt(jnp.sum(d_try * d_try, axis=-1)) >= delta
+        hit_boundary = (neg_curv | over) & (~done)
+
+        tau = _boundary_tau(d, p, delta)
+        d_bound = d + tau[:, None] * p
+
+        d_new = jnp.where(done[:, None], d,
+                          jnp.where(hit_boundary[:, None], d_bound, d_try))
+        r_new = jnp.where((done | hit_boundary)[:, None], r, r - alpha[:, None] * Hp)
+        rtr_new = jnp.sum(r_new * r_new, axis=-1)
+        small = jnp.sqrt(rtr_new) <= cg_tol
+        done_new = done | hit_boundary | small
+
+        beta = rtr_new / jnp.where(rtr != 0.0, rtr, 1.0)
+        p_new = jnp.where(done_new[:, None], p, r_new + beta[:, None] * p)
+        iters_new = iters + (~done).astype(jnp.int32)
+        return d_new, r_new, p_new, rtr_new, done_new, iters_new, k + 1
+
+    d, _, _, _, _, iters, _ = jax.lax.while_loop(
+        cond, body, (d0, r0, p0, rtr0, done0, iters0, jnp.int32(0)))
+    return d, iters
+
+
+@partial(jax.jit, static_argnames=("obj_grad_fn", "hvp_fn", "act_fn",
+                                   "max_newton", "max_cg"))
+def tron_solve(obj_grad_fn: Callable[[Array], tuple[Array, Array]],
+               hvp_fn: Callable[[Array, Array], Array],
+               act_fn: Callable[[Array], Array],
+               W0: Array,
+               *,
+               eps: float = 0.01,
+               max_newton: int = 50,
+               max_cg: int = 40) -> TronResult:
+    """Solve min_w f_l(w_l) for all labels l at once.
+
+    eps: relative gradient-norm tolerance, ||g|| <= eps * ||g_0|| (liblinear).
+    """
+    L = W0.shape[0]
+    f0, g0 = obj_grad_fn(W0)
+    gnorm0 = jnp.linalg.norm(g0, axis=-1)
+    delta0 = gnorm0                           # liblinear: Delta_0 = ||g_0||
+    tol = eps * gnorm0
+
+    def cond(state):
+        _, _, _, gnorm, _, live, _, k = state
+        del gnorm
+        return (k < max_newton) & jnp.any(live)
+
+    def body(state):
+        W, f, g, gnorm, delta, live, n_cg, k = state
+        cg_tol = jnp.minimum(0.1, jnp.sqrt(gnorm / (gnorm0 + 1e-38))) * gnorm
+        d, cg_iters = _steihaug_cg(lambda V: hvp_fn(V, act_fn(W)),
+                                   g, delta, cg_tol, max_cg, live)
+
+        W_try = W + d
+        f_try, g_try = obj_grad_fn(W_try)
+
+        # Quadratic-model decrease: -(<g,d> + 0.5 <d, H d>).
+        Hd = hvp_fn(d, act_fn(W))
+        pred = -(jnp.sum(g * d, axis=-1) + 0.5 * jnp.sum(d * Hd, axis=-1))
+        actual = f - f_try
+        rho = actual / jnp.where(pred != 0.0, pred, 1.0)
+
+        accept = (rho > ETA0) & live
+        dnorm = jnp.linalg.norm(d, axis=-1)
+
+        # Trust-radius update (liblinear schedule).
+        delta_new = jnp.where(rho < ETA0, SIGMA1 * jnp.minimum(dnorm, delta),
+                     jnp.where(rho < ETA1, jnp.maximum(SIGMA1 * delta,
+                                                       SIGMA2 * dnorm),
+                      jnp.where(rho < ETA2, delta,
+                                jnp.maximum(delta, SIGMA3 * dnorm))))
+        delta_new = jnp.where(live, delta_new, delta)
+
+        W_new = jnp.where(accept[:, None], W_try, W)
+        f_new = jnp.where(accept, f_try, f)
+        g_new = jnp.where(accept[:, None], g_try, g)
+        gnorm_new = jnp.linalg.norm(g_new, axis=-1)
+        live_new = live & (gnorm_new > tol)
+        return (W_new, f_new, g_new, gnorm_new, delta_new, live_new,
+                n_cg + cg_iters, k + 1)
+
+    live0 = gnorm0 > tol
+    init = (W0, f0, g0, gnorm0, delta0, live0, jnp.zeros((L,), jnp.int32),
+            jnp.int32(0))
+    W, f, g, gnorm, _, live, n_cg, k = jax.lax.while_loop(cond, body, init)
+    return TronResult(W=W, f=f, gnorm=gnorm,
+                      n_newton=jnp.full((L,), k, jnp.int32),
+                      n_cg=n_cg, converged=~live)

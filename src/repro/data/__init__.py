@@ -1,0 +1,7 @@
+"""Data substrate: synthetic power-law XMC generator + LM token pipeline."""
+
+from repro.data.xmc import XMCDataset, make_xmc_dataset, power_law_sizes
+from repro.data.lm import TokenPipeline, make_lm_batch_iterator
+
+__all__ = ["XMCDataset", "make_xmc_dataset", "power_law_sizes",
+           "TokenPipeline", "make_lm_batch_iterator"]

@@ -1,0 +1,16 @@
+"""Pallas TPU kernels for DiSMEC's compute hot-spots.
+
+Each kernel directory contains:
+  kernel.py — pl.pallas_call body + BlockSpec tiling (TPU target)
+  ops.py    — jit'd public wrapper with shape checks / fallbacks
+  ref.py    — pure-jnp oracle the tests assert against
+
+Kernels (DESIGN.md §3):
+  hinge       fused squared-hinge objective + gradient (TRON outer loop)
+  hvp         fused generalized-Hessian vector product (CG inner loop)
+  bsr_predict block-sparse W x predict — skips Delta-pruned zero blocks
+  topk        blocked two-stage top-k for distributed prediction
+
+All kernels are validated on CPU with interpret=True; on TPU the same
+pallas_call lowers to Mosaic. VMEM budgets are documented per kernel.
+"""

@@ -1,0 +1,1 @@
+from repro.kernels.banded_attn.ops import banded_attention  # noqa: F401

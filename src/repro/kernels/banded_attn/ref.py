@@ -1,0 +1,28 @@
+"""Pure-jnp oracle for the banded attention kernel: dense scores + mask."""
+
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+
+def banded_attention(q: jax.Array, k: jax.Array, v: jax.Array,
+                     *, window: int) -> jax.Array:
+    """q (BKV, G, Tq, hd), k/v (BKV, Tk, hd) -> (BKV, G, Tq, hd).
+
+    Dense causal sliding-window attention (materializes (Tq, Tk) scores —
+    oracle only)."""
+    BKV, G, Tq, hd = q.shape
+    Tk = k.shape[1]
+    scale = 1.0 / math.sqrt(hd)
+    s = jnp.einsum("bgqh,bkh->bgqk", q.astype(jnp.float32),
+                   k.astype(jnp.float32)) * scale
+    qi = jnp.arange(Tq)[:, None]
+    ki = jnp.arange(Tk)[None, :]
+    mask = (ki <= qi) & (ki > qi - window)
+    s = jnp.where(mask[None, None], s, -3.0e38)
+    p = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bgqk,bkh->bgqh", p, v.astype(jnp.float32))
+    return out.astype(q.dtype)

@@ -1,0 +1,43 @@
+"""Public wrapper: BSR prediction over a pruned DiSMEC model."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.pruning import BlockSparseModel
+from repro.kernels.bsr_predict.kernel import bsr_predict_pallas
+
+
+def bsr_predict(x: jax.Array, model: BlockSparseModel,
+                *, interpret: bool = True) -> jax.Array:
+    """Scores (n, L) for a batch against a block-sparse model.
+
+    Pads x's feature dim to the padded model shape and zeroes out label
+    row-blocks that have no surviving blocks (never visited by the kernel).
+    """
+    Lp, Dp = model.shape
+    bl, bd = model.block_shape
+    n, D = x.shape
+    if D < Dp:
+        x = jnp.pad(x, ((0, 0), (0, Dp - D)))
+    out = bsr_predict_pallas(x, model.blocks, model.block_rows,
+                             model.block_cols, Lp // bl, interpret=interpret)
+    # Mask empty row-blocks (undefined memory in the kernel output -- may be
+    # NaN in interpret mode, so select rather than multiply).
+    counts = model.row_ptr[1:] - model.row_ptr[:-1]          # (Lp/bl,)
+    row_mask = jnp.repeat(counts > 0, bl)
+    return jnp.where(row_mask[None, :], out, 0.0)
+
+
+def model_flops(model: BlockSparseModel, n: int) -> int:
+    """FLOPs actually executed: 2 * n * bl * bd per surviving block —
+    the block-density speedup the kernel realizes over dense predict."""
+    bl, bd = model.block_shape
+    return 2 * n * bl * bd * model.n_blocks
+
+
+def dense_flops(model: BlockSparseModel, n: int) -> int:
+    Lp, Dp = model.shape
+    return 2 * n * Lp * Dp

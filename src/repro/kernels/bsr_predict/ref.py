@@ -1,0 +1,14 @@
+"""Pure-jnp oracle for BSR prediction: dense matmul against the
+densified block-sparse matrix."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.pruning import BlockSparseModel
+
+
+def bsr_predict(x: jax.Array, model: BlockSparseModel) -> jax.Array:
+    W = model.to_dense()
+    return x.astype(jnp.float32) @ W.T.astype(jnp.float32)

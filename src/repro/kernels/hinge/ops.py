@@ -1,0 +1,52 @@
+"""Public wrapper for the fused hinge kernel: padding, bounds, fallback."""
+
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.hinge import ref
+from repro.kernels.hinge.kernel import (MAX_FUSED_D, hinge_obj_grad_pallas)
+
+
+def _pad_to(x: jax.Array, axis: int, mult: int, value: float = 0.0):
+    n = x.shape[axis]
+    p = (-n) % mult
+    if p == 0:
+        return x
+    pad = [(0, 0)] * x.ndim
+    pad[axis] = (0, p)
+    return jnp.pad(x, pad, constant_values=value)
+
+
+@partial(jax.jit, static_argnames=("C", "bl", "bn", "interpret"))
+def objective_and_grad(W: jax.Array, X: jax.Array, S: jax.Array, C: float,
+                       *, bl: int = 128, bn: int = 128,
+                       interpret: bool = True) -> tuple[jax.Array, jax.Array]:
+    """Fused (objective, gradient) for all labels; pads L and N to tile
+    multiples. Padded instances get sign -1 and x = 0 => margin = 1 - 0 > 0
+    is ACTIVE but contributes z=1, f += C per pad row — so we pad S with a
+    sign of -1 *and* scores 0 give z = 1: wrong. Instead pad S with +1 and
+    x = 0: z = 1 - 0 = 1 active again. Zero-rows always contribute C to f
+    regardless of sign, so we subtract the analytic pad contribution, and
+    their gradient contribution is exactly 0 (r x = 0). Padded labels (rows
+    of W = 0, S = -1) are sliced away.
+    """
+    L, D = W.shape
+    N = X.shape[0]
+    if D > MAX_FUSED_D:
+        return ref.objective_and_grad(W, X, S, C)
+
+    Wp = _pad_to(W, 0, bl)
+    Xp = _pad_to(X, 0, bn)
+    Sp = _pad_to(_pad_to(S, 0, bl, -1.0), 1, bn, -1.0)
+    n_pad_inst = Xp.shape[0] - N
+
+    f, g = hinge_obj_grad_pallas(Wp, Xp, Sp, C, bl=bl, bn=bn,
+                                 interpret=interpret)
+    # Each padded instance (x = 0, s = -1) is active with z = 1 for every
+    # label: remove its constant C contribution from the objective.
+    f = f[:L] - C * n_pad_inst
+    return f, g[:L]

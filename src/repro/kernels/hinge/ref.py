@@ -1,0 +1,20 @@
+"""Pure-jnp oracle for the fused squared-hinge objective+gradient kernel."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def objective_and_grad(W: jax.Array, X: jax.Array, S: jax.Array,
+                       C: float) -> tuple[jax.Array, jax.Array]:
+    W = W.astype(jnp.float32)
+    X = X.astype(jnp.float32)
+    S = S.astype(jnp.float32)
+    scores = W @ X.T
+    z = 1.0 - S * scores
+    act = (z > 0.0).astype(jnp.float32)
+    r = act * (scores - S)
+    f = jnp.sum(W * W, axis=-1) + C * jnp.sum(act * z * z, axis=-1)
+    grad = 2.0 * W + 2.0 * C * (r @ X)
+    return f, grad

@@ -1,0 +1,59 @@
+"""Fused generalized-Hessian vector product kernel (CG inner-loop hot spot).
+
+    Hv_l = 2 v_l + 2C X^T (act_l * (X v_l))
+
+This runs once per CG iteration per Newton step — by far the most-executed
+compute in DiSMEC training. Same (L/bl, N/bn) accumulation tiling as the
+hinge kernel (see kernels/hinge/kernel.py for the VMEM budget): the (bl, bn)
+masked intermediate act * (X v) lives only in VMEM.
+"""
+
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+DEFAULT_BL = 128
+DEFAULT_BN = 128
+MAX_FUSED_D = 8192
+
+
+def _hvp_kernel(v_ref, x_ref, a_ref, o_ref, *, C: float):
+    j = pl.program_id(1)
+    V = v_ref[...].astype(jnp.float32)       # (bl, D)
+    X = x_ref[...].astype(jnp.float32)       # (bn, D)
+    A = a_ref[...].astype(jnp.float32)       # (bl, bn) active mask
+
+    Xv = jax.lax.dot_general(V, X, (((1,), (1,)), ((), ())),
+                             preferred_element_type=jnp.float32)  # (bl, bn)
+    part = 2.0 * C * jax.lax.dot_general(A * Xv, X, (((1,), (0,)), ((), ())),
+                                         preferred_element_type=jnp.float32)
+
+    @pl.when(j == 0)
+    def _init():
+        o_ref[...] = 2.0 * V
+
+    o_ref[...] += part
+
+
+def hvp_pallas(V: jax.Array, X: jax.Array, act: jax.Array, C: float,
+               *, bl: int = DEFAULT_BL, bn: int = DEFAULT_BN,
+               interpret: bool = True) -> jax.Array:
+    L, D = V.shape
+    N = X.shape[0]
+    assert act.shape == (L, N)
+    assert L % bl == 0 and N % bn == 0
+    grid = (L // bl, N // bn)
+    return pl.pallas_call(
+        partial(_hvp_kernel, C=C),
+        grid=grid,
+        in_specs=[pl.BlockSpec((bl, D), lambda i, j: (i, 0)),
+                  pl.BlockSpec((bn, D), lambda i, j: (j, 0)),
+                  pl.BlockSpec((bl, bn), lambda i, j: (i, j))],
+        out_specs=pl.BlockSpec((bl, D), lambda i, j: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((L, D), jnp.float32),
+        interpret=interpret,
+    )(V, X, act)

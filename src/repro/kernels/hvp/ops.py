@@ -1,0 +1,37 @@
+"""Public wrapper for the Hessian-vector-product kernel."""
+
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.hvp import ref
+from repro.kernels.hvp.kernel import MAX_FUSED_D, hvp_pallas
+
+
+def _pad_to(x: jax.Array, axis: int, mult: int, value: float = 0.0):
+    n = x.shape[axis]
+    p = (-n) % mult
+    if p == 0:
+        return x
+    pad = [(0, 0)] * x.ndim
+    pad[axis] = (0, p)
+    return jnp.pad(x, pad, constant_values=value)
+
+
+@partial(jax.jit, static_argnames=("C", "bl", "bn", "interpret"))
+def hessian_vp(V: jax.Array, X: jax.Array, act: jax.Array, C: float,
+               *, bl: int = 128, bn: int = 128,
+               interpret: bool = True) -> jax.Array:
+    """Hv for all labels. Padded instances have x = 0 and act = 0, so their
+    contribution is exactly zero; padded label rows are sliced away."""
+    L, D = V.shape
+    if D > MAX_FUSED_D:
+        return ref.hessian_vp(V, X, act, C)
+    Vp = _pad_to(V, 0, bl)
+    Xp = _pad_to(X, 0, bn)
+    Ap = _pad_to(_pad_to(act, 0, bl), 1, bn)
+    out = hvp_pallas(Vp, Xp, Ap, C, bl=bl, bn=bn, interpret=interpret)
+    return out[:L]

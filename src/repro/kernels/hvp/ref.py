@@ -1,0 +1,15 @@
+"""Pure-jnp oracle for the Hessian-vector-product kernel."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def hessian_vp(V: jax.Array, X: jax.Array, act: jax.Array,
+               C: float) -> jax.Array:
+    V = V.astype(jnp.float32)
+    X = X.astype(jnp.float32)
+    act = act.astype(jnp.float32)
+    Xv = V @ X.T
+    return 2.0 * V + 2.0 * C * ((act * Xv) @ X)

@@ -1,0 +1,29 @@
+"""Public wrapper: two-stage top-k (Pallas block reduce + small merge)."""
+
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.topk.kernel import NEG_INF, blocked_topk_pallas
+
+
+@partial(jax.jit, static_argnames=("k", "bL", "interpret"))
+def topk(scores: jax.Array, k: int, *, bL: int = 512,
+         interpret: bool = True) -> tuple[jax.Array, jax.Array]:
+    """Top-k values and global indices per row of scores (n, L).
+
+    Pads L with -inf to a block multiple, reduces each block to k candidates
+    in VMEM, merges the candidate strip with one small lax.top_k.
+    """
+    n, L = scores.shape
+    bL = min(bL, max(k, 128))  if L < bL else bL
+    p = (-L) % bL
+    if p:
+        scores = jnp.pad(scores, ((0, 0), (0, p)), constant_values=NEG_INF)
+    vals, idx = blocked_topk_pallas(scores, k, bL=bL, interpret=interpret)
+    top_vals, pos = jax.lax.top_k(vals, k)
+    top_idx = jnp.take_along_axis(idx, pos, axis=1)
+    return top_vals, top_idx

@@ -1,0 +1,10 @@
+"""Pure-jnp oracle for blocked top-k."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def topk(scores: jax.Array, k: int) -> tuple[jax.Array, jax.Array]:
+    return jax.lax.top_k(scores.astype(jnp.float32), k)

@@ -1,0 +1,274 @@
+"""HLO call-graph cost model with while-loop trip-count multipliers.
+
+XLA's HloCostAnalysis (compiled.cost_analysis()) counts while-loop bodies
+ONCE — our layer scans, microbatch accumulation, blockwise-attention scans
+and SSM chunk scans therefore undercount FLOPs/bytes/collectives by the trip
+count. This module re-derives the three roofline numerators from the
+optimized per-device HLO text:
+
+  flops       2 * prod(result dims) * prod(contracting dims) per dot,
+              fusion/call/while expanded with known_trip_count multipliers
+  hbm bytes   TWO models, bracketing the truth:
+              * bytes_upper — operand + result bytes of every top-level
+                instruction. The CPU pipeline barely fuses, so elementwise
+                chains (convert/add/mul/broadcast) are all counted at full
+                tensor size: a LOOSE UPPER bound (~20-50x real TPU traffic).
+              * bytes_fused — only "anchor" ops that XLA:TPU cannot fuse
+                away (dot, fusion, reduce, gather/scatter, dynamic slices,
+                sort, concatenate, copies, collectives) charge operand +
+                result bytes; elementwise/layout ops ride their producers
+                for free. This models a perfectly-fusing TPU pipeline and
+                is the roofline's memory numerator.
+  collectives operand bytes per all-gather / all-reduce / reduce-scatter /
+              all-to-all / collective-permute, trip-multiplied.
+
+Shapes are per-device (post-SPMD-partitioning), so all totals are per-chip.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import json
+import re
+from functools import lru_cache
+
+_BYTES = {"f64": 8, "f32": 4, "bf16": 2, "f16": 2, "f8e4m3fn": 1,
+          "f8e5m2": 1, "s32": 4, "u32": 4, "s16": 2, "u16": 2,
+          "s8": 1, "u8": 1, "pred": 1, "s64": 8, "u64": 8, "c64": 8,
+          "c128": 16, "token": 0, "s4": 1, "u4": 1}
+
+_COMP_HDR = re.compile(r"^(?:ENTRY )?%?([\w\.\-_]+) \(.*\) -> .* \{\s*$")
+_INSTR = re.compile(
+    r"^\s*(?:ROOT )?%([\w\.\-_]+) = ((?:\([^)]*\))|(?:[^ ]+)) "
+    r"([\w\-]+)\((.*)$")
+_SHAPE = re.compile(r"^(?:\()?([a-z0-9]+)\[([0-9,]*)\]")
+_TUPLE_SHAPES = re.compile(r"([a-z0-9]+)\[([0-9,]*)\]")
+_CALLS = re.compile(r"calls=%?([\w\.\-_]+)")
+_BODY = re.compile(r"body=%?([\w\.\-_]+)")
+_COND = re.compile(r"condition=%?([\w\.\-_]+)")
+_TRIP = re.compile(r'known_trip_count[^0-9]*(\d+)')
+_OPERANDS_SPLIT = re.compile(r"%([\w\.\-_]+)")
+_LHS_C = re.compile(r"lhs_contracting_dims=\{([0-9,]*)\}")
+_BRANCHES = re.compile(r"branch_computations=\{([^}]*)\}")
+
+COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+               "collective-permute")
+
+# Ops that force HBM traffic on a perfectly-fusing TPU pipeline. Everything
+# elementwise / layout (convert, add, multiply, broadcast, reshape, bitcast,
+# transpose, select, compare, iota, pad, ...) fuses into these for free.
+ANCHOR_OPS = frozenset((
+    "dot", "convolution", "fusion", "reduce", "reduce-window", "gather",
+    "scatter", "dynamic-slice", "dynamic-update-slice", "sort", "copy",
+    "concatenate", "rng-bit-generator", "cholesky", "triangular-solve",
+    *COLLECTIVES, *(c + "-start" for c in COLLECTIVES),
+))
+
+
+def _shape_bytes(type_str: str) -> int:
+    """Total bytes of a (possibly tuple) shape string."""
+    total = 0
+    for m in _TUPLE_SHAPES.finditer(type_str):
+        dt, dims = m.group(1), m.group(2)
+        if dt not in _BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _BYTES[dt]
+    return total
+
+
+def _shape_bytes_f32(type_str: str) -> int:
+    """Bytes of the f32/f64 components only — used to quantify the CPU
+    lowering artifact where bf16 matmul partials are legalized to f32 dots,
+    inflating the measured collective bytes 2x vs a real TPU lowering
+    (EXPERIMENTS.md SSRoofline)."""
+    total = 0
+    for m in _TUPLE_SHAPES.finditer(type_str):
+        dt, dims = m.group(1), m.group(2)
+        if dt not in ("f32", "f64"):
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _BYTES[dt]
+    return total
+
+
+def _shape_dims(type_str: str):
+    m = _SHAPE.match(type_str)
+    if not m:
+        return None
+    return [int(d) for d in m.group(2).split(",") if d]
+
+
+@dataclasses.dataclass
+class Costs:
+    flops: float = 0.0
+    bytes: float = 0.0          # bytes_upper (every instruction)
+    bytes_fused: float = 0.0    # anchor ops only (TPU fusion model)
+    coll: dict = dataclasses.field(
+        default_factory=lambda: {k: 0.0 for k in COLLECTIVES})
+    coll_f32: float = 0.0       # f32 share of collective bytes (CPU artifact)
+
+    def __iadd__(self, o):
+        self.flops += o.flops
+        self.bytes += o.bytes
+        self.bytes_fused += o.bytes_fused
+        self.coll_f32 += o.coll_f32
+        for k in self.coll:
+            self.coll[k] += o.coll[k]
+        return self
+
+    def scaled(self, m: float) -> "Costs":
+        return Costs(self.flops * m, self.bytes * m, self.bytes_fused * m,
+                     {k: v * m for k, v in self.coll.items()},
+                     self.coll_f32 * m)
+
+
+def parse_module(text: str) -> dict:
+    """computation name -> list of raw instruction lines."""
+    comps: dict[str, list[str]] = {}
+    cur = None
+    for line in text.splitlines():
+        m = _COMP_HDR.match(line.strip()) if "{" in line else None
+        if m and ("->" in line):
+            cur = m.group(1)
+            comps[cur] = []
+            continue
+        if cur is not None:
+            if line.strip() == "}":
+                cur = None
+                continue
+            comps[cur].append(line)
+    return comps
+
+
+def module_costs(text: str) -> Costs:
+    comps = parse_module(text)
+
+    # Pre-parse instructions per computation.
+    parsed: dict[str, list[dict]] = {}
+    for name, lines in comps.items():
+        instrs = []
+        for ln in lines:
+            m = _INSTR.match(ln)
+            if not m:
+                continue
+            instrs.append({
+                "name": m.group(1), "type": m.group(2), "op": m.group(3),
+                "rest": m.group(4), "line": ln,
+            })
+        parsed[name] = instrs
+
+    # Symbol tables: per computation, instr name -> type string.
+    symtab = {
+        cname: {i["name"]: i["type"] for i in instrs}
+        for cname, instrs in parsed.items()
+    }
+
+    memo: dict[str, Costs] = {}
+
+    def comp_costs(cname: str) -> Costs:
+        if cname in memo:
+            return memo[cname]
+        memo[cname] = Costs()        # cycle guard (shouldn't happen)
+        total = Costs()
+        syms = symtab.get(cname, {})
+        for ins in parsed.get(cname, []):
+            op = ins["op"]
+            line = ins["line"]
+            own = Costs()
+            if op == "dot":
+                dims = _shape_dims(ins["type"]) or []
+                out_prod = 1
+                for d in dims:
+                    out_prod *= d
+                # contracting dims from lhs operand shape
+                ops = _OPERANDS_SPLIT.findall(ins["rest"].split("),")[0])
+                lhs_type = syms.get(ops[0] if ops else "", "")
+                lhs_dims = _shape_dims(lhs_type) or []
+                cm = _LHS_C.search(line)
+                cprod = 1
+                if cm and lhs_dims:
+                    for ci in cm.group(1).split(","):
+                        if ci:
+                            cprod *= lhs_dims[int(ci)]
+                own.flops += 2.0 * out_prod * cprod
+            if op in COLLECTIVES or op.rstrip("-start") in COLLECTIVES:
+                kind = op[:-6] if op.endswith("-start") else op
+                if kind in COLLECTIVES:
+                    opnames = _OPERANDS_SPLIT.findall(
+                        ins["rest"].split("),")[0].split(")")[0])
+                    ob = sum(_shape_bytes(syms.get(o, "")) for o in opnames)
+                    own.coll[kind] += float(ob)
+                    own.coll_f32 += float(sum(
+                        _shape_bytes_f32(syms.get(o, "")) for o in opnames))
+            # HBM traffic model: operand + result bytes at computation level
+            # for compute/data ops (not for pure control ops).
+            if op not in ("parameter", "constant", "tuple",
+                          "get-tuple-element", "while", "conditional",
+                          "call", "bitcast", "copy-start", "copy-done"):
+                opnames = _OPERANDS_SPLIT.findall(ins["rest"])
+                ob = sum(_shape_bytes(syms.get(o, "")) for o in opnames
+                         if o in syms)
+                traffic = _shape_bytes(ins["type"]) + ob
+                own.bytes += traffic
+                if op in ANCHOR_OPS:
+                    own.bytes_fused += traffic
+
+            # Recurse into called computations.
+            mult = 1.0
+            sub = Costs()
+            if op == "while":
+                b = _BODY.search(line)
+                c = _COND.search(line)
+                t = _TRIP.search(line)
+                trips = float(t.group(1)) if t else 1.0
+                if b:
+                    sub += comp_costs(b.group(1))
+                if c:
+                    sub += comp_costs(c.group(1))
+                mult = trips
+            elif op == "conditional":
+                br = _BRANCHES.search(line)
+                if br:
+                    branch_costs = [comp_costs(x.strip().lstrip("%"))
+                                    for x in br.group(1).split(",")]
+                    for bc in branch_costs:      # upper bound: sum branches
+                        sub += bc
+            else:
+                cm = _CALLS.search(line)
+                if cm:
+                    called = comp_costs(cm.group(1))
+                    # fusion boundary: flops+collectives recurse; bytes stay
+                    # at the fusion's own operand/result traffic.
+                    sub.flops += called.flops
+                    for k in sub.coll:
+                        sub.coll[k] += called.coll[k]
+            total += own
+            total += sub.scaled(mult)
+        memo[cname] = total
+        return total
+
+    # Entry computation = the one nobody calls; jax names it main.*
+    entry = None
+    for cname in parsed:
+        if cname.startswith("main"):
+            entry = cname
+            break
+    if entry is None:
+        entry = list(parsed)[-1]
+    return comp_costs(entry)
+
+
+def summarize(text: str) -> dict:
+    c = module_costs(text)
+    return {"flops": c.flops, "hbm_bytes": c.bytes,
+            "hbm_bytes_fused": c.bytes_fused,
+            "collectives": c.coll,
+            "collective_bytes": sum(c.coll.values()),
+            "collective_bytes_f32": c.coll_f32}

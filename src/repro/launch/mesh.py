@@ -1,0 +1,27 @@
+"""Production mesh construction (TPU v5e-256, 1 or 2 pods).
+
+A FUNCTION, not a module-level constant: importing this module never touches
+jax device state (the dry-run must set XLA_FLAGS before first jax init).
+"""
+
+from __future__ import annotations
+
+import jax
+from jax.sharding import AxisType
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes,
+                         axis_types=(AxisType.Auto,) * len(axes))
+
+
+def make_host_mesh(data: int = 1, model: int = 1):
+    """Small mesh over locally available devices (tests / examples)."""
+    return jax.make_mesh((data, model), ("data", "model"),
+                         axis_types=(AxisType.Auto, AxisType.Auto))
+
+
+def mesh_shape_dict(mesh) -> dict:
+    return dict(zip(mesh.axis_names, mesh.devices.shape))

@@ -1,0 +1,110 @@
+"""input_specs(): ShapeDtypeStruct stand-ins for every lowered entry point.
+
+No device allocation — these drive .lower()/.compile() only. Shardings follow
+DESIGN.md §5. Modality frontends are stubs: audio/vision archs receive
+precomputed frame/patch embeddings of the documented shape here.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.configs.base import SHAPES, ArchConfig, ShapeConfig
+from repro.models import sharding as shd
+from repro.models.model import Model, build_model
+
+Array = jax.Array
+
+# Gradient-accumulation microbatching for train_4k (global_batch = 256):
+# chosen so per-device activation memory fits a 16 GB v5e (DESIGN.md §5).
+TRAIN_ACCUM = {
+    "xlstm-125m": 1, "qwen1.5-0.5b": 1, "seamless-m4t-medium": 8,
+    # hymba 2 -> 8: the banded-attention band slices + mamba chunk states
+    # pushed train peak to 75 GB at accum=2; 8 brings activations within
+    # budget (collective bytes are accum-invariant for activations).
+    "hymba-1.5b": 8, "qwen2-moe-a2.7b": 4, "chatglm3-6b": 4,
+    "internvl2-26b": 8, "qwen3-14b": 8, "deepseek-coder-33b": 8,
+    "mixtral-8x22b": 8,
+}
+
+
+def use_swa_for(cfg: ArchConfig, shape_name: str) -> bool:
+    """SWA-native archs always; dense archs only for the long_500k variant
+    (DESIGN.md §Arch-applicability)."""
+    if cfg.swa_always:
+        return True
+    return shape_name == "long_500k" and cfg.sliding_window is not None
+
+
+def _sds(shape, dtype, mesh: Optional[Mesh], spec: Optional[P]):
+    if mesh is None or spec is None:
+        return jax.ShapeDtypeStruct(shape, dtype)
+    return jax.ShapeDtypeStruct(shape, dtype,
+                                sharding=NamedSharding(mesh, spec))
+
+
+def train_batch_specs(cfg: ArchConfig, shape: ShapeConfig, mesh: Mesh,
+                      accum: int) -> dict:
+    ms = dict(zip(mesh.axis_names, mesh.devices.shape))
+    mb = shape.global_batch // accum
+    T = shape.seq_len
+    bspec = shd.batch_spec(ms, mb, cfg=cfg)
+    lead = () if accum == 1 else (accum,)
+    lspec = () if accum == 1 else (None,)
+    batch = {
+        "tokens": _sds(lead + (mb, T), jnp.int32, mesh, P(*lspec, *bspec)),
+        "targets": _sds(lead + (mb, T), jnp.int32, mesh, P(*lspec, *bspec)),
+        "valid": _sds(lead + (mb, T), jnp.float32, mesh, P(*lspec, *bspec)),
+    }
+    if cfg.n_prefix:
+        batch["prefix"] = _sds(lead + (mb, cfg.n_prefix, cfg.d_model),
+                               jnp.bfloat16, mesh, P(*lspec, *bspec, None))
+    return batch
+
+
+def serve_batch_specs(cfg: ArchConfig, shape: ShapeConfig, mesh: Mesh) -> dict:
+    ms = dict(zip(mesh.axis_names, mesh.devices.shape))
+    B, T = shape.global_batch, shape.seq_len
+    bspec = shd.batch_spec(ms, B, cfg=cfg)
+    if shape.kind == "prefill":
+        batch = {"tokens": _sds((B, T), jnp.int32, mesh, P(*bspec))}
+        if cfg.n_prefix:
+            batch["prefix"] = _sds((B, cfg.n_prefix, cfg.d_model),
+                                   jnp.bfloat16, mesh, P(*bspec, None))
+        return batch
+    # decode: ONE new token
+    return {"tokens": _sds((B, 1), jnp.int32, mesh, P(*bspec)),
+            "pos": jax.ShapeDtypeStruct((), jnp.int32)}
+
+
+def abstract_params(model: Model) -> Any:
+    return jax.eval_shape(model.init, jax.random.PRNGKey(0))
+
+
+def params_specs(cfg: ArchConfig, params_shape: Any, mesh: Mesh) -> Any:
+    ms = dict(zip(mesh.axis_names, mesh.devices.shape))
+    pspecs = shd.param_pspecs(cfg, params_shape, ms)
+    return jax.tree.map(
+        lambda sds, spec: jax.ShapeDtypeStruct(
+            sds.shape, sds.dtype, sharding=NamedSharding(mesh, spec)),
+        params_shape, pspecs,
+        is_leaf=lambda x: isinstance(x, jax.ShapeDtypeStruct))
+
+
+def cache_specs(cfg: ArchConfig, model: Model, shape: ShapeConfig,
+                mesh: Mesh, use_swa: bool) -> Any:
+    cache_shape = jax.eval_shape(
+        lambda: model.init_cache(shape.global_batch, shape.seq_len,
+                                 use_swa=use_swa))
+    ms = dict(zip(mesh.axis_names, mesh.devices.shape))
+    cspecs = shd.cache_pspecs(cache_shape, ms, shape.global_batch)
+    return jax.tree.map(
+        lambda sds, spec: jax.ShapeDtypeStruct(
+            sds.shape, sds.dtype, sharding=NamedSharding(mesh, spec)),
+        cache_shape, cspecs,
+        is_leaf=lambda x: isinstance(x, jax.ShapeDtypeStruct))

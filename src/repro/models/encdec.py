@@ -1,0 +1,206 @@
+"""Encoder-decoder assembly (seamless-m4t-medium [arXiv:2308.11596]).
+
+Per the brief, the modality frontend (mel-spectrogram + conv feature
+extractor) is a STUB: input_specs() supplies precomputed frame embeddings
+(B, T_enc, d) and this module implements the transformer backbone — a
+bidirectional encoder over the frames and a causal decoder with per-layer
+cross-attention, sharing layers.py primitives (GQA kv=16 is full MHA here).
+
+Both stacks are scanned over layers. Serving caches hold the decoder
+self-attention KV plus the encoder memory K/V precomputed once at prefill.
+"""
+
+from __future__ import annotations
+
+from functools import partial
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.core import head as dismec_head
+from repro.models import layers
+from repro.models.transformer import (ovr_loss_from_feats,
+                                      softmax_loss_from_feats,
+                                      _attention_decode_dyn)
+
+Array = jax.Array
+
+
+def _init_enc_block(cfg: ArchConfig, rng: Array, dtype) -> dict:
+    k = jax.random.split(rng, 2)
+    return {"norm1": layers.init_norm(cfg, cfg.d_model),
+            "attn": layers.init_attention(cfg, k[0], dtype),
+            "norm2": layers.init_norm(cfg, cfg.d_model),
+            "mlp": layers.init_mlp(k[1], cfg.d_model, cfg.d_ff, dtype,
+                                   cfg.act)}
+
+
+def _init_dec_block(cfg: ArchConfig, rng: Array, dtype) -> dict:
+    k = jax.random.split(rng, 3)
+    return {"norm1": layers.init_norm(cfg, cfg.d_model),
+            "attn": layers.init_attention(cfg, k[0], dtype),
+            "norm_x": layers.init_norm(cfg, cfg.d_model),
+            "xattn": layers.init_attention(cfg, k[1], dtype),
+            "norm2": layers.init_norm(cfg, cfg.d_model),
+            "mlp": layers.init_mlp(k[2], cfg.d_model, cfg.d_ff, dtype,
+                                   cfg.act)}
+
+
+def init_params(cfg: ArchConfig, rng: Array) -> dict:
+    dtype = jnp.bfloat16 if cfg.dtype == "bfloat16" else jnp.float32
+    Vp = cfg.padded_vocab()
+    ke, kenc, kdec, kh = jax.random.split(rng, 4)
+    n_enc = cfg.n_encoder_layers or cfg.n_layers
+    return {
+        "embed": (jax.random.normal(ke, (Vp, cfg.d_model)) *
+                  cfg.d_model ** -0.5).astype(dtype),
+        "enc_blocks": jax.vmap(lambda r: _init_enc_block(cfg, r, dtype))(
+            jax.random.split(kenc, n_enc)),
+        "enc_norm": layers.init_norm(cfg, cfg.d_model),
+        "dec_blocks": jax.vmap(lambda r: _init_dec_block(cfg, r, dtype))(
+            jax.random.split(kdec, cfg.n_layers)),
+        "final_norm": layers.init_norm(cfg, cfg.d_model),
+        "head": dismec_head.init_head(kh, Vp, cfg.d_model, dtype),
+    }
+
+
+def encode(cfg: ArchConfig, params: dict, frames: Array,
+           remat: bool = True) -> Array:
+    """Bidirectional encoder over stub frame embeddings (B, T_enc, d)."""
+    B, T, _ = frames.shape
+    positions = jnp.broadcast_to(jnp.arange(T, dtype=jnp.int32), (B, T))
+    dtype = jnp.bfloat16 if cfg.dtype == "bfloat16" else jnp.float32
+    x = frames.astype(dtype)  # match param dtype (transformer.prefill does same)
+
+    def body(xx, blk):
+        def f(b, x_):
+            h = layers.apply_norm(cfg, b["norm1"], x_)
+            x_ = x_ + layers.attention(cfg, b["attn"], h, positions,
+                                       is_causal=False)
+            h2 = layers.apply_norm(cfg, b["norm2"], x_)
+            return x_ + layers.mlp(b["mlp"], h2, cfg.act)
+        fn = jax.checkpoint(f) if remat else f
+        return fn(blk, xx), None
+
+    x, _ = jax.lax.scan(body, x, params["enc_blocks"])
+    return layers.apply_norm(cfg, params["enc_norm"], x)
+
+
+def _memory_kv(cfg: ArchConfig, blk: dict, memory: Array):
+    B, S, _ = memory.shape
+    k = (memory @ blk["xattn"]["wk"]).reshape(B, S, cfg.n_kv_heads,
+                                              cfg.head_dim)
+    v = (memory @ blk["xattn"]["wv"]).reshape(B, S, cfg.n_kv_heads,
+                                              cfg.head_dim)
+    return k, v
+
+
+def decode_train(cfg: ArchConfig, params: dict, tokens: Array,
+                 memory: Array, remat: bool = True) -> Array:
+    """Causal decoder with cross-attention; returns features (B, T, d)."""
+    x = jnp.take(params["embed"], tokens, axis=0)
+    B, T, _ = x.shape
+    positions = jnp.broadcast_to(jnp.arange(T, dtype=jnp.int32), (B, T))
+
+    def body(xx, blk):
+        def f(b, x_):
+            h = layers.apply_norm(cfg, b["norm1"], x_)
+            x_ = x_ + layers.attention(cfg, b["attn"], h, positions)
+            hx = layers.apply_norm(cfg, b["norm_x"], x_)
+            mem_kv = _memory_kv(cfg, b, memory)
+            x_ = x_ + layers.cross_attention(cfg, b["xattn"], hx, mem_kv)
+            h2 = layers.apply_norm(cfg, b["norm2"], x_)
+            return x_ + layers.mlp(b["mlp"], h2, cfg.act)
+        fn = jax.checkpoint(f) if remat else f
+        return fn(blk, xx), None
+
+    x, _ = jax.lax.scan(body, x, params["dec_blocks"])
+    return layers.apply_norm(cfg, params["final_norm"], x)
+
+
+def train_loss(cfg: ArchConfig, params: dict, batch: dict, *, mesh=None,
+               batch_axes=()) -> tuple[Array, dict]:
+    memory = encode(cfg, params, batch["prefix"])
+    feats = decode_train(cfg, params, batch["tokens"], memory)
+    W = params["head"]
+    if cfg.head_type == "dismec":
+        loss = ovr_loss_from_feats(cfg, W, feats, batch["targets"],
+                                   batch.get("valid"), mesh=mesh,
+                                   batch_axes=batch_axes)
+    else:
+        loss = softmax_loss_from_feats(W, feats, batch["targets"],
+                                       batch.get("valid"), mesh=mesh,
+                                       batch_axes=batch_axes)
+    return loss, {"loss": loss, "aux": jnp.zeros((), jnp.float32)}
+
+
+def init_cache(cfg: ArchConfig, B: int, seq_len: int, t_enc: int,
+               dtype=jnp.bfloat16) -> dict:
+    L = cfg.n_layers
+    kv = (L, B, seq_len, cfg.n_kv_heads, cfg.head_dim)
+    mem = (L, B, t_enc, cfg.n_kv_heads, cfg.head_dim)
+    return {"k": jnp.zeros(kv, dtype), "v": jnp.zeros(kv, dtype),
+            "mem_k": jnp.zeros(mem, dtype), "mem_v": jnp.zeros(mem, dtype)}
+
+
+def prefill(cfg: ArchConfig, params: dict, tokens: Array, frames: Array):
+    """Encode + decode the prompt, build all caches, return top-k + cache."""
+    memory = encode(cfg, params, frames, remat=False)
+    x = jnp.take(params["embed"], tokens, axis=0)
+    B, T, _ = x.shape
+    positions = jnp.broadcast_to(jnp.arange(T, dtype=jnp.int32), (B, T))
+
+    def body(xx, blk):
+        h = layers.apply_norm(cfg, blk["norm1"], xx)
+        q, k, v = layers._qkv(cfg, blk["attn"], h, positions)
+        if T > layers.DENSE_ATTN_MAX_T:
+            a = layers.blockwise_attention(cfg, q, k, v)
+        else:
+            a = layers._sdpa(cfg, q, k, v, layers.causal_mask(T, T))
+        xx = xx + a @ blk["attn"]["wo"]
+        hx = layers.apply_norm(cfg, blk["norm_x"], xx)
+        mk, mv = _memory_kv(cfg, blk, memory)
+        xx = xx + layers.cross_attention(cfg, blk["xattn"], hx, (mk, mv))
+        h2 = layers.apply_norm(cfg, blk["norm2"], xx)
+        xx = xx + layers.mlp(blk["mlp"], h2, cfg.act)
+        return xx, (k.astype(jnp.bfloat16), v.astype(jnp.bfloat16),
+                    mk.astype(jnp.bfloat16), mv.astype(jnp.bfloat16))
+
+    x, (kc, vc, mk, mv) = jax.lax.scan(body, x, params["dec_blocks"])
+    x = layers.apply_norm(cfg, params["final_norm"], x)
+    logits = x[:, -1].astype(jnp.float32) @ params["head"].T.astype(jnp.float32)
+    vals, idx = jax.lax.top_k(logits, 5)
+    return vals, idx, {"k": kc, "v": vc, "mem_k": mk, "mem_v": mv}
+
+
+def decode_step(cfg: ArchConfig, params: dict, cache: dict, tokens: Array,
+                pos: Array, *, top_k: int = 5, **_):
+    """serve_step: one decoder token against self + memory caches."""
+    B = tokens.shape[0]
+    x = jnp.take(params["embed"], tokens, axis=0)
+    positions = jnp.broadcast_to(pos, (B, 1)).astype(jnp.int32)
+    eff = jnp.int32(2 ** 30)
+
+    def body(xx, xs):
+        blk, kc, vc, mk, mv = xs
+        h = layers.apply_norm(cfg, blk["norm1"], xx)
+        a, kc, vc = _attention_decode_dyn(cfg, blk["attn"], h, positions,
+                                          kc, vc, pos, eff)
+        xx = xx + a
+        hx = layers.apply_norm(cfg, blk["norm_x"], xx)
+        xx = xx + layers.cross_attention(cfg, blk["xattn"], hx, (mk, mv))
+        h2 = layers.apply_norm(cfg, blk["norm2"], xx)
+        xx = xx + layers.mlp(blk["mlp"], h2, cfg.act)
+        return xx, (kc, vc)
+
+    x, (kc, vc) = jax.lax.scan(
+        body, x, (params["dec_blocks"], cache["k"], cache["v"],
+                  cache["mem_k"], cache["mem_v"]))
+    x = layers.apply_norm(cfg, params["final_norm"], x)
+    logits = x[:, 0].astype(jnp.float32) @ params["head"].T.astype(jnp.float32)
+    vals, idx = jax.lax.top_k(logits, top_k)
+    new_cache = dict(cache)
+    new_cache["k"], new_cache["v"] = kc, vc
+    return vals, idx, new_cache

@@ -1,0 +1,52 @@
+"""Serving caches: dense KV, ring-buffer sliding-window KV, SSM states.
+
+Cache layout is *stacked over layers* — (n_layers, B, T_max, KV, hd) — so the
+decode layer scan (models/transformer.py) carries one pytree and the whole
+cache gets one sharding spec:
+
+  dense decode      : batch over (pod, data), cache length over `model`
+                      (sequence-sharded decode — kv_heads of the assigned
+                      archs, 2..16, do not divide a 16-way model axis, but
+                      32k/500k cache lengths do; softmax/psum over the length
+                      shards is inserted by GSPMD)
+  long_500k (B = 1) : cache length over (data, model) — 512-way sequence
+                      sharding, the only axis with room
+  SWA layers        : ring buffer of T_max == window slots, replicated length
+  SSM layers        : O(1) state pytrees (models/ssm.py NamedTuples)
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+
+Array = jax.Array
+
+
+@dataclasses.dataclass
+class CacheSpec:
+    """Static description used by init_cache and input_specs."""
+    kind: str                  # "attn" | "swa" | "mlstm" | "slstm" | "mamba" | "hybrid"
+    t_max: int                 # slots for attention-style caches
+
+
+def attn_cache_shape(cfg: ArchConfig, n_layers: int, B: int, t_max: int):
+    return (n_layers, B, t_max, cfg.n_kv_heads, cfg.head_dim)
+
+
+def init_attn_cache(cfg: ArchConfig, n_layers: int, B: int, t_max: int,
+                    dtype=jnp.bfloat16) -> dict:
+    shape = attn_cache_shape(cfg, n_layers, B, t_max)
+    return {"k": jnp.zeros(shape, dtype), "v": jnp.zeros(shape, dtype)}
+
+
+def cache_t_max(cfg: ArchConfig, seq_len: int, *, use_swa: bool) -> int:
+    """Ring buffers allocate only `window` slots."""
+    if use_swa and cfg.sliding_window:
+        return min(cfg.sliding_window, seq_len)
+    return seq_len

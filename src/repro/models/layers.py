@@ -1,0 +1,369 @@
+"""Shared transformer layers: norms, RoPE variants, GQA attention, MLP.
+
+Pure functional: params are nested dicts of jax.Arrays; every function takes
+(cfg, params, x, ...). Sharding is induced by pjit in_shardings on params
+(see models/sharding.py) plus a few activation constraints; GSPMD propagates
+the rest.
+
+Attention variants required by the assigned architectures:
+  * GQA with arbitrary kv_heads (all ten archs)
+  * RoPE on a fraction of head dims (chatglm3 "RoPE 2d": fraction = 0.5)
+  * qk RMS-norm per head (qwen3)
+  * QKV bias (qwen1.5)
+  * sliding-window causal masks (mixtral, hymba, and the --swa long-context
+    variant for dense archs, DESIGN.md §Arch-applicability)
+"""
+
+from __future__ import annotations
+
+import math
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+
+Array = jax.Array
+
+
+# ---------------------------------------------------------------------------
+# Norms
+# ---------------------------------------------------------------------------
+
+def rmsnorm(x: Array, scale: Array, eps: float = 1e-6) -> Array:
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    x = x * jax.lax.rsqrt(jnp.mean(x * x, axis=-1, keepdims=True) + eps)
+    return (x * scale.astype(jnp.float32)).astype(dt)
+
+
+def layernorm(x: Array, scale: Array, bias: Array, eps: float = 1e-5) -> Array:
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    mu = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.mean((x - mu) ** 2, axis=-1, keepdims=True)
+    out = (x - mu) * jax.lax.rsqrt(var + eps) * scale + bias
+    return out.astype(dt)
+
+
+def apply_norm(cfg: ArchConfig, p: dict, x: Array) -> Array:
+    if cfg.norm == "layernorm":
+        return layernorm(x, p["scale"], p["bias"])
+    return rmsnorm(x, p["scale"])
+
+
+def init_norm(cfg: ArchConfig, d: int) -> dict:
+    p = {"scale": jnp.ones((d,), jnp.float32)}
+    if cfg.norm == "layernorm":
+        p["bias"] = jnp.zeros((d,), jnp.float32)
+    return p
+
+
+# ---------------------------------------------------------------------------
+# RoPE
+# ---------------------------------------------------------------------------
+
+def rope_freqs(cfg: ArchConfig) -> Array:
+    """Inverse frequencies for the rotary fraction of head_dim."""
+    rot = int(cfg.head_dim * cfg.rope_fraction)
+    rot -= rot % 2
+    return 1.0 / (cfg.rope_theta ** (jnp.arange(0, rot, 2, jnp.float32) / rot))
+
+
+def apply_rope(cfg: ArchConfig, x: Array, positions: Array) -> Array:
+    """x: (B, T, H, hd); positions: (B, T) int32. Rotates the first
+    rope_fraction of head dims (chatglm3 rotates half), passes the rest."""
+    rot = int(cfg.head_dim * cfg.rope_fraction)
+    rot -= rot % 2
+    if rot == 0:
+        return x
+    inv = rope_freqs(cfg)                                   # (rot/2,)
+    ang = positions[..., None].astype(jnp.float32) * inv    # (B, T, rot/2)
+    cos = jnp.cos(ang)[:, :, None, :]
+    sin = jnp.sin(ang)[:, :, None, :]
+    x_rot, x_pass = x[..., :rot], x[..., rot:]
+    x1, x2 = x_rot[..., ::2], x_rot[..., 1::2]
+    o1 = x1 * cos - x2 * sin
+    o2 = x2 * cos + x1 * sin
+    out = jnp.stack([o1, o2], axis=-1).reshape(x_rot.shape)
+    return jnp.concatenate([out, x_pass], axis=-1).astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Attention
+# ---------------------------------------------------------------------------
+
+def init_attention(cfg: ArchConfig, rng: Array, dtype) -> dict:
+    d, qd, kvd = cfg.d_model, cfg.q_dim, cfg.kv_dim
+    k = jax.random.split(rng, 4)
+    s = d ** -0.5
+    p = {
+        "wq": (jax.random.normal(k[0], (d, qd)) * s).astype(dtype),
+        "wk": (jax.random.normal(k[1], (d, kvd)) * s).astype(dtype),
+        "wv": (jax.random.normal(k[2], (d, kvd)) * s).astype(dtype),
+        "wo": (jax.random.normal(k[3], (qd, d)) * s).astype(dtype),
+    }
+    if cfg.qkv_bias:
+        p["bq"] = jnp.zeros((qd,), dtype)
+        p["bk"] = jnp.zeros((kvd,), dtype)
+        p["bv"] = jnp.zeros((kvd,), dtype)
+    if cfg.qk_norm:
+        p["q_norm"] = jnp.ones((cfg.head_dim,), jnp.float32)
+        p["k_norm"] = jnp.ones((cfg.head_dim,), jnp.float32)
+    return p
+
+
+def _qkv(cfg: ArchConfig, p: dict, x: Array, positions: Array):
+    B, T, _ = x.shape
+    q = x @ p["wq"]
+    k = x @ p["wk"]
+    v = x @ p["wv"]
+    if cfg.qkv_bias:
+        q, k, v = q + p["bq"], k + p["bk"], v + p["bv"]
+    q = q.reshape(B, T, cfg.n_heads, cfg.head_dim)
+    k = k.reshape(B, T, cfg.n_kv_heads, cfg.head_dim)
+    v = v.reshape(B, T, cfg.n_kv_heads, cfg.head_dim)
+    if cfg.qk_norm:                       # qwen3: per-head RMS on q and k
+        q = rmsnorm(q, p["q_norm"])
+        k = rmsnorm(k, p["k_norm"])
+    q = apply_rope(cfg, q, positions)
+    k = apply_rope(cfg, k, positions)
+    return q, k, v
+
+
+def _sdpa(cfg: ArchConfig, q: Array, k: Array, v: Array,
+          mask: Optional[Array]) -> Array:
+    """q (B,Tq,H,hd), k/v (B,Tk,KV,hd) -> (B,Tq,H*hd). GQA via head groups."""
+    B, Tq, H, hd = q.shape
+    KV = k.shape[2]
+    G = H // KV
+    q = q.reshape(B, Tq, KV, G, hd)
+    scores = jnp.einsum("bqkgh,bskh->bkgqs", q, k,
+                        preferred_element_type=jnp.float32)
+    scores = scores / math.sqrt(hd)
+    if cfg.attn_logit_softcap:
+        c = cfg.attn_logit_softcap
+        scores = c * jnp.tanh(scores / c)
+    if mask is not None:
+        scores = jnp.where(mask, scores, -1e30)
+    w = jax.nn.softmax(scores, axis=-1).astype(v.dtype)
+    out = jnp.einsum("bkgqs,bskh->bqkgh", w, v)
+    return out.reshape(B, Tq, H * hd)
+
+
+def largest_divisor_leq(n: int, target: int) -> int:
+    """Largest divisor of n that is <= target (chunk sizes must tile T —
+    e.g. VLM prefill T = 32768 + 256 patches = 33024 tiles at 256)."""
+    for c in range(min(target, n), 0, -1):
+        if n % c == 0:
+            return c
+    return 1
+
+
+def blockwise_attention(cfg: ArchConfig, q: Array, k: Array, v: Array,
+                        *, window: Optional[int] = None,
+                        is_causal: bool = True,
+                        q_chunk: int = 512, kv_chunk: int = 1024) -> Array:
+    """Memory-bounded attention with online softmax (FlashAttention
+    recurrence in XLA ops): never materializes the (Tq, Tk) score matrix —
+    the per-step working set is (B, H, q_chunk, kv_chunk). Mandatory for the
+    32k/500k shapes where dense scores are O(100 GB) per device.
+
+    q (B,Tq,H,hd), k/v (B,Tk,KV,hd) -> (B,Tq,H*hd)
+    """
+    B, Tq, H, hd = q.shape
+    Tk, KV = k.shape[1], k.shape[2]
+    G = H // KV
+    q_chunk = largest_divisor_leq(Tq, q_chunk)
+    kv_chunk = largest_divisor_leq(Tk, kv_chunk)
+    nq, nk = Tq // q_chunk, Tk // kv_chunk
+    scale = 1.0 / math.sqrt(hd)
+
+    qs = jnp.moveaxis(q.reshape(B, nq, q_chunk, KV, G, hd), 1, 0)
+    ks = jnp.moveaxis(k.reshape(B, nk, kv_chunk, KV, hd), 1, 0)
+    vs = jnp.moveaxis(v.reshape(B, nk, kv_chunk, KV, hd), 1, 0)
+
+    def q_step(carry, qi_qx):
+        qi, qx = qi_qx                                 # qx (B,qc,KV,G,hd)
+        q_pos = qi * q_chunk + jnp.arange(q_chunk)
+
+        def kv_step(state, ki_kxvx):
+            ki, kx, vx = ki_kxvx
+            m, l, acc = state
+            k_pos = ki * kv_chunk + jnp.arange(kv_chunk)
+            s = jnp.einsum("bqkgh,bskh->bkgqs", qx, kx,
+                           preferred_element_type=jnp.float32) * scale
+            if cfg.attn_logit_softcap:
+                c = cfg.attn_logit_softcap
+                s = c * jnp.tanh(s / c)
+            if is_causal:
+                msk = k_pos[None, :] <= q_pos[:, None]
+                if window is not None:
+                    msk &= k_pos[None, :] > q_pos[:, None] - window
+                s = jnp.where(msk[None, None, None], s, -1e30)
+            m_new = jnp.maximum(m, jnp.max(s, axis=-1))
+            p = jnp.exp(s - m_new[..., None])
+            corr = jnp.exp(m - m_new)
+            l_new = l * corr + jnp.sum(p, axis=-1)
+            acc_new = acc * corr[..., None] + jnp.einsum(
+                "bkgqs,bskh->bkgqh", p.astype(vx.dtype), vx
+            ).astype(jnp.float32)
+            return (m_new, l_new, acc_new), None
+
+        m0 = jnp.full((B, KV, G, q_chunk), -1e30, jnp.float32)
+        l0 = jnp.zeros((B, KV, G, q_chunk), jnp.float32)
+        a0 = jnp.zeros((B, KV, G, q_chunk, hd), jnp.float32)
+        (m, l, acc), _ = jax.lax.scan(
+            kv_step, (m0, l0, a0), (jnp.arange(nk), ks, vs))
+        out = acc / jnp.maximum(l, 1e-30)[..., None]
+        out = jnp.moveaxis(out, 3, 1)                  # (B,qc,KV,G,hd)
+        return carry, out.reshape(B, q_chunk, H * hd).astype(q.dtype)
+
+    _, outs = jax.lax.scan(q_step, None, (jnp.arange(nq), qs))
+    return jnp.moveaxis(outs, 0, 1).reshape(B, Tq, H * hd)
+
+
+def banded_attention(cfg: ArchConfig, q: Array, k: Array, v: Array,
+                     *, window: int, q_chunk: int = 512) -> Array:
+    """Sliding-window attention that SKIPS out-of-window KV blocks.
+
+    blockwise_attention visits every (q_chunk, kv_chunk) tile and relies on
+    the mask, so a w=1024 window over T=32k still does O(T^2) MXU work.
+    Here the window is STATIC: each q chunk dynamic-slices only the KV band
+    [q_end - span, q_end) with span = window + q_chunk, so FLOPs drop from
+    O(T^2) to O(T * (window + q_chunk)) — 13x for hymba prefill_32k
+    (EXPERIMENTS.md SSPerf hymba iteration 2).
+
+    q (B,Tq,H,hd), k/v (B,Tk,KV,hd) -> (B,Tq,H*hd). Causal by construction.
+    """
+    B, Tq, H, hd = q.shape
+    Tk, KV = k.shape[1], k.shape[2]
+    G = H // KV
+    qc = largest_divisor_leq(Tq, q_chunk)
+    span = min(Tk, window + qc)
+    nq = Tq // qc
+    scale = 1.0 / math.sqrt(hd)
+    qs = jnp.moveaxis(q.reshape(B, nq, qc, KV, G, hd), 1, 0)
+
+    def q_step(_, qi_qx):
+        qi, qx = qi_qx                                  # qx (B,qc,KV,G,hd)
+        q_end = (qi + 1) * qc
+        start = jnp.clip(q_end - span, 0, Tk - span)
+        kb = jax.lax.dynamic_slice_in_dim(k, start, span, axis=1)
+        vb = jax.lax.dynamic_slice_in_dim(v, start, span, axis=1)
+        q_pos = qi * qc + jnp.arange(qc)
+        k_pos = start + jnp.arange(span)
+        s = jnp.einsum("bqkgh,bskh->bkgqs", qx, kb,
+                       preferred_element_type=jnp.float32) * scale
+        if cfg.attn_logit_softcap:
+            c = cfg.attn_logit_softcap
+            s = c * jnp.tanh(s / c)
+        msk = (k_pos[None, :] <= q_pos[:, None]) & \
+              (k_pos[None, :] > q_pos[:, None] - window)
+        s = jnp.where(msk[None, None, None], s, -1e30)
+        w = jax.nn.softmax(s, axis=-1).astype(vb.dtype)
+        out = jnp.einsum("bkgqs,bskh->bkgqh", w, vb)
+        out = jnp.moveaxis(out, 3, 1)                   # (B,qc,KV,G,hd)
+        return None, out.reshape(B, qc, H * hd).astype(q.dtype)
+
+    _, outs = jax.lax.scan(q_step, None, (jnp.arange(nq), qs))
+    return jnp.moveaxis(outs, 0, 1).reshape(B, Tq, H * hd)
+
+
+def causal_mask(Tq: int, Tk: int, *, q_offset: int = 0,
+                window: Optional[int] = None) -> Array:
+    """(1,1,1,Tq,Tk) boolean mask; window => sliding-window causal."""
+    qi = jnp.arange(Tq)[:, None] + q_offset
+    ki = jnp.arange(Tk)[None, :]
+    m = ki <= qi
+    if window is not None:
+        m = m & (ki > qi - window)
+    return m[None, None, None, :, :]
+
+
+DENSE_ATTN_MAX_T = 2048     # above this, scores would dominate HBM: go blockwise
+
+
+def attention(cfg: ArchConfig, p: dict, x: Array, positions: Array,
+              *, window: Optional[int] = None, is_causal: bool = True) -> Array:
+    """Full-sequence attention (train / prefill). Dense scores for short T,
+    online-softmax blockwise above DENSE_ATTN_MAX_T."""
+    B, T, _ = x.shape
+    q, k, v = _qkv(cfg, p, x, positions)
+    if T > DENSE_ATTN_MAX_T:
+        out = blockwise_attention(cfg, q, k, v, window=window,
+                                  is_causal=is_causal)
+    else:
+        mask = causal_mask(T, T, window=window) if is_causal else None
+        out = _sdpa(cfg, q, k, v, mask)
+    return out @ p["wo"]
+
+
+def cross_attention(cfg: ArchConfig, p: dict, x: Array, memory_kv: tuple,
+                    ) -> Array:
+    """Decoder cross-attention against precomputed encoder K/V."""
+    B, T, _ = x.shape
+    q = (x @ p["wq"]).reshape(B, T, cfg.n_heads, cfg.head_dim)
+    k, v = memory_kv
+    if T > DENSE_ATTN_MAX_T:
+        out = blockwise_attention(cfg, q, k, v, is_causal=False)
+    else:
+        out = _sdpa(cfg, q, k, v, None)
+    return out @ p["wo"]
+
+
+def attention_decode(cfg: ArchConfig, p: dict, x: Array, positions: Array,
+                     k_cache: Array, v_cache: Array, cache_index: Array,
+                     *, window: Optional[int] = None):
+    """One-token decode: x (B, 1, d) against cache (B, T_max, KV, hd).
+
+    Sliding-window caches are ring buffers (T_max == window); the mask then
+    keys off absolute positions stored alongside. For simplicity we store
+    absolute position per cache slot implicitly: slot = pos % T_max, and
+    validity = slot_pos <= current pos (& > pos - window for SWA).
+    """
+    B, one, _ = x.shape
+    T_max = k_cache.shape[1]
+    q, k, v = _qkv(cfg, p, x, positions)
+    slot = (cache_index % T_max) if window is not None else cache_index
+    k_cache = jax.lax.dynamic_update_slice(k_cache, k.astype(k_cache.dtype),
+                                           (0, slot, 0, 0))
+    v_cache = jax.lax.dynamic_update_slice(v_cache, v.astype(v_cache.dtype),
+                                           (0, slot, 0, 0))
+    pos_now = cache_index                      # scalar absolute position
+    slots = jnp.arange(T_max)
+    if window is not None:
+        # Ring buffer: slot s holds absolute position p_s with p_s % T_max == s
+        # and p_s in (pos_now - window, pos_now]; valid iff it has been written.
+        age = (pos_now - slots) % T_max        # tokens ago, in [0, T_max)
+        abs_pos = pos_now - age
+        valid = (abs_pos >= 0) & (abs_pos > pos_now - (window or T_max)) | (slots == slot)
+        valid = valid & (abs_pos <= pos_now)
+    else:
+        valid = slots <= pos_now
+    mask = valid[None, None, None, None, :]    # (1,1,1,1,T_max)
+    out = _sdpa(cfg, q, k_cache, v_cache, mask)
+    return out @ p["wo"], k_cache, v_cache
+
+
+# ---------------------------------------------------------------------------
+# MLP
+# ---------------------------------------------------------------------------
+
+def init_mlp(rng: Array, d: int, f: int, dtype, act: str = "silu") -> dict:
+    k = jax.random.split(rng, 3)
+    s = d ** -0.5
+    p = {"w1": (jax.random.normal(k[0], (d, f)) * s).astype(dtype),
+         "w2": (jax.random.normal(k[1], (f, d)) * (f ** -0.5)).astype(dtype)}
+    if act == "silu":                          # SwiGLU needs the gate proj
+        p["w3"] = (jax.random.normal(k[2], (d, f)) * s).astype(dtype)
+    return p
+
+
+def mlp(p: dict, x: Array, act: str = "silu") -> Array:
+    if act == "silu":
+        h = jax.nn.silu(x @ p["w1"]) * (x @ p["w3"])
+    else:
+        h = jax.nn.gelu(x @ p["w1"])
+    return h @ p["w2"]

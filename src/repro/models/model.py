@@ -1,0 +1,83 @@
+"""Model dispatch: one entry point per architecture family.
+
+build_model(cfg) returns a Model with uniform signatures so the launcher,
+trainer and dry-run treat all ten assigned architectures identically:
+
+  init(rng)                                   -> params
+  train_loss(params, batch, mesh, batch_axes) -> (loss, metrics)
+  prefill(params, batch, ...)                 -> (topk_vals, topk_idx, cache)
+  decode_step(params, cache, tokens, pos, ..) -> (vals, idx, new_cache)
+  init_cache(B, seq_len, use_swa)             -> cache pytree
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.models import encdec, transformer
+
+Array = jax.Array
+
+
+@dataclasses.dataclass
+class Model:
+    cfg: ArchConfig
+    init: Callable
+    train_loss: Callable
+    prefill: Callable
+    decode_step: Callable
+    init_cache: Callable
+
+
+def build_model(cfg: ArchConfig) -> Model:
+    if cfg.is_encoder_decoder:
+        def init(rng):
+            return encdec.init_params(cfg, rng)
+
+        def train_loss(params, batch, *, mesh=None, batch_axes=()):
+            return encdec.train_loss(cfg, params, batch, mesh=mesh,
+                                     batch_axes=batch_axes)
+
+        def prefill_fn(params, batch, *, mesh=None, batch_axes=(),
+                       use_swa=False):
+            return encdec.prefill(cfg, params, batch["tokens"],
+                                  batch["prefix"])
+
+        def decode_fn(params, cache, tokens, pos, *, mesh=None,
+                      batch_axes=(), use_swa=False):
+            return encdec.decode_step(cfg, params, cache, tokens, pos)
+
+        def init_cache(B, seq_len, *, use_swa=False, t_enc=None):
+            return encdec.init_cache(cfg, B, seq_len,
+                                     t_enc or cfg.n_prefix)
+
+        return Model(cfg, init, train_loss, prefill_fn, decode_fn, init_cache)
+
+    def init(rng):
+        return transformer.init_params(cfg, rng)
+
+    def train_loss(params, batch, *, mesh=None, batch_axes=()):
+        return transformer.train_loss(cfg, params, batch, mesh=mesh,
+                                      batch_axes=batch_axes)
+
+    def prefill_fn(params, batch, *, mesh=None, batch_axes=(),
+                   use_swa=False):
+        return transformer.prefill(cfg, params, batch["tokens"],
+                                   prefix=batch.get("prefix"), mesh=mesh,
+                                   batch_axes=batch_axes, use_swa=use_swa)
+
+    def decode_fn(params, cache, tokens, pos, *, mesh=None, batch_axes=(),
+                  use_swa=False):
+        return transformer.decode_step(cfg, params, cache, tokens, pos,
+                                       mesh=mesh, batch_axes=batch_axes,
+                                       use_swa=use_swa)
+
+    def init_cache(B, seq_len, *, use_swa=False, t_enc=None):
+        return transformer.init_cache(cfg, B, seq_len, use_swa=use_swa)
+
+    return Model(cfg, init, train_loss, prefill_fn, decode_fn, init_cache)

@@ -1,0 +1,172 @@
+"""Partition specs for params, activations, caches (DESIGN.md §5).
+
+Conventions (mesh axes: optional "pod", then "data", "model"):
+
+  weights    : FSDP over "data" x tensor-parallel over "model".
+               Every 2D projection (a, b) is P(fsdp, tp) or P(tp, fsdp)
+               depending on which dim is the TP dim; dims that don't divide
+               their axis are replicated (helper `div`).
+  batch      : P(("pod","data")) when pod exists; logits vocab dim over
+               "model" (the DiSMEC label sharding).
+  KV caches  : batch over (pod, data); *length* over "model" (kv_heads of
+               the assigned archs don't divide 16, cache lengths do).
+               long_500k (B=1): length over ("data","model").
+  optimizer  : moments/master copy inherit the param spec.
+"""
+
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ArchConfig
+
+Array = jax.Array
+
+FSDP, TP = "data", "model"
+
+
+def _axis(mesh_shape: dict, name: str, size: int) -> Optional[str]:
+    """Axis name if `size` divides the axis, else None (replicate)."""
+    return name if name in mesh_shape and size % mesh_shape[name] == 0 else None
+
+
+def batch_axes(mesh_shape: dict, cfg: Optional[ArchConfig] = None) -> tuple:
+    """Mesh axes the batch shards over. With backbone_tp=False the `model`
+    axis carries no backbone TP, so it becomes EXTRA data parallelism for
+    the backbone — the DiSMEC structure: data-parallel features,
+    label-parallel head, one small feats all-gather at the boundary
+    (EXPERIMENTS.md SSPerf q1)."""
+    axes = ("pod", "data") if "pod" in mesh_shape else ("data",)
+    if cfg is not None and not cfg.backbone_tp:
+        axes = axes + (TP,)
+    return axes
+
+
+def batch_spec(mesh_shape: dict, global_batch: int, extra=(None,),
+               cfg: Optional[ArchConfig] = None) -> P:
+    axes = batch_axes(mesh_shape, cfg)
+    cands = [axes]
+    base = ("pod", "data") if "pod" in mesh_shape else ("data",)
+    if axes != base:
+        cands.append(base)               # without the model extension
+    if base != ("data",):
+        cands.append(("data",))
+    for c in cands:
+        n = 1
+        for a in c:
+            n *= mesh_shape[a]
+        if global_batch % n == 0:
+            return P(c, *extra)
+    return P(None, *extra)
+
+
+# Leaf names whose LAST dim is the tensor-parallel dim (column-parallel)...
+_TP_LAST = {"wq", "wk", "wv", "w1", "w3", "w_in", "w_if", "w_dt", "w"}
+# ...and whose SECOND-TO-LAST dim is (row-parallel / vocab-sharded).
+_TP_FIRST = {"wo", "w2", "w_out", "embed", "head", "lm_head"}
+# Contraction-dim-only sharding (output dim too small / must stay whole).
+_FSDP_ONLY = {"router", "gate"}
+# Fully replicated: tiny projections where TP-sharding the output dim turns
+# every SSM chunk step into a partial-sum all-reduce — w_bc is (d, 2S)=100 KB
+# but sharding S cost hymba prefill 13.4 GB of *serialized* in-scan ARs
+# (EXPERIMENTS.md SSPerf hymba iteration 3a).
+_REPLICATE = {"w_bc"}
+
+
+def param_pspecs(cfg: ArchConfig, params, mesh_shape: dict):
+    """Pytree of PartitionSpec matching `params` (leaf-name patterns).
+
+    2D (or stacked 3D/4D) weights get P(..., FSDP_dim, TP_dim) with each
+    axis dropped when the dim doesn't divide it — e.g. chatglm's kv_dim
+    (2 heads x 128) is replicated over a 16-way model axis.
+    """
+
+    # The extreme output layer (and tied embedding) is ALWAYS label-sharded
+    # over `model` — the paper's layer-1 parallelism. The backbone drops its
+    # TP axis when cfg.backbone_tp=False (small models: 16-way TP shards are
+    # MXU-starved and the 2 ARs/layer dominate the step — SSPerf q1).
+    _HEAD_NAMES = {"embed", "head", "lm_head"}
+
+    def spec_for(path: tuple, leaf) -> P:
+        name = None
+        for k in reversed(path):
+            key = getattr(k, "key", None)
+            if isinstance(key, str):
+                name = key
+                break
+        shape = leaf.shape
+        if leaf.ndim <= 1 or name is None:
+            return P()
+        lead = (None,) * (leaf.ndim - 2)
+        if name in _REPLICATE:
+            return P()
+        # backbone_tp=False replicates backbone weights FULLY (not FSDP):
+        # recurrent stacks (sLSTM) apply weights inside per-timestep scans,
+        # and an FSDP shard there means an all-gather EVERY time step
+        # (measured: xlstm train collective 0.46 -> 2.05 s with FSDP;
+        # replication keeps the backbone collective-free). These backbones
+        # are <= 0.5B params — replication costs ~5 GB incl. optimizer.
+        backbone_no_tp = (not cfg.backbone_tp) and name not in _HEAD_NAMES
+        if backbone_no_tp:
+            return P()
+        if name in _TP_FIRST:
+            return P(*lead, _axis(mesh_shape, TP, shape[-2]),
+                     _axis(mesh_shape, FSDP, shape[-1]))
+        if name in _TP_LAST:
+            return P(*lead, _axis(mesh_shape, FSDP, shape[-2]),
+                     _axis(mesh_shape, TP, shape[-1]))
+        if name in _FSDP_ONLY:
+            return P(*lead, _axis(mesh_shape, FSDP, shape[-2]), None)
+        return P()
+
+    return jax.tree_util.tree_map_with_path(spec_for, params)
+
+
+def cache_pspecs(cache, mesh_shape: dict, global_batch: int):
+    """KV cache: (L, B, T, KV, hd) -> batch over (pod,data), T over model.
+    B == 1 (long_500k): T over (data, model)."""
+    def spec_for(leaf):
+        if leaf.ndim == 5:                      # stacked attn cache
+            B, T = leaf.shape[1], leaf.shape[2]
+            baxes = batch_axes(mesh_shape)
+            nb = 1
+            for a in baxes:
+                nb *= mesh_shape[a]
+            if B % nb == 0:
+                return P(None, baxes, _axis(mesh_shape, TP, T), None, None)
+            if B % mesh_shape["data"] == 0:
+                return P(None, "data", _axis(mesh_shape, TP, T), None, None)
+            # B=1: shard length over every available axis
+            seq_axes = tuple(a for a in ("data", "model")
+                             if T % mesh_shape[a] == 0)
+            if len(seq_axes) == 2 and T % (mesh_shape["data"] *
+                                           mesh_shape["model"]) == 0:
+                return P(None, None, seq_axes, None, None)
+            return P(None, None, seq_axes[0] if seq_axes else None, None, None)
+        # SSM states: (L, B, ...) — batch over data when divisible
+        if leaf.ndim >= 2:
+            B = leaf.shape[1]
+            baxes = batch_axes(mesh_shape)
+            nb = 1
+            for a in baxes:
+                nb *= mesh_shape[a]
+            lead = (None,)
+            rest = (None,) * (leaf.ndim - 2)
+            if B % nb == 0:
+                return P(None, baxes, *rest)
+            if B % mesh_shape["data"] == 0:
+                return P(None, "data", *rest)
+            return P(*((None,) * leaf.ndim))
+        return P(None)
+
+    return jax.tree.map(spec_for, cache,
+                        is_leaf=lambda x: hasattr(x, "ndim"))
+
+
+def named(mesh: Mesh, spec_tree):
+    return jax.tree.map(lambda s: NamedSharding(mesh, s), spec_tree,
+                        is_leaf=lambda x: isinstance(x, P))

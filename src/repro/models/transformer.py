@@ -1,0 +1,722 @@
+"""Decoder-only model assembly for all assigned architectures.
+
+One parameterized stack covers the dense / moe / vlm / hybrid / ssm families:
+  * homogeneous stacks (everything except xlstm) keep params STACKED over
+    layers and run a lax.scan over layers — compile time is O(1) in depth
+    (deepseek-coder's 62 layers compile as one block), and per-layer flags
+    (hymba's global-vs-local attention schedule) ride along as scan inputs;
+  * xlstm's heterogeneous mLSTM/sLSTM pattern is unrolled (12 layers).
+
+Three entry points per model (built by models/model.py):
+  train_loss  — full-sequence forward + DiSMEC OvR (or softmax) head loss
+  prefill     — full-sequence forward that fills the serving cache
+  decode_step — ONE token against the cache (what decode_32k/long_500k lower)
+
+Per-layer remat (jax.checkpoint) keeps train activation memory at one
+residual stream per layer.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+from jax import ad_checkpoint
+
+from repro.configs.base import ArchConfig
+from repro.core import head as dismec_head
+from repro.models import layers, moe, ssm
+from repro.models.kvcache import cache_t_max
+
+Array = jax.Array
+
+
+# ---------------------------------------------------------------------------
+# Block kinds
+# ---------------------------------------------------------------------------
+
+def block_kind(cfg: ArchConfig, idx: int) -> str:
+    if cfg.family == "ssm":
+        pat = cfg.block_pattern or ("m",)
+        return {"m": "mlstm", "s": "slstm"}[pat[idx % len(pat)]]
+    if cfg.family == "hybrid":
+        return "hybrid"
+    return "attn"
+
+
+def uses_layer_scan(cfg: ArchConfig) -> bool:
+    """Scan over layers when every block has identical param structure."""
+    return cfg.family != "ssm"
+
+
+def layer_windows_static(cfg: ArchConfig, *, use_swa: bool) -> tuple:
+    """Per-layer window sizes as PYTHON ints; 0 = full attention.
+    hymba: SWA everywhere except global_attn_layers; mixtral: SWA
+    everywhere; dense --swa variant: SWA everywhere."""
+    w = cfg.sliding_window if (cfg.sliding_window and use_swa) else 0
+    wins = [w] * cfg.n_layers
+    for g in cfg.global_attn_layers:
+        if g < cfg.n_layers:
+            wins[g] = 0
+    return tuple(wins)
+
+
+def window_segments(cfg: ArchConfig, *, use_swa: bool) -> list:
+    """Maximal runs of consecutive layers sharing a static window:
+    [(start, end, window), ...]. Static windows let the attention path SKIP
+    out-of-window KV blocks (layers.banded_attention) instead of masking
+    them — the traced-window variant cost hymba prefill 13x (SSPerf)."""
+    wins = layer_windows_static(cfg, use_swa=use_swa)
+    segs, s = [], 0
+    for i in range(1, len(wins) + 1):
+        if i == len(wins) or wins[i] != wins[s]:
+            segs.append((s, i, wins[s]))
+            s = i
+    return segs
+
+
+def layer_windows(cfg: ArchConfig, *, use_swa: bool) -> Any:
+    """Traced (n_layers,) window array — used only by the one-token decode
+    scan, where the window is a mask bound (no quadratic work to skip)."""
+    return jnp.asarray(layer_windows_static(cfg, use_swa=use_swa), jnp.int32)
+
+
+# ---------------------------------------------------------------------------
+# Init
+# ---------------------------------------------------------------------------
+
+def _init_block(cfg: ArchConfig, rng: Array, kind: str, dtype) -> dict:
+    ks = jax.random.split(rng, 4)
+    p: dict = {"norm1": layers.init_norm(cfg, cfg.d_model)}
+    if kind == "attn":
+        p["attn"] = layers.init_attention(cfg, ks[0], dtype)
+    elif kind == "mlstm":
+        p["mixer"] = ssm.init_mlstm(cfg, ks[0], dtype)
+    elif kind == "slstm":
+        p["mixer"] = ssm.init_slstm(cfg, ks[0], dtype)
+    elif kind == "hybrid":
+        p["attn"] = layers.init_attention(cfg, ks[0], dtype)
+        p["mamba"] = ssm.init_mamba(cfg, ks[1], dtype, cfg.d_model)
+    if cfg.d_ff > 0:
+        p["norm2"] = layers.init_norm(cfg, cfg.d_model)
+        if cfg.family == "moe":
+            p["moe"] = moe.init_moe(cfg, ks[2], dtype)
+        else:
+            p["mlp"] = layers.init_mlp(ks[2], cfg.d_model, cfg.d_ff, dtype,
+                                       cfg.act)
+    return p
+
+
+def init_params(cfg: ArchConfig, rng: Array) -> dict:
+    dtype = jnp.bfloat16 if cfg.dtype == "bfloat16" else jnp.float32
+    Vp = cfg.padded_vocab()
+    k_embed, k_blocks, k_head = jax.random.split(rng, 3)
+    params: dict = {
+        "embed": (jax.random.normal(k_embed, (Vp, cfg.d_model)) *
+                  cfg.d_model ** -0.5).astype(dtype),
+        "final_norm": layers.init_norm(cfg, cfg.d_model),
+    }
+    if uses_layer_scan(cfg):
+        rngs = jax.random.split(k_blocks, cfg.n_layers)
+        params["blocks"] = jax.vmap(
+            lambda r: _init_block(cfg, r, block_kind(cfg, 0), dtype))(rngs)
+    else:
+        rngs = jax.random.split(k_blocks, cfg.n_layers)
+        params["blocks"] = [
+            _init_block(cfg, rngs[i], block_kind(cfg, i), dtype)
+            for i in range(cfg.n_layers)]
+    if cfg.tie_embeddings:
+        pass                                  # head reuses embed
+    else:
+        params["head"] = dismec_head.init_head(k_head, Vp, cfg.d_model,
+                                               dtype)
+    return params
+
+
+# ---------------------------------------------------------------------------
+# Forward (full sequence)
+# ---------------------------------------------------------------------------
+
+def _block_forward(cfg: ArchConfig, p: dict, x: Array, positions: Array,
+                   *, window: int, kind: str, mesh=None,
+                   batch_axes=()) -> tuple[Array, Array]:
+    """One block. window: STATIC python int (0 = full attention); static so
+    sliding-window layers can skip out-of-window KV blocks entirely
+    (EXPERIMENTS.md SSPerf hymba iteration 2). Returns (x, aux)."""
+    aux = jnp.zeros((), jnp.float32)
+    h = layers.apply_norm(cfg, p["norm1"], x)
+    if kind == "attn":
+        mix = _attention_window(cfg, p["attn"], h, positions, window)
+    elif kind == "mlstm":
+        mix = ssm.mlstm(cfg, p["mixer"], h)
+    elif kind == "slstm":
+        mix = ssm.slstm(cfg, p["mixer"], h, mesh=mesh,
+                        batch_axes=batch_axes)
+    elif kind == "hybrid":
+        mix = _hybrid_mix(cfg, p, h, positions, window)
+    else:
+        raise ValueError(kind)
+    # Name the post-all-reduce tensors so the remat policy can SAVE them:
+    # re-running a collective inside the rematted bwd is pure wire waste
+    # (270 GB/step on mixtral train — EXPERIMENTS.md SSPerf m2).
+    mix = ad_checkpoint.checkpoint_name(mix, "block_mix_ar")
+    x = x + mix
+    if cfg.d_ff > 0:
+        h2 = layers.apply_norm(cfg, p["norm2"], x)
+        if cfg.family == "moe":
+            out, aux = moe.moe_ffn(cfg, p["moe"], h2, mesh=mesh,
+                                   batch_axes=batch_axes)
+        else:
+            out = layers.mlp(p["mlp"], h2, cfg.act)
+        out = ad_checkpoint.checkpoint_name(out, "block_ffn_ar")
+        x = x + out
+    return x, aux
+
+
+def _attention_window(cfg: ArchConfig, p: dict, x: Array,
+                      positions: Array, window: int,
+                      project: bool = True) -> Array:
+    """Attention with a STATIC window (0 = full). Long sequences route to
+    banded_attention (skips KV blocks) when the window actually cuts work,
+    else the online-softmax blockwise kernel. project=False skips @wo (the
+    hybrid block fuses it with the mamba out-projection — SSPerf 3b)."""
+    B, T, _ = x.shape
+    q, k, v = layers._qkv(cfg, p, x, positions)
+    if T > layers.DENSE_ATTN_MAX_T:
+        if window and window < T:
+            out = layers.banded_attention(cfg, q, k, v, window=window)
+        else:
+            out = layers.blockwise_attention(cfg, q, k, v,
+                                             window=window or None)
+    else:
+        mask = layers.causal_mask(T, T, window=window or None)
+        out = layers._sdpa(cfg, q, k, v, mask)
+    return out @ p["wo"] if project else out
+
+
+def _hybrid_mix(cfg: ArchConfig, p: dict, h: Array, positions: Array,
+                window: int) -> Array:
+    """hymba parallel attention + mamba heads, mean-combined.
+
+    0.5*(ctx @ wo + y @ w_out) == (0.5*[ctx, y]) @ [[wo],[w_out]] — ONE
+    partial-sum dot over the model axis, so GSPMD inserts ONE all-reduce
+    per layer instead of two (EXPERIMENTS.md SSPerf hymba iteration 3b)."""
+    ctx = _attention_window(cfg, p["attn"], h, positions, window,
+                            project=False)                  # (B,T,H*hd)
+    y = ssm.mamba(cfg, p["mamba"], h, cfg.d_model, project=False)
+    w_cat = jnp.concatenate([p["attn"]["wo"],
+                             p["mamba"]["w_out"]], axis=0)  # (H*hd+d_in, d)
+    mixed = jnp.concatenate([ctx, y.astype(ctx.dtype)], axis=-1)
+    return (0.5 * mixed) @ w_cat
+
+
+def _blockwise_dyn(cfg: ArchConfig, q, k, v, eff_window):
+    """Blockwise attention with traced window (mask recomputed per tile)."""
+    import math as _m
+    B, Tq, H, hd = q.shape
+    Tk, KV = k.shape[1], k.shape[2]
+    G = H // KV
+    qc = layers.largest_divisor_leq(Tq, 512)
+    kc = layers.largest_divisor_leq(Tk, 1024)
+    nq, nk = Tq // qc, Tk // kc
+    scale = 1.0 / _m.sqrt(hd)
+    qs = jnp.moveaxis(q.reshape(B, nq, qc, KV, G, hd), 1, 0)
+    ks = jnp.moveaxis(k.reshape(B, nk, kc, KV, hd), 1, 0)
+    vs = jnp.moveaxis(v.reshape(B, nk, kc, KV, hd), 1, 0)
+
+    def q_step(_, qi_qx):
+        qi, qx = qi_qx
+        q_pos = qi * qc + jnp.arange(qc)
+
+        def kv_step(state, inp):
+            ki, kx, vx = inp
+            m, l, acc = state
+            k_pos = ki * kc + jnp.arange(kc)
+            s = jnp.einsum("bqkgh,bskh->bkgqs", qx, kx,
+                           preferred_element_type=jnp.float32) * scale
+            msk = (k_pos[None, :] <= q_pos[:, None]) & \
+                  (k_pos[None, :] > q_pos[:, None] - eff_window)
+            s = jnp.where(msk[None, None, None], s, -1e30)
+            m_new = jnp.maximum(m, jnp.max(s, axis=-1))
+            pmat = jnp.exp(s - m_new[..., None])
+            corr = jnp.exp(m - m_new)
+            l_new = l * corr + jnp.sum(pmat, axis=-1)
+            acc_new = acc * corr[..., None] + jnp.einsum(
+                "bkgqs,bskh->bkgqh", pmat.astype(vx.dtype), vx
+            ).astype(jnp.float32)
+            return (m_new, l_new, acc_new), None
+
+        m0 = jnp.full((B, KV, G, qc), -1e30, jnp.float32)
+        l0 = jnp.zeros((B, KV, G, qc), jnp.float32)
+        a0 = jnp.zeros((B, KV, G, qc, hd), jnp.float32)
+        (m, l, acc), _ = jax.lax.scan(kv_step, (m0, l0, a0),
+                                      (jnp.arange(nk), ks, vs))
+        out = acc / jnp.maximum(l, 1e-30)[..., None]
+        return None, jnp.moveaxis(out, 3, 1).reshape(B, qc, H * hd
+                                                     ).astype(q.dtype)
+
+    _, outs = jax.lax.scan(q_step, None, (jnp.arange(nq), qs))
+    return jnp.moveaxis(outs, 0, 1).reshape(B, Tq, H * hd)
+
+
+def forward(cfg: ArchConfig, params: dict, tokens: Array,
+            prefix: Optional[Array] = None, *, mesh=None, batch_axes=(),
+            use_swa: bool = False, remat: bool = True) -> Array:
+    """Embeds tokens (plus optional modality prefix embeddings), runs the
+    stack, returns final-norm features (B, T_total, d)."""
+    x = jnp.take(params["embed"], tokens, axis=0)
+    if prefix is not None:
+        x = jnp.concatenate([prefix.astype(x.dtype), x], axis=1)
+    if mesh is not None:
+        from jax.sharding import PartitionSpec as P
+        x = _constrain(x, mesh, P(batch_axes or None, None, None))
+    B, T, _ = x.shape
+    positions = jnp.broadcast_to(jnp.arange(T, dtype=jnp.int32), (B, T))
+    wins = layer_windows_static(cfg, use_swa=use_swa)
+
+    if uses_layer_scan(cfg):
+        kind = block_kind(cfg, 0)
+        aux = jnp.zeros((), jnp.float32)
+        # One scan per maximal same-window segment: the window stays STATIC
+        # inside each scan so SWA layers skip out-of-window KV blocks.
+        for s, e, win in window_segments(cfg, use_swa=use_swa):
+            seg = jax.tree.map(lambda a: a[s:e], params["blocks"])
+
+            def body(carry, blk, _win=win):
+                xx, aux_in = carry
+                # window bound STATICALLY via partial — jax.checkpoint would
+                # otherwise trace it and break the int-valued branch.
+                fn = partial(_block_forward, cfg, kind=kind, window=_win,
+                             mesh=mesh, batch_axes=batch_axes)
+                if remat:
+                    fn = jax.checkpoint(fn, policy=_REMAT_POLICY)
+                xx, aux_ = fn(blk, xx, positions)
+                return (xx, aux_in + aux_), None
+
+            (x, aux), _ = jax.lax.scan(body, (x, aux), seg)
+    else:
+        aux = jnp.zeros((), jnp.float32)
+        for i, blk in enumerate(params["blocks"]):
+            fn = partial(_block_forward, cfg, kind=block_kind(cfg, i),
+                         window=wins[i], mesh=mesh, batch_axes=batch_axes)
+            if remat:
+                fn = jax.checkpoint(fn, policy=_REMAT_POLICY)
+            x, a = fn(blk, x, positions)
+            aux = aux + a
+    x = layers.apply_norm(cfg, params["final_norm"], x)
+    return x, aux
+
+
+# ---------------------------------------------------------------------------
+# Losses
+# ---------------------------------------------------------------------------
+
+def head_weight(cfg: ArchConfig, params: dict) -> Array:
+    return params["embed"] if cfg.tie_embeddings else params["head"]
+
+
+# Remat policy: recompute everything EXCEPT the post-collective block
+# outputs — re-running an all-reduce in the bwd remat costs wire time, not
+# just flops (SSPerf m2: -270 GB/step on mixtral train for +2 saved
+# (B_mb, T, d) tensors per layer).
+# SSPerf m2 (REFUTED): saving post-AR block outputs in the remat policy
+# removes 90 GB/step of re-run collectives on mixtral train (-8%) but costs
+# +11 GB/device peak (34.5 GB, over the 16 GB v5e budget). Not worth it at
+# this memory budget — policy stays None; the checkpoint_name markers remain
+# so a host-offload policy can target them later.
+_REMAT_POLICY = None
+
+
+def _constrain(x: Array, mesh, spec) -> Array:
+    """Activation sharding constraint (no-op without a mesh)."""
+    if mesh is None:
+        return x
+    from jax.sharding import NamedSharding
+    return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, spec))
+
+
+# Token-chunk size for the head losses: the (tokens, labels) logit block is
+# the single biggest activation in every assigned arch (65k x 9.5k f32 =
+# 2.5 GB/device on qwen05 train, with ~6 live copies through the hinge
+# chain + bwd). Scanning token chunks with per-chunk remat bounds the live
+# block to (HEAD_CHUNK/devices, labels/16) — the paper's Algorithm-1 outer
+# batch loop, applied to the LM head (EXPERIMENTS.md SSPerf q2).
+HEAD_CHUNK = 32768
+
+
+def _chunked_rows(n: int, target: int = HEAD_CHUNK) -> int:
+    c = layers.largest_divisor_leq(n, target)
+    return c if c > 1 else n
+
+
+def ovr_loss_from_feats(cfg: ArchConfig, W: Array, feats: Array,
+                        targets: Array, valid: Optional[Array],
+                        *, mesh=None, batch_axes=()) -> Array:
+    """DiSMEC OvR squared-hinge loss, formulated with one-hot ops so the
+    vocab axis shards (no take_along_axis gather across label shards).
+
+    The logits constraint IS the paper's layer-1 parallelism: rows (tokens)
+    over the batch axes, labels over `model`; each device owns an
+    independent (token-shard x label-shard) hinge block — zero cross-label
+    traffic, one scalar psum at the end (vs softmax-CE's logsumexp
+    collectives)."""
+    from jax.sharding import PartitionSpec as P
+    f2 = feats.reshape(-1, feats.shape[-1]).astype(jnp.float32)
+    t2 = targets.reshape(-1)
+    v2 = (valid.reshape(-1).astype(jnp.float32) if valid is not None
+          else jnp.ones((f2.shape[0],), jnp.float32))
+    # Rows shard over the batch axes MINUS "model" (which carries labels).
+    # With backbone_tp=False the model axis is part of the batch axes for
+    # the backbone; the feats all-gather over it happens here, at the head
+    # boundary — tokens x d, ~8 MB — instead of 2 ARs/layer (SSPerf q1).
+    rows = tuple(a for a in batch_axes if a != "model") or None
+    Wf = W.astype(jnp.float32)
+
+    def chunk_loss(f_c, t_c, v_c):
+        # Gather rows over `model` BEFORE the dot: f_c arrives sharded over
+        # ALL batch axes (incl. model when backbone_tp=False); letting GSPMD
+        # reshard z itself replicates the whole (c, Vp) block per chunk
+        # (40 GB/step measured — SSPerf q2).
+        f_c = _constrain(f_c, mesh, P(rows, None))
+        z = f_c @ Wf.T                                  # (c, Vp) label-sharded
+        z = _constrain(z, mesh, P(rows, "model"))
+        tmask = jax.lax.broadcasted_iota(jnp.int32, z.shape, 1) == t_c[:, None]
+        z_y = jnp.sum(jnp.where(tmask, z, 0.0), axis=-1)
+        neg = jnp.maximum(1.0 + z, 0.0)
+        neg_sum = jnp.sum(neg * neg, axis=-1)           # every label negative
+        neg_y = jnp.maximum(1.0 + z_y, 0.0)
+        pos_y = jnp.maximum(1.0 - z_y, 0.0)
+        per_tok = neg_sum - neg_y * neg_y + pos_y * pos_y
+        return jnp.sum(per_tok * v_c)
+
+    n = f2.shape[0]
+    c = _chunked_rows(n)
+    if c < n:
+        def body(acc, xs):
+            return acc + jax.checkpoint(chunk_loss)(*xs), None
+        nc = n // c
+        total, _ = jax.lax.scan(
+            body, jnp.zeros((), jnp.float32),
+            (f2.reshape(nc, c, -1), t2.reshape(nc, c), v2.reshape(nc, c)))
+    else:
+        total = chunk_loss(f2, t2, v2)
+    denom = jnp.maximum(jnp.sum(v2), 1.0) if valid is not None else n
+    l2 = cfg.ovr_reg * jnp.sum(Wf ** 2)
+    return cfg.ovr_C * total / denom + l2
+
+
+def softmax_loss_from_feats(W: Array, feats: Array, targets: Array,
+                            valid: Optional[Array], *, mesh=None,
+                            batch_axes=()) -> Array:
+    """Baseline softmax-CE head, token-chunked like the OvR head. Note the
+    logsumexp needs max+sum reductions over the label-sharded axis — the
+    collectives the DiSMEC head does not have."""
+    from jax.sharding import PartitionSpec as P
+    f2 = feats.reshape(-1, feats.shape[-1]).astype(jnp.float32)
+    t2 = targets.reshape(-1)
+    v2 = (valid.reshape(-1).astype(jnp.float32) if valid is not None
+          else jnp.ones((f2.shape[0],), jnp.float32))
+    rows = tuple(a for a in batch_axes if a != "model") or None
+    Wf = W.astype(jnp.float32)
+
+    def chunk_nll(f_c, t_c, v_c):
+        f_c = _constrain(f_c, mesh, P(rows, None))
+        z = f_c @ Wf.T
+        z = _constrain(z, mesh, P(rows, "model"))
+        tmask = jax.lax.broadcasted_iota(jnp.int32, z.shape, 1) == t_c[:, None]
+        logz = jax.nn.logsumexp(z, axis=-1)
+        z_y = jnp.sum(jnp.where(tmask, z, 0.0), axis=-1)
+        return jnp.sum((logz - z_y) * v_c)
+
+    n = f2.shape[0]
+    c = _chunked_rows(n)
+    if c < n:
+        def body(acc, xs):
+            return acc + jax.checkpoint(chunk_nll)(*xs), None
+        nc = n // c
+        total, _ = jax.lax.scan(
+            body, jnp.zeros((), jnp.float32),
+            (f2.reshape(nc, c, -1), t2.reshape(nc, c), v2.reshape(nc, c)))
+    else:
+        total = chunk_nll(f2, t2, v2)
+    denom = jnp.maximum(jnp.sum(v2), 1.0) if valid is not None else n
+    return total / denom
+
+
+# ---------------------------------------------------------------------------
+# Serving: cache init, prefill, one-token decode
+# ---------------------------------------------------------------------------
+
+def _mixer_state_init(cfg: ArchConfig, kind: str, B: int):
+    if kind == "mlstm":
+        return ssm.mlstm_init_state(cfg, B)
+    if kind == "slstm":
+        return ssm.slstm_init_state(cfg, B)
+    if kind == "hybrid":
+        return ssm.mamba_init_state(cfg, B, cfg.d_model)
+    return None
+
+
+def decode_cache_len(cfg: ArchConfig, seq_len: int, *, use_swa: bool) -> int:
+    """Uniform per-layer cache length. Pure-SWA stacks (mixtral; dense --swa)
+    ring-buffer at `window`; stacks with any global layer (hymba) allocate
+    full length (the window mask still applies per layer)."""
+    if cfg.sliding_window and use_swa and not cfg.global_attn_layers:
+        return min(cfg.sliding_window, seq_len)
+    return seq_len
+
+
+def init_cache(cfg: ArchConfig, B: int, seq_len: int, *, use_swa: bool,
+               dtype=jnp.bfloat16) -> dict:
+    """Serving cache pytree, stacked over layers for scanned stacks."""
+    t_eff = decode_cache_len(cfg, seq_len, use_swa=use_swa)
+    cache: dict = {}
+    L = cfg.n_layers
+    if cfg.family == "ssm":
+        cache["states"] = [
+            _mixer_state_init(cfg, block_kind(cfg, i), B) for i in range(L)]
+        return cache
+    shape = (L, B, t_eff, cfg.n_kv_heads, cfg.head_dim)
+    cache["k"] = jnp.zeros(shape, dtype)
+    cache["v"] = jnp.zeros(shape, dtype)
+    if cfg.family == "hybrid":
+        st = _mixer_state_init(cfg, "hybrid", B)
+        cache["ssm"] = jax.tree.map(
+            lambda a: jnp.zeros((L,) + a.shape, a.dtype), st)
+    return cache
+
+
+def _decode_block(cfg: ArchConfig, blk: dict, kind: str, x: Array,
+                  positions: Array, window: Array, kc, vc, sst, pos, *,
+                  mesh=None, batch_axes=()):
+    """One decode block: x (B, 1, d). Returns (x, kc, vc, sst, aux)."""
+    aux = jnp.zeros((), jnp.float32)
+    h = layers.apply_norm(cfg, blk["norm1"], x)
+    if kind in ("attn", "hybrid"):
+        eff = jnp.where(window > 0, window, jnp.int32(2 ** 30))
+        a, kc, vc = _attention_decode_dyn(
+            cfg, blk["attn"], h, positions, kc, vc, pos, eff)
+        if kind == "hybrid":
+            m, sst = ssm.mamba_decode(cfg, blk["mamba"], h, sst, cfg.d_model)
+            mix = 0.5 * (a + m)
+        else:
+            mix = a
+    elif kind == "mlstm":
+        mix, sst = ssm.mlstm_decode(cfg, blk["mixer"], h, sst)
+    elif kind == "slstm":
+        mix, sst = ssm.slstm_decode(cfg, blk["mixer"], h, sst)
+    else:
+        raise ValueError(kind)
+    x = x + mix
+    if cfg.d_ff > 0:
+        h2 = layers.apply_norm(cfg, blk["norm2"], x)
+        if cfg.family == "moe":
+            out, aux = moe.moe_ffn(cfg, blk["moe"], h2, mesh=mesh,
+                                   batch_axes=batch_axes)
+        else:
+            out = layers.mlp(blk["mlp"], h2, cfg.act)
+        x = x + out
+    return x, kc, vc, sst, aux
+
+
+def _attention_decode_dyn(cfg: ArchConfig, p: dict, x: Array,
+                          positions: Array, k_cache, v_cache, pos, eff):
+    """attention_decode with a traced window scalar `eff` (2^30 = full)."""
+    B = x.shape[0]
+    T_max = k_cache.shape[1]
+    q, k, v = layers._qkv(cfg, p, x, positions)
+    slot = pos % T_max
+    k_cache = jax.lax.dynamic_update_slice(
+        k_cache, k.astype(k_cache.dtype), (0, slot, 0, 0))
+    v_cache = jax.lax.dynamic_update_slice(
+        v_cache, v.astype(v_cache.dtype), (0, slot, 0, 0))
+    slots = jnp.arange(T_max)
+    age = (pos - slots) % T_max
+    abs_pos = pos - age
+    valid = (abs_pos >= 0) & (abs_pos > pos - eff) & (abs_pos <= pos)
+    mask = valid[None, None, None, None, :]
+    out = layers._sdpa(cfg, q, k_cache, v_cache, mask)
+    return out @ p["wo"], k_cache, v_cache
+
+
+def decode_step(cfg: ArchConfig, params: dict, cache: dict, tokens: Array,
+                pos: Array, *, mesh=None, batch_axes=(), use_swa: bool = False,
+                top_k: int = 5):
+    """serve_step: ONE new token (B, 1) against the cache at position `pos`.
+    Returns (topk_vals, topk_idx, logits_shape_marker, new_cache) — the top-k
+    is the DiSMEC distributed-prediction merge over the label-sharded head.
+    """
+    B = tokens.shape[0]
+    x = jnp.take(params["embed"], tokens, axis=0)              # (B, 1, d)
+    if mesh is not None:
+        # Same as prefill: keep the request batch sharded over `data` after
+        # the vocab-sharded embedding gather (see EXPERIMENTS.md SSPerf).
+        from jax.sharding import PartitionSpec as P
+        x = _constrain(x, mesh, P(batch_axes or None, None, None))
+    positions = jnp.broadcast_to(pos, (B, 1)).astype(jnp.int32)
+    wins = layer_windows(cfg, use_swa=use_swa)
+    new_cache = dict(cache)
+
+    if cfg.family == "ssm":
+        aux = 0.0
+        states = []
+        for i, blk in enumerate(params["blocks"]):
+            kind = block_kind(cfg, i)
+            x, _, _, sst, _ = _decode_block(
+                cfg, blk, kind, x, positions, wins[i], None, None,
+                cache["states"][i], pos, mesh=mesh, batch_axes=batch_axes)
+            states.append(sst)
+        new_cache["states"] = states
+    else:
+        kind = block_kind(cfg, 0)
+        has_ssm = cfg.family == "hybrid"
+
+        def body(carry, xs):
+            xx = carry
+            if has_ssm:
+                blk, win, kc, vc, sst = xs
+            else:
+                blk, win, kc, vc = xs
+                sst = None
+            xx, kc, vc, sst, _ = _decode_block(
+                cfg, blk, kind, xx, positions, win, kc, vc, sst, pos,
+                mesh=mesh, batch_axes=batch_axes)
+            ys = (kc, vc, sst) if has_ssm else (kc, vc)
+            return xx, ys
+
+        xs = (params["blocks"], wins, cache["k"], cache["v"])
+        if has_ssm:
+            xs = xs + (cache["ssm"],)
+        x, ys = jax.lax.scan(body, x, xs)
+        new_cache["k"], new_cache["v"] = ys[0], ys[1]
+        if has_ssm:
+            new_cache["ssm"] = ys[2]
+
+    x = layers.apply_norm(cfg, params["final_norm"], x)
+    W = head_weight(cfg, params)
+    logits = (x[:, 0].astype(jnp.float32) @ W.T.astype(jnp.float32))
+    vals, idx = jax.lax.top_k(logits, top_k)   # DiSMEC §2.2.1 distributed merge
+    return vals, idx, new_cache
+
+
+def prefill(cfg: ArchConfig, params: dict, tokens: Array,
+            prefix: Optional[Array] = None, *, mesh=None, batch_axes=(),
+            use_swa: bool = False):
+    """Full-sequence forward that fills the serving cache and returns the
+    last-position top-k. Cache length == prompt length (decode continues by
+    ring/extend policy of the caller)."""
+    x = jnp.take(params["embed"], tokens, axis=0)
+    if prefix is not None:
+        x = jnp.concatenate([prefix.astype(x.dtype), x], axis=1)
+    if mesh is not None:
+        # The vocab-sharded embedding gather loses the batch sharding; without
+        # this constraint GSPMD replicates the whole prefill over `data`
+        # (16x flops — measured in EXPERIMENTS.md SSPerf iteration 1).
+        from jax.sharding import PartitionSpec as P
+        x = _constrain(x, mesh, P(batch_axes or None, None, None))
+    B, T, _ = x.shape
+    positions = jnp.broadcast_to(jnp.arange(T, dtype=jnp.int32), (B, T))
+    wins = layer_windows_static(cfg, use_swa=use_swa)
+    t_eff = decode_cache_len(cfg, T, use_swa=use_swa)
+
+    def block_with_cache(blk, xx, win, kind):
+        """win is a STATIC python int (0 = full attention)."""
+        h = layers.apply_norm(cfg, blk["norm1"], xx)
+        aux = jnp.zeros((), jnp.float32)
+        kc = vc = sst = None
+        if kind in ("attn", "hybrid"):
+            q, k, v = layers._qkv(cfg, blk["attn"], h, positions)
+            if T > layers.DENSE_ATTN_MAX_T:
+                if win and win < T:
+                    ctx = layers.banded_attention(cfg, q, k, v, window=win)
+                else:
+                    ctx = layers.blockwise_attention(cfg, q, k, v,
+                                                     window=win or None)
+            else:
+                ctx = layers._sdpa(cfg, q, k, v,
+                                   layers.causal_mask(T, T,
+                                                      window=win or None))
+            kc, vc = k[:, T - t_eff:], v[:, T - t_eff:]
+            if kind == "hybrid":
+                # Fused dual-head projection: one TP all-reduce (SSPerf 3b).
+                y, sst = ssm.mamba(cfg, blk["mamba"], h, cfg.d_model,
+                                   return_state=True, project=False)
+                w_cat = jnp.concatenate([blk["attn"]["wo"],
+                                         blk["mamba"]["w_out"]], axis=0)
+                mixed = jnp.concatenate([ctx, y.astype(ctx.dtype)], axis=-1)
+                mix = (0.5 * mixed) @ w_cat
+            else:
+                mix = ctx @ blk["attn"]["wo"]
+        elif kind == "mlstm":
+            mix, sst = ssm.mlstm(cfg, blk["mixer"], h, return_state=True)
+        elif kind == "slstm":
+            mix, sst = ssm.slstm(cfg, blk["mixer"], h, return_state=True)
+        xx = xx + mix
+        if cfg.d_ff > 0:
+            h2 = layers.apply_norm(cfg, blk["norm2"], xx)
+            if cfg.family == "moe":
+                out, aux = moe.moe_ffn(cfg, blk["moe"], h2, mesh=mesh,
+                                       batch_axes=batch_axes)
+            else:
+                out = layers.mlp(blk["mlp"], h2, cfg.act)
+            xx = xx + out
+        return xx, kc, vc, sst
+
+    cache: dict = {}
+    if cfg.family == "ssm":
+        states = []
+        for i, blk in enumerate(params["blocks"]):
+            x, _, _, sst = block_with_cache(blk, x, wins[i], block_kind(cfg, i))
+            states.append(sst)
+        cache["states"] = states
+    else:
+        kind = block_kind(cfg, 0)
+        # One scan per same-window segment (see forward); per-segment
+        # cache stacks concatenate back to the (n_layers, ...) layout.
+        seg_ys = []
+        for s, e, win in window_segments(cfg, use_swa=use_swa):
+            seg = jax.tree.map(lambda a: a[s:e], params["blocks"])
+
+            def body(xx, blk, _win=win):
+                xx, kc, vc, sst = block_with_cache(blk, xx, _win, kind)
+                ys = (kc.astype(jnp.bfloat16), vc.astype(jnp.bfloat16))
+                if sst is not None:
+                    ys = ys + (sst,)
+                return xx, ys
+
+            x, ys = jax.lax.scan(body, x, seg)
+            seg_ys.append(ys)
+        ys = jax.tree.map(lambda *a: jnp.concatenate(a, axis=0), *seg_ys)
+        cache["k"], cache["v"] = ys[0], ys[1]
+        if cfg.family == "hybrid":
+            cache["ssm"] = ys[2]
+
+    x = layers.apply_norm(cfg, params["final_norm"], x)
+    W = head_weight(cfg, params)
+    logits = x[:, -1].astype(jnp.float32) @ W.T.astype(jnp.float32)
+    vals, idx = jax.lax.top_k(logits, 5)
+    return vals, idx, cache
+
+
+def train_loss(cfg: ArchConfig, params: dict, batch: dict, *, mesh=None,
+               batch_axes=()) -> tuple[Array, dict]:
+    """batch: tokens (B,T), targets (B,T), valid (B,T) [+ prefix (B,P,d)]."""
+    feats, aux = forward(cfg, params, batch["tokens"],
+                         prefix=batch.get("prefix"), mesh=mesh,
+                         batch_axes=batch_axes)
+    if "prefix" in batch and batch["prefix"] is not None:
+        feats = feats[:, batch["prefix"].shape[1]:]
+    W = head_weight(cfg, params)
+    if cfg.head_type == "dismec":
+        loss = ovr_loss_from_feats(cfg, W, feats, batch["targets"],
+                                   batch.get("valid"), mesh=mesh,
+                                   batch_axes=batch_axes)
+    else:
+        loss = softmax_loss_from_feats(W, feats, batch["targets"],
+                                       batch.get("valid"), mesh=mesh,
+                                       batch_axes=batch_axes)
+    total = loss + cfg.router_aux_coef * aux
+    return total, {"loss": loss, "aux": aux}

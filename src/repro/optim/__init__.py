@@ -1,0 +1,7 @@
+"""Optimizer substrate (no optax offline): AdamW + schedules + clipping."""
+
+from repro.optim.adamw import AdamWState, adamw_init, adamw_update
+from repro.optim.schedules import cosine_schedule, linear_warmup_cosine
+
+__all__ = ["AdamWState", "adamw_init", "adamw_update", "cosine_schedule",
+           "linear_warmup_cosine"]

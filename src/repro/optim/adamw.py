@@ -1,0 +1,66 @@
+"""AdamW with decoupled weight decay and global-norm clipping.
+
+Moments are stored in f32 regardless of param dtype (bf16 training needs f32
+optimizer state); state pytrees mirror the param tree, so the param
+PartitionSpecs (models/sharding.py) apply verbatim to the state — the
+optimizer is FSDP-sharded for free.
+"""
+
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+Array = jax.Array
+
+
+class AdamWState(NamedTuple):
+    step: Array
+    mu: dict
+    nu: dict
+
+
+def adamw_init(params) -> AdamWState:
+    zeros = lambda p: jnp.zeros(p.shape, jnp.float32)
+    return AdamWState(step=jnp.zeros((), jnp.int32),
+                      mu=jax.tree.map(zeros, params),
+                      nu=jax.tree.map(zeros, params))
+
+
+def global_norm(tree) -> Array:
+    leaves = jax.tree.leaves(tree)
+    return jnp.sqrt(sum(jnp.sum(jnp.square(x.astype(jnp.float32)))
+                        for x in leaves))
+
+
+def adamw_update(params, grads, state: AdamWState, lr: Array, *,
+                 b1: float = 0.9, b2: float = 0.95, eps: float = 1e-8,
+                 weight_decay: float = 0.1, clip_norm: float = 1.0):
+    """Returns (new_params, new_state, metrics)."""
+    gnorm = global_norm(grads)
+    scale = jnp.minimum(1.0, clip_norm / jnp.maximum(gnorm, 1e-9))
+    step = state.step + 1
+    c1 = 1.0 - b1 ** step.astype(jnp.float32)
+    c2 = 1.0 - b2 ** step.astype(jnp.float32)
+
+    def upd(p, g, mu, nu):
+        g = g.astype(jnp.float32) * scale
+        mu2 = b1 * mu + (1.0 - b1) * g
+        nu2 = b2 * nu + (1.0 - b2) * g * g
+        mhat = mu2 / c1
+        vhat = nu2 / c2
+        delta = mhat / (jnp.sqrt(vhat) + eps)
+        decay = weight_decay * p.astype(jnp.float32) if p.ndim >= 2 else 0.0
+        p2 = p.astype(jnp.float32) - lr * (delta + decay)
+        return p2.astype(p.dtype), mu2, nu2
+
+    flat = jax.tree.map(upd, params, grads, state.mu, state.nu)
+    new_params = jax.tree.map(lambda t: t[0], flat,
+                              is_leaf=lambda x: isinstance(x, tuple))
+    new_mu = jax.tree.map(lambda t: t[1], flat,
+                          is_leaf=lambda x: isinstance(x, tuple))
+    new_nu = jax.tree.map(lambda t: t[2], flat,
+                          is_leaf=lambda x: isinstance(x, tuple))
+    return new_params, AdamWState(step, new_mu, new_nu), {"grad_norm": gnorm}

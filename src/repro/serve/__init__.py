@@ -1,0 +1,3 @@
+from repro.serve.engine import generate, serve_batch
+
+__all__ = ["generate", "serve_batch"]

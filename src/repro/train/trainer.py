@@ -1,0 +1,102 @@
+"""Training loop: value_and_grad + AdamW + gradient accumulation.
+
+`make_train_step` builds the jittable step the dry-run lowers for train_4k:
+  * microbatching — global batch split into `accum` microbatches scanned with
+    f32 gradient accumulation (memory: one microbatch of activations at a
+    time; required for the 33B/141B assigned configs, DESIGN.md §5);
+  * the DiSMEC OvR head loss needs no logits collective (core/head.py) —
+    the gradient all-reduce over (pod, data) is inserted by GSPMD from the
+    FSDP in_shardings.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Any, Callable, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.optim import AdamWState, adamw_init, adamw_update
+
+Array = jax.Array
+
+
+@dataclasses.dataclass
+class TrainState:
+    params: Any
+    opt: AdamWState
+    step: Array
+
+
+def init_train_state(params) -> TrainState:
+    return TrainState(params=params, opt=adamw_init(params),
+                      step=jnp.zeros((), jnp.int32))
+
+
+def make_train_step(model, *, lr_fn: Callable, mesh=None, batch_axes=(),
+                    accum: int = 1, weight_decay: float = 0.1,
+                    clip_norm: float = 1.0):
+    """Returns train_step(params, opt, step, batch) -> (params, opt, metrics).
+
+    With accum > 1, every leaf of `batch` must have leading dims
+    (accum, micro_batch, ...).
+    """
+
+    def loss_fn(params, batch):
+        loss, metrics = model.train_loss(params, batch, mesh=mesh,
+                                         batch_axes=batch_axes)
+        return loss, metrics
+
+    grad_fn = jax.value_and_grad(loss_fn, has_aux=True)
+
+    def train_step(params, opt, step, batch):
+        if accum == 1:
+            (loss, metrics), grads = grad_fn(params, batch)
+        else:
+            def micro(carry, mb):
+                g_acc, l_acc = carry
+                (l, _), g = grad_fn(params, mb)
+                g_acc = jax.tree.map(
+                    lambda a, b: a + b.astype(jnp.float32), g_acc, g)
+                return (g_acc, l_acc + l), None
+
+            g0 = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32),
+                              params)
+            (grads, loss), _ = jax.lax.scan(micro, (g0, jnp.zeros(())), batch)
+            grads = jax.tree.map(lambda g: g / accum, grads)
+            loss = loss / accum
+            metrics = {}
+        lr = lr_fn(step)
+        params, opt, om = adamw_update(params, grads, opt, lr,
+                                       weight_decay=weight_decay,
+                                       clip_norm=clip_norm)
+        out = {"loss": loss, "lr": lr, **om}
+        out.update({k: v for k, v in metrics.items() if k != "loss"})
+        return params, opt, out
+
+    return train_step
+
+
+def train_loop(model, params, batches, *, steps: int, lr: float = 3e-4,
+               warmup: int = 20, log_every: int = 10, mesh=None,
+               batch_axes=()) -> tuple[Any, list[dict]]:
+    """Simple single-host loop used by examples/ and smoke tests."""
+    from repro.optim.schedules import linear_warmup_cosine
+    lr_fn = linear_warmup_cosine(lr, warmup, steps)
+    step_fn = jax.jit(make_train_step(model, lr_fn=lr_fn, mesh=mesh,
+                                      batch_axes=batch_axes))
+    opt = adamw_init(params)
+    history = []
+    step = jnp.zeros((), jnp.int32)
+    for i in range(steps):
+        batch = next(batches)
+        batch = {k: jnp.asarray(v) for k, v in batch.items()}
+        params, opt, metrics = step_fn(params, opt, step, batch)
+        step = step + 1
+        if i % log_every == 0 or i == steps - 1:
+            rec = {k: float(v) for k, v in metrics.items()}
+            rec["step"] = i
+            history.append(rec)
+    return params, history

@@ -1,0 +1,100 @@
+"""Attention path equivalences: dense SDPA == blockwise online-softmax ==
+banded (block-skipping) sliding window, across GQA configs."""
+
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.models import layers
+
+CFG = ArchConfig(name="t", family="dense", n_layers=1, d_model=64,
+                 n_heads=4, n_kv_heads=2, d_ff=128, vocab=128,
+                 dtype="float32")
+
+
+def _qkv(B, T, H, KV, hd, seed=0):
+    rng = np.random.default_rng(seed)
+    q = jnp.asarray(rng.normal(size=(B, T, H, hd)), jnp.float32)
+    k = jnp.asarray(rng.normal(size=(B, T, KV, hd)), jnp.float32)
+    v = jnp.asarray(rng.normal(size=(B, T, KV, hd)), jnp.float32)
+    return q, k, v
+
+
+def _dense_ref(q, k, v, window=None):
+    B, T, H, hd = q.shape
+    mask = layers.causal_mask(T, T, window=window)
+    return layers._sdpa(CFG, q, k, v, mask)
+
+
+@pytest.mark.parametrize("T", [256, 1000])
+def test_blockwise_equals_dense(T):
+    q, k, v = _qkv(2, T, 4, 2, 16)
+    out_b = layers.blockwise_attention(CFG, q, k, v, q_chunk=128,
+                                       kv_chunk=128)
+    out_d = _dense_ref(q, k, v)
+    np.testing.assert_allclose(np.asarray(out_b), np.asarray(out_d),
+                               rtol=2e-4, atol=2e-4)
+
+
+@pytest.mark.parametrize("T,window", [(512, 128), (1024, 256), (640, 100)])
+def test_banded_equals_masked_dense(T, window):
+    """banded_attention (skips KV blocks) == dense attention with the same
+    sliding-window mask."""
+    q, k, v = _qkv(2, T, 4, 2, 16, seed=T)
+    out_band = layers.banded_attention(CFG, q, k, v, window=window,
+                                       q_chunk=128)
+    out_d = _dense_ref(q, k, v, window=window)
+    np.testing.assert_allclose(np.asarray(out_band), np.asarray(out_d),
+                               rtol=2e-4, atol=2e-4)
+
+
+def test_banded_equals_blockwise_masked():
+    T, window = 2048, 512
+    q, k, v = _qkv(1, T, 4, 2, 16, seed=7)
+    out_band = layers.banded_attention(CFG, q, k, v, window=window)
+    out_blk = layers.blockwise_attention(CFG, q, k, v, window=window)
+    np.testing.assert_allclose(np.asarray(out_band), np.asarray(out_blk),
+                               rtol=2e-4, atol=2e-4)
+
+
+def test_banded_with_window_geq_T_is_full_causal():
+    """window >= T makes the band the whole (causal) history: banded must
+    equal plain causal attention."""
+    T = 512
+    q, k, v = _qkv(1, T, 4, 2, 16, seed=11)
+    out_band = layers.banded_attention(CFG, q, k, v, window=T, q_chunk=128)
+    out_full = _dense_ref(q, k, v, window=None)
+    np.testing.assert_allclose(np.asarray(out_band), np.asarray(out_full),
+                               rtol=2e-4, atol=2e-4)
+
+
+@pytest.mark.parametrize("qc", [64, 128, 256])
+def test_banded_chunk_size_invariance(qc):
+    """The q-chunk size is an implementation knob: results must not
+    depend on it."""
+    T, window = 512, 160
+    q, k, v = _qkv(1, T, 4, 2, 16, seed=13)
+    out = layers.banded_attention(CFG, q, k, v, window=window, q_chunk=qc)
+    ref = _dense_ref(q, k, v, window=window)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               rtol=2e-4, atol=2e-4)
+
+
+def test_window_segments():
+    from repro.configs.registry import get_config
+    from repro.models.transformer import window_segments
+
+    hymba = get_config("hymba-1.5b")
+    segs = window_segments(hymba, use_swa=True)
+    # global at 0, 15, 31 -> 5 segments
+    assert segs == [(0, 1, 0), (1, 15, 1024), (15, 16, 0),
+                    (16, 31, 1024), (31, 32, 0)]
+    mixtral = get_config("mixtral-8x22b")
+    segs_m = window_segments(mixtral, use_swa=True)
+    assert len(segs_m) == 1 and segs_m[0][2] == mixtral.sliding_window
+
+    dense = get_config("qwen3-14b")
+    assert window_segments(dense, use_swa=False) == [(0, 40, 0)]

@@ -1,0 +1,60 @@
+"""Synthetic XMC generator invariants (hypothesis) + LM pipeline."""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.data.xmc import (PAPER_LIKE, load_paper_like, make_xmc_dataset,
+                            power_law_sizes)
+
+
+@given(L=st.integers(8, 200), n1=st.integers(10, 500),
+       beta=st.floats(0.5, 1.5))
+@settings(max_examples=30, deadline=None)
+def test_power_law_sizes_shape(L, n1, beta):
+    sizes = power_law_sizes(L, n1, beta)
+    assert sizes.shape == (L,)
+    assert (sizes >= 1).all()
+    assert (np.diff(sizes) <= 0).all()          # monotone decreasing in rank
+    assert sizes[0] == max(n1, 1)
+
+
+@given(seed=st.integers(0, 20))
+@settings(max_examples=8, deadline=None)
+def test_dataset_invariants(seed):
+    d = make_xmc_dataset(n_train=200, n_test=50, n_features=768,
+                         n_labels=48, seed=seed)
+    # Every train label has >= 1 positive; every instance >= 1 label.
+    assert (d.Y_train.sum(axis=0) >= 1).all()
+    assert (d.Y_train.sum(axis=1) >= 1).all()
+    assert (d.Y_test.sum(axis=1) >= 1).all()
+    # Rows are L2-normalized, features sparse.
+    norms = np.linalg.norm(d.X_train, axis=1)
+    np.testing.assert_allclose(norms, 1.0, atol=1e-3)
+    assert d.stats()["feat_density"] < 0.1
+
+
+def test_power_law_tail_dominates():
+    """Paper Fig. 1: a large fraction of labels are tail labels."""
+    d = make_xmc_dataset(n_train=1000, n_test=100, n_features=4096,
+                         n_labels=256, beta=1.1, seed=0)
+    assert d.stats()["tail_leq5"] > 0.4
+
+
+def test_paper_like_registry():
+    for key in PAPER_LIKE:
+        d = load_paper_like(key, seed=0)
+        assert d.name == key
+        assert d.n_labels == PAPER_LIKE[key]["n_labels"]
+
+
+def test_lm_pipeline_batches():
+    from repro.data.lm import make_lm_batch_iterator
+    it = make_lm_batch_iterator(vocab=512, seq_len=32, batch=4, seed=0)
+    b1 = next(it)
+    b2 = next(it)
+    assert b1["tokens"].shape == (4, 32)
+    assert b1["targets"].shape == (4, 32)
+    assert (np.asarray(b1["tokens"]) != np.asarray(b2["tokens"])).any()
+    assert (np.asarray(b1["tokens"]) >= 0).all()
+    assert (np.asarray(b1["tokens"]) < 512).all()

@@ -1,0 +1,77 @@
+"""End-to-end DiSMEC (Algorithm 1) behaviour on synthetic power-law XMC."""
+
+import numpy as np
+import pytest
+
+import jax.numpy as jnp
+
+from repro.core.dismec import DiSMECConfig, DiSMECModel, signs_from_labels, train
+from repro.core.prediction import evaluate, predict_topk
+
+
+def test_signs_from_labels():
+    Y = jnp.asarray([[1, 0], [0, 1], [1, 1]])
+    S = signs_from_labels(Y)
+    assert S.shape == (2, 3)
+    np.testing.assert_array_equal(np.asarray(S),
+                                  [[1, -1, 1], [-1, 1, 1]])
+
+
+def test_train_accuracy(dismec_model, xmc_small_jnp):
+    """The paper's central claim scaled down: OvR + squared hinge reaches
+    high P@1 on power-law data where signature features exist."""
+    _, _, Xte, Yte = xmc_small_jnp
+    _, idx = predict_topk(Xte, dismec_model.W, 5)
+    ev = evaluate(Yte, idx)
+    assert ev["P@1"] > 0.90, ev
+    assert ev["nDCG@5"] > 0.90, ev
+
+
+def test_model_is_pruned(dismec_model):
+    """Step 7 ran: no weight survives in the open interval (0, delta)."""
+    W = np.asarray(dismec_model.W)
+    nz = W[W != 0.0]
+    assert (np.abs(nz) >= dismec_model.delta).all()
+
+
+def test_label_batching_invariance(xmc_small_jnp):
+    """Algorithm 1's outer batch loop must not change the solution: training
+    with label_batch=16 and label_batch=64 gives the same W (per-label
+    problems are independent)."""
+    X, Y, _, _ = xmc_small_jnp
+    m1 = train(X, Y, DiSMECConfig(label_batch=64, eps=1e-3))
+    m2 = train(X, Y, DiSMECConfig(label_batch=16, eps=1e-3))
+    np.testing.assert_allclose(np.asarray(m1.W), np.asarray(m2.W),
+                               rtol=1e-2, atol=2e-3)
+
+
+def test_size_accounting(dismec_model):
+    dense = dismec_model.dense_size_bytes()
+    sparse = dismec_model.size_bytes()
+    assert dense == 64 * 1024 * 4
+    assert sparse == dismec_model.nnz * 8
+    # Sparse (value, index) storage wins once density < 50% — the paper's
+    # regime (0.5-4% density). At this toy scale density is higher; check
+    # the formula crossover instead of the raw inequality.
+    density = dismec_model.nnz / dismec_model.W.size
+    assert (sparse < dense) == (density < 0.5)
+
+
+def test_pallas_path_matches_jnp(xmc_small_jnp):
+    """use_pallas=True routes obj/grad + Hv through the Pallas kernels
+    (interpret mode on CPU) and must land on the same model."""
+    X, Y, _, _ = xmc_small_jnp
+    m_jnp = train(X, Y, DiSMECConfig(label_batch=64, eps=1e-2))
+    m_pal = train(X, Y, DiSMECConfig(label_batch=64, eps=1e-2,
+                                     use_pallas=True))
+    # Same support and near-identical weights.
+    np.testing.assert_allclose(np.asarray(m_jnp.W), np.asarray(m_pal.W),
+                               rtol=5e-2, atol=5e-3)
+
+
+def test_delta_zero_keeps_everything(xmc_small_jnp):
+    X, Y, _, _ = xmc_small_jnp
+    m = train(X, Y, DiSMECConfig(label_batch=64, delta=0.0))
+    # With delta=0, prune() is the identity: many small weights survive.
+    W = np.asarray(m.W)
+    assert (np.abs(W[W != 0.0]) < 0.01).any()

@@ -1,0 +1,69 @@
+"""Ranking metrics (paper §3.2) and top-k prediction — exact values +
+hypothesis properties."""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+import jax.numpy as jnp
+
+from repro.core.prediction import (evaluate, ndcg_at_k, precision_at_k,
+                                   predict_scores, predict_topk)
+
+
+def test_precision_exact():
+    # 2 instances, 4 labels. Predictions rank label ids [0,1,2].
+    Y = jnp.asarray([[1, 0, 1, 0],
+                     [0, 1, 0, 0]], jnp.float32)
+    topk = jnp.asarray([[0, 1, 2],
+                        [0, 1, 2]])
+    # instance 0: hits at rank 1 and 3 -> P@1=1, P@3=2/3
+    # instance 1: hit at rank 2       -> P@1=0, P@3=1/3
+    assert float(precision_at_k(Y, topk, 1)) == pytest.approx(0.5)
+    assert float(precision_at_k(Y, topk, 3)) == pytest.approx(0.5)
+
+
+def test_ndcg_exact():
+    """Paper's point about nDCG: rank-1 hit scores higher than rank-k hit."""
+    Y = jnp.asarray([[1, 0, 0, 0]], jnp.float32)
+    hit_first = jnp.asarray([[0, 1, 2]])
+    hit_last = jnp.asarray([[1, 2, 0]])
+    n_first = float(ndcg_at_k(Y, hit_first, 3))
+    n_last = float(ndcg_at_k(Y, hit_last, 3))
+    assert n_first == pytest.approx(1.0)       # only positive, found at rank 1
+    assert 0.0 < n_last < n_first              # found at rank 3: discounted
+    assert n_last == pytest.approx(1.0 / np.log2(4.0), rel=1e-5)
+
+
+def test_p_at_k_rank_insensitive():
+    """P@5 is the same wherever inside the top-5 the hit sits (paper §3.2)."""
+    Y = jnp.asarray([[1, 0, 0, 0, 0, 0]], jnp.float32)
+    for pos in range(5):
+        order = [5 - i for i in range(5)]      # ids 5,4,3,2,1 (no hit)
+        order[pos] = 0                         # put the hit at `pos`
+        p = float(precision_at_k(Y, jnp.asarray([order]), 5))
+        assert p == pytest.approx(0.2)
+
+
+@given(n=st.integers(1, 16), L=st.integers(6, 40), seed=st.integers(0, 99))
+@settings(max_examples=30, deadline=None)
+def test_metric_ranges_and_consistency(n, L, seed):
+    import jax
+
+    rng = np.random.default_rng(seed)
+    Y = jnp.asarray((rng.random((n, L)) < 0.2).astype(np.float32))
+    scores = jnp.asarray(rng.normal(size=(n, L)).astype(np.float32))
+    _, idx = jax.lax.top_k(scores, 5)
+    ev = evaluate(Y, idx)
+    for k in (1, 3, 5):
+        assert 0.0 <= ev[f"P@{k}"] <= 1.0
+        assert 0.0 <= ev[f"nDCG@{k}"] <= 1.0 + 1e-6
+    assert ev["nDCG@1"] == pytest.approx(ev["P@1"], abs=1e-5)
+
+
+def test_predict_topk_matches_argmax(dismec_model, xmc_small_jnp):
+    _, _, Xte, _ = xmc_small_jnp
+    scores = predict_scores(Xte, dismec_model.W)
+    _, idx = predict_topk(Xte, dismec_model.W, 1)
+    np.testing.assert_array_equal(np.asarray(idx[:, 0]),
+                                  np.asarray(jnp.argmax(scores, axis=1)))

@@ -1,0 +1,81 @@
+"""Delta-pruning and block-sparse conversion — property-based (hypothesis)."""
+
+import numpy as np
+from hypothesis import given, settings, strategies as st
+import hypothesis.extra.numpy as hnp
+
+import jax.numpy as jnp
+
+from repro.core.pruning import (ambiguous_fraction, nnz, prune, sparsity,
+                                to_block_sparse, weight_histogram)
+
+W_STRAT = hnp.arrays(np.float32, hnp.array_shapes(min_dims=2, max_dims=2,
+                                                  min_side=1, max_side=64),
+                     elements=st.floats(-2.0, 2.0, width=32))
+
+
+@given(W=W_STRAT, delta=st.floats(0.0, 0.5))
+@settings(max_examples=60, deadline=None)
+def test_prune_support_invariant(W, delta):
+    """After pruning: every surviving weight has |w| >= delta, every removed
+    weight had |w| < delta, survivors are bit-identical to the input."""
+    Wp = np.asarray(prune(jnp.asarray(W), delta))
+    surv = Wp != 0.0
+    assert (np.abs(Wp[surv]) >= delta).all()
+    np.testing.assert_array_equal(Wp[surv], W[surv])
+    removed = (~surv) & (W != 0.0)
+    assert (np.abs(W[removed]) < delta).all()
+
+
+@given(W=W_STRAT, d1=st.floats(0.0, 0.3), d2=st.floats(0.0, 0.3))
+@settings(max_examples=40, deadline=None)
+def test_prune_monotone_and_idempotent(W, d1, d2):
+    lo, hi = sorted([d1, d2])
+    W = jnp.asarray(W)
+    assert int(nnz(prune(W, hi))) <= int(nnz(prune(W, lo)))
+    Wp = prune(W, hi)
+    np.testing.assert_array_equal(np.asarray(prune(Wp, hi)), np.asarray(Wp))
+
+
+@given(W=W_STRAT, delta=st.floats(0.0, 0.5))
+@settings(max_examples=40, deadline=None)
+def test_sparsity_ambiguous_consistency(W, delta):
+    W = jnp.asarray(W)
+    Wp = prune(W, delta)
+    s = float(sparsity(Wp))
+    assert 0.0 <= s <= 1.0
+    # ambiguous_fraction on the raw W bounds the pruned sparsity from below
+    # (zeros can only come from |w| < delta or pre-existing zeros).
+    assert s >= float(ambiguous_fraction(W, delta)) - 1e-6 or delta == 0.0
+
+
+@given(W=hnp.arrays(np.float32, st.tuples(st.integers(1, 40),
+                                          st.integers(1, 40)),
+                    elements=st.floats(-1.0, 1.0, width=32)),
+       bl=st.sampled_from([4, 8, 16]), bd=st.sampled_from([4, 8, 16]))
+@settings(max_examples=40, deadline=None)
+def test_block_sparse_roundtrip(W, bl, bd):
+    """to_dense(to_block_sparse(W)) == W up to zero padding."""
+    model = to_block_sparse(jnp.asarray(W), (bl, bd))
+    dense = np.asarray(model.to_dense())
+    L, D = W.shape
+    np.testing.assert_array_equal(dense[:L, :D], W)
+    # Padding region must be zero.
+    assert (dense[L:, :] == 0).all() and (dense[:, D:] == 0).all()
+    assert 0.0 <= model.density <= 1.0
+
+
+def test_block_sparse_skips_zero_blocks():
+    W = np.zeros((64, 64), np.float32)
+    W[:16, :16] = 1.0          # exactly one nonzero 16x16 block
+    m = to_block_sparse(jnp.asarray(W), (16, 16))
+    assert m.n_blocks == 1
+    assert m.density == 1 / 16
+
+
+def test_weight_histogram_sums():
+    rng = np.random.default_rng(0)
+    W = jnp.asarray(rng.normal(size=(32, 32)) * 0.05, jnp.float32)
+    counts, edges = weight_histogram(W, bins=41, lim=0.5)
+    assert int(jnp.sum(counts)) <= W.size
+    assert counts.shape[0] == 41 and edges.shape[0] == 42

@@ -1,0 +1,95 @@
+"""End-to-end behaviour of the paper's system (replaces the old placeholder).
+
+The full DiSMEC pipeline: power-law data -> Algorithm 1 (batched TRON +
+Delta-pruning) -> block-sparse serving -> top-k metrics, plus the paper's
+headline claims at test scale.
+"""
+
+import numpy as np
+import pytest
+
+import jax.numpy as jnp
+
+from repro.core.dismec import DiSMECConfig, train
+from repro.core.prediction import evaluate, predict_topk
+from repro.core.pruning import ambiguous_fraction, prune, to_block_sparse
+from repro.kernels.bsr_predict import ops as bsr_ops
+
+
+@pytest.fixture(scope="module")
+def raw_model(xmc_small_jnp):
+    """Unpruned (delta=0) model shared by the claim tests."""
+    X, Y, _, _ = xmc_small_jnp
+    return train(X, Y, DiSMECConfig(delta=0.0, label_batch=64))
+
+
+def test_full_pipeline(xmc_small_jnp):
+    """Data -> train -> prune -> BSR serve -> metrics, all public API."""
+    import jax
+
+    X, Y, Xte, Yte = xmc_small_jnp
+    model = train(X, Y, DiSMECConfig(C=1.0, delta=0.01, label_batch=64))
+
+    # Serving path: block-sparse predict + top-k.
+    bsr = to_block_sparse(model.W, (32, 32))
+    scores = bsr_ops.bsr_predict(Xte, bsr)[:, :model.n_labels]
+    _, idx = jax.lax.top_k(scores, 5)
+    ev = evaluate(Yte, idx)
+    assert ev["P@1"] > 0.90
+
+    # The serving path agrees with dense prediction.
+    _, idx_dense = predict_topk(Xte, model.W, 5)
+    assert (np.asarray(idx) == np.asarray(idx_dense)).mean() > 0.99
+
+
+def test_pruning_is_lossless_at_001(raw_model, xmc_small_jnp):
+    """Paper §2.2.1: Delta=0.01 has no adverse impact on P@k vs Delta=0."""
+    _, _, Xte, Yte = xmc_small_jnp
+    _, idx_raw = predict_topk(Xte, raw_model.W, 5)
+    _, idx_pruned = predict_topk(Xte, prune(raw_model.W, 0.01), 5)
+    p_raw = evaluate(Yte, idx_raw)
+    p_pruned = evaluate(Yte, idx_pruned)
+    for k in ("P@1", "P@3", "P@5"):
+        assert abs(p_raw[k] - p_pruned[k]) < 0.02, (k, p_raw[k], p_pruned[k])
+
+
+def test_ambiguous_weights_dominate(raw_model):
+    """Paper Fig. 2a: a large share of learnt l2 weights are ambiguous
+    (|w| < 0.01). The paper sees 96-99.5% at D ~ 10^6; at our toy D = 1024
+    the background-feature pool is ~1000x smaller so the fraction is far
+    lower — assert the structural effect (a substantial ambiguous mass),
+    scale-calibrated."""
+    frac = float(ambiguous_fraction(raw_model.W, 0.01))
+    assert frac > 0.3, frac
+
+
+def test_larger_delta_degrades(raw_model, xmc_small_jnp):
+    """Paper Fig. 5: Delta >> 0.01 shrinks the model further but costs
+    accuracy."""
+    _, _, Xte, Yte = xmc_small_jnp
+    p, n = {}, {}
+    for delta in (0.01, 0.3):
+        Wp = prune(raw_model.W, delta)
+        _, idx = predict_topk(Xte, Wp, 5)
+        p[delta] = evaluate(Yte, idx)["P@1"]
+        n[delta] = int(jnp.sum(Wp != 0))
+    assert n[0.3] < n[0.01]
+    assert p[0.3] < p[0.01]
+
+
+def test_linear_xmc_is_dismec_head_special_case(xmc_small_jnp):
+    """DESIGN.md §4: with an identity backbone, the DiSMECHead multi-hot
+    objective IS Eq. 2.2 (per-token mean). Gradient descent on it should
+    agree with the TRON model on prediction."""
+    import jax
+
+    from repro.core.head import ovr_multihot_loss
+
+    X, Y, Xte, Yte = xmc_small_jnp
+    W = jnp.zeros((Y.shape[1], X.shape[1]), jnp.float32)
+    loss_fn = lambda w: ovr_multihot_loss(w, X, Y, C=1.0, reg=1.0 / X.shape[0])
+    g_fn = jax.jit(jax.grad(loss_fn))
+    for _ in range(400):
+        W = W - 0.5 * g_fn(W)
+    _, idx = predict_topk(Xte, W, 5)
+    assert evaluate(Yte, idx)["P@1"] > 0.85

@@ -1,0 +1,100 @@
+"""Batched TRON solver: convergence, optimality, and per-label independence."""
+
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import losses
+from repro.core.tron import tron_solve
+
+
+def _fns(X, S, C):
+    obj_grad = lambda W: losses.objective_and_grad(W, X, S, C)
+    hvp = lambda V, act: losses.hessian_vp(V, X, act, C)
+    act = lambda W: losses.active_mask(W, X, S)
+    return obj_grad, hvp, act
+
+
+@pytest.fixture(scope="module")
+def problem():
+    rng = np.random.default_rng(0)
+    L, N, D = 12, 96, 48
+    X = jnp.asarray(rng.normal(size=(N, D)), jnp.float32)
+    S = jnp.asarray(np.sign(rng.normal(size=(L, N))), jnp.float32)
+    return X, S
+
+
+def test_converges_to_tolerance(problem):
+    X, S = problem
+    C = 1.0
+    obj_grad, hvp, act = _fns(X, S, C)
+    L = S.shape[0]
+    res = tron_solve(obj_grad, hvp, act, jnp.zeros((L, X.shape[1])), eps=0.01)
+    assert bool(jnp.all(res.converged))
+    # ||g|| <= eps * ||g0|| (liblinear stopping rule)
+    _, g0 = obj_grad(jnp.zeros((L, X.shape[1])))
+    gn0 = jnp.linalg.norm(g0, axis=-1)
+    assert bool(jnp.all(res.gnorm <= 0.01 * gn0 + 1e-6))
+
+
+def test_objective_decreases_from_zero(problem):
+    X, S = problem
+    obj_grad, hvp, act = _fns(X, S, 1.0)
+    L = S.shape[0]
+    W0 = jnp.zeros((L, X.shape[1]))
+    f0, _ = obj_grad(W0)
+    res = tron_solve(obj_grad, hvp, act, W0)
+    assert bool(jnp.all(res.f <= f0))
+
+
+def test_matches_lbfgs_quality(problem):
+    """TRON minimum should (approximately) match a long gradient-descent run
+    on the same strongly-convex objective."""
+    X, S = problem
+    C = 0.5
+    obj_grad, hvp, act = _fns(X, S, C)
+    L, D = S.shape[0], X.shape[1]
+    res = tron_solve(obj_grad, hvp, act, jnp.zeros((L, D)), eps=1e-3,
+                     max_newton=100)
+
+    # Plain GD with a safe step (Lipschitz bound 2 + 2C sigma_max^2).
+    sigma = float(jnp.linalg.norm(X, ord=2))
+    step = 1.0 / (2.0 + 2.0 * C * sigma ** 2)
+    W = jnp.zeros((L, D))
+    for _ in range(3000):
+        _, g = obj_grad(W)
+        W = W - step * g
+    f_gd, _ = obj_grad(W)
+    # TRON should be at least as good (tiny slack for fp).
+    assert bool(jnp.all(res.f <= f_gd + 1e-2 * jnp.abs(f_gd)))
+
+
+def test_label_independence(problem):
+    """Solving labels jointly or separately must give identical solutions —
+    the property the paper's double parallelization relies on."""
+    X, S = problem
+    obj_grad, hvp, act = _fns(X, S, 1.0)
+    L, D = S.shape[0], X.shape[1]
+    res_all = tron_solve(obj_grad, hvp, act, jnp.zeros((L, D)), eps=1e-3)
+
+    # Solve the first 3 labels on their own.
+    S3 = S[:3]
+    og3, hv3, ac3 = _fns(X, S3, 1.0)
+    res_3 = tron_solve(og3, hv3, ac3, jnp.zeros((3, D)), eps=1e-3)
+    np.testing.assert_allclose(np.asarray(res_all.W[:3]),
+                               np.asarray(res_3.W), rtol=1e-2, atol=1e-4)
+
+
+def test_all_negative_label_goes_to_zero_weight():
+    """A padding label (all signs -1) has optimum near w=0 when instances are
+    mild: the solver must keep it tiny (this is the padding trick in
+    dismec._pad_labels)."""
+    rng = np.random.default_rng(4)
+    N, D = 64, 16
+    X = jnp.asarray(rng.normal(size=(N, D)) * 0.01, jnp.float32)
+    S = -jnp.ones((1, N), jnp.float32)
+    obj_grad, hvp, act = _fns(X, S, 1.0)
+    res = tron_solve(obj_grad, hvp, act, jnp.zeros((1, D)))
+    assert float(jnp.linalg.norm(res.W)) < 0.5
