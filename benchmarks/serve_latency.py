@@ -1,0 +1,83 @@
+"""Serving latency benchmark: p50/p99 per predict backend.
+
+Drives the same ragged request stream through each `repro.serve.XMCEngine`
+backend (dense / bsr / sharded) from one shared sparse checkpoint, and
+emits a `BENCH_serve.json` line per backend with latency percentiles,
+throughput, and the model's block density. This is the serving-side
+companion of table_prediction_speed (which measures raw predict calls
+without the queue/bucketing layer).
+"""
+
+from __future__ import annotations
+
+import tempfile
+import time
+
+import numpy as np
+
+import jax.numpy as jnp
+
+from benchmarks._common import emit_json, print_table
+from repro.core.dismec import DiSMECConfig, train
+from repro.core.pruning import to_block_sparse
+from repro.data.xmc import make_xmc_dataset
+from repro.serve import BACKENDS, XMCEngine
+
+OUT_JSON = "BENCH_serve.json"
+
+N_REQUESTS = 64
+MAX_ROWS = 8
+K = 5
+
+
+def main():
+    data = make_xmc_dataset(n_train=800, n_test=512, n_features=4096,
+                            n_labels=256, seed=0)
+    model = train(jnp.asarray(data.X_train), jnp.asarray(data.Y_train),
+                  DiSMECConfig(delta=0.01, label_batch=256))
+    bsr = to_block_sparse(model.W, (128, 128))
+
+    rng = np.random.default_rng(0)
+    X = np.asarray(data.X_test, np.float32)
+    requests = []
+    for _ in range(N_REQUESTS):
+        n_i = int(rng.integers(1, MAX_ROWS + 1))
+        rows = rng.integers(0, X.shape[0], size=n_i)
+        requests.append(X[rows])
+    n_inst = sum(r.shape[0] for r in requests)
+
+    rows_out = []
+    with tempfile.TemporaryDirectory() as ckpt:
+        bsr.save(ckpt, meta={"n_labels": data.n_labels,
+                             "n_features": data.n_features,
+                             "delta": model.delta})
+        for kind in BACKENDS:
+            t0 = time.time()
+            engine = XMCEngine.from_checkpoint(ckpt, backend=kind, k=K)
+            t_load = time.time() - t0
+            t0 = time.time()
+            results = engine.serve(requests)
+            wall = time.time() - t0
+            stats = engine.latency_summary()
+            assert len(results) == N_REQUESTS
+            rec = {"bench": "serve_latency", "backend": kind,
+                   "n_requests": N_REQUESTS, "n_instances": n_inst,
+                   "k": K, "block_density": bsr.density,
+                   "load_warmup_s": t_load,
+                   "p50_ms": stats["p50_ms"], "p90_ms": stats["p90_ms"],
+                   "p99_ms": stats["p99_ms"], "mean_ms": stats["mean_ms"],
+                   "throughput_inst_per_s": n_inst / wall}
+            emit_json(OUT_JSON, rec)
+            rows_out.append({"backend": kind, "p50_ms": stats["p50_ms"],
+                             "p99_ms": stats["p99_ms"],
+                             "mean_ms": stats["mean_ms"],
+                             "inst/s": n_inst / wall})
+
+    print_table("serving latency per backend "
+                f"({N_REQUESTS} ragged requests, {n_inst} instances, k={K})",
+                rows_out, ["backend", "p50_ms", "p99_ms", "mean_ms", "inst/s"])
+    print(f"\nwrote {OUT_JSON}")
+
+
+if __name__ == "__main__":
+    main()

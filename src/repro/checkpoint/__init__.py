@@ -1,3 +1,6 @@
-from repro.checkpoint.io import restore_pytree, save_pytree
+from repro.checkpoint.io import (load_block_sparse, load_block_sparse_meta,
+                                 restore_pytree, save_block_sparse,
+                                 save_pytree)
 
-__all__ = ["save_pytree", "restore_pytree"]
+__all__ = ["save_pytree", "restore_pytree", "save_block_sparse",
+           "load_block_sparse", "load_block_sparse_meta"]

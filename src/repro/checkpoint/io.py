@@ -3,6 +3,11 @@
 Mirrors DiSMEC's per-batch block model files (§2.1): the pruned head /
 XMC weight blocks are stored sparse (values + indices) when density < 50%,
 dense otherwise. Works for any pytree (params, optimizer state, caches).
+
+Beyond pytrees, `save_block_sparse` / `load_block_sparse` round-trip the
+packed BSR artifact (`core.pruning.BlockSparseModel`) that the XMC serving
+subsystem loads: a pruned model is converted once offline — like the paper's
+per-batch model files — and served by any backend without re-densifying.
 """
 
 from __future__ import annotations
@@ -48,6 +53,60 @@ def save_pytree(tree, directory: str, *, sparse_threshold: float = 0.5):
     np.savez_compressed(os.path.join(directory, "arrays.npz"), **arrays)
     with open(os.path.join(directory, "index.json"), "w") as f:
         json.dump(index, f, indent=1)
+
+
+BSR_ARRAYS = "bsr_arrays.npz"
+BSR_INDEX = "bsr_index.json"
+
+
+def save_block_sparse(model, directory: str, *, meta: dict | None = None):
+    """Write a `BlockSparseModel` (+ optional serving metadata such as
+    n_labels / delta) as one .npz + JSON index under `directory`."""
+    os.makedirs(directory, exist_ok=True)
+    np.savez_compressed(
+        os.path.join(directory, BSR_ARRAYS),
+        blocks=np.asarray(model.blocks),
+        block_rows=np.asarray(model.block_rows),
+        block_cols=np.asarray(model.block_cols),
+        row_ptr=np.asarray(model.row_ptr))
+    index = {
+        "format": "bsr",
+        "shape": list(model.shape),
+        "orig_shape": list(model.orig_shape or model.shape),
+        "block_shape": list(model.block_shape),
+        "n_blocks": model.n_blocks,
+        "dtype": str(np.asarray(model.blocks).dtype),
+        "meta": dict(meta or {}),
+    }
+    with open(os.path.join(directory, BSR_INDEX), "w") as f:
+        json.dump(index, f, indent=1)
+
+
+def load_block_sparse_meta(directory: str) -> dict:
+    """The index of a block-sparse checkpoint (shapes + user meta) without
+    touching the arrays — cheap pre-flight validation for serving CLIs."""
+    with open(os.path.join(directory, BSR_INDEX)) as f:
+        index = json.load(f)
+    if index.get("format") != "bsr":
+        raise ValueError(f"{directory} is not a block-sparse checkpoint")
+    return index
+
+
+def load_block_sparse(directory: str):
+    """Returns (BlockSparseModel, meta dict). Inverse of save_block_sparse."""
+    from repro.core.pruning import BlockSparseModel   # deferred: no cycle
+
+    index = load_block_sparse_meta(directory)
+    data = np.load(os.path.join(directory, BSR_ARRAYS))
+    model = BlockSparseModel(
+        blocks=jnp.asarray(data["blocks"]),
+        block_rows=jnp.asarray(data["block_rows"]),
+        block_cols=jnp.asarray(data["block_cols"]),
+        row_ptr=jnp.asarray(data["row_ptr"]),
+        shape=tuple(index["shape"]),
+        block_shape=tuple(index["block_shape"]),
+        orig_shape=tuple(index.get("orig_shape", index["shape"])))
+    return model, index["meta"]
 
 
 def restore_pytree(template, directory: str):

@@ -1,0 +1,65 @@
+"""Version-compatibility shims for jax.
+
+The repo targets the `jax.shard_map` API (jax >= 0.6: top-level export,
+`check_vma=` keyword). On the pinned 0.4.x toolchain that function lives in
+`jax.experimental.shard_map` and the keyword is spelled `check_rep=`. Every
+call site imports `shard_map` from here instead of touching `jax.shard_map`
+directly, so the whole codebase moves between jax versions by editing this
+one file.
+"""
+
+from __future__ import annotations
+
+import inspect
+
+import jax
+
+if hasattr(jax, "shard_map"):                       # jax >= 0.6
+    _shard_map = jax.shard_map
+else:                                               # jax 0.4.x / 0.5.x
+    from jax.experimental.shard_map import shard_map as _shard_map
+
+_SHARD_MAP_PARAMS = frozenset(inspect.signature(_shard_map).parameters)
+
+
+def shard_map(f, *, mesh, in_specs, out_specs, check_vma=None, **kwargs):
+    """`jax.shard_map` with the `check_vma` keyword mapped to whatever the
+    installed jax calls it (`check_rep` before 0.6)."""
+    if check_vma is not None:
+        if "check_vma" in _SHARD_MAP_PARAMS:
+            kwargs["check_vma"] = check_vma
+        elif "check_rep" in _SHARD_MAP_PARAMS:
+            kwargs["check_rep"] = check_vma
+    return _shard_map(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+                      **kwargs)
+
+
+try:                                                # jax >= 0.5.x
+    from jax.sharding import AxisType
+except ImportError:
+    import enum
+
+    class AxisType(enum.Enum):                      # minimal stand-in
+        Auto = "auto"
+        Explicit = "explicit"
+        Manual = "manual"
+
+_MAKE_MESH_PARAMS = frozenset(inspect.signature(jax.make_mesh).parameters)
+
+
+def make_mesh(axis_shapes, axis_names, *, axis_types=None, **kwargs):
+    """`jax.make_mesh` with `axis_types=` dropped on jax versions that
+    predate sharding-in-types (the old default is Auto everywhere, which is
+    exactly what the dropped argument requested)."""
+    if axis_types is not None and "axis_types" in _MAKE_MESH_PARAMS:
+        kwargs["axis_types"] = axis_types
+    return jax.make_mesh(axis_shapes, axis_names, **kwargs)
+
+
+def cost_analysis(compiled) -> dict:
+    """`compiled.cost_analysis()` as one flat dict on every jax version
+    (0.4.x returns a one-element list of per-program dicts)."""
+    cost = compiled.cost_analysis()
+    if isinstance(cost, (list, tuple)):
+        cost = cost[0] if cost else {}
+    return cost

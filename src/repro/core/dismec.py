@@ -28,6 +28,7 @@ import jax.numpy as jnp
 import numpy as np
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
+from repro.compat import shard_map
 from repro.core import losses
 from repro.core.tron import TronResult, tron_solve
 from repro.core.pruning import prune
@@ -223,8 +224,8 @@ def train_sharded(X: Array, Y: Array, cfg: DiSMECConfig, mesh: Mesh,
 
     in_specs = (x_spec, s_spec)
     out_specs = P(label_axis, None)
-    solve = jax.shard_map(solve_shard, mesh=mesh, in_specs=in_specs,
-                          out_specs=out_specs, check_vma=False)
+    solve = shard_map(solve_shard, mesh=mesh, in_specs=in_specs,
+                      out_specs=out_specs, check_vma=False)
     W = solve(jnp.asarray(X, jnp.float32), S_pad)[: S_full.shape[0]]
     if perm is not None:
         inv = np.argsort(perm)                      # undo the permutation

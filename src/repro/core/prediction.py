@@ -1,4 +1,11 @@
-"""Distributed prediction and XMC ranking metrics (paper §2.2.1, §3.2).
+"""Backend-agnostic XMC scoring + ranking metrics (paper §2.2.1, §3.2).
+
+This module is the *scoring layer* of the serving subsystem: pure functions
+from (X, W) to scores / top-k, with no request-side machinery. The serving
+engine (`repro.serve.xmc`) wraps these behind a common `PredictBackend`
+protocol — `predict_topk` backs the dense backend, `predict_topk_sharded`
+backs the mesh-sharded backend, and the block-sparse Pallas path lives in
+`repro.kernels.bsr_predict`.
 
 The paper stores the per-batch block matrices W^1..W^B on separate nodes and
 evaluates <w_l, x> for all blocks in parallel, then merges to a top-k. On the
@@ -16,6 +23,8 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import Mesh, PartitionSpec as P
 
+from repro.compat import shard_map
+
 Array = jax.Array
 
 
@@ -30,10 +39,13 @@ def predict_topk(X: Array, W: Array, k: int = 5) -> tuple[Array, Array]:
 
 
 def predict_topk_sharded(X: Array, W: Array, k: int, mesh: Mesh,
-                         *, label_axis: str = "model") -> tuple[Array, Array]:
+                         *, label_axis: str = "model",
+                         n_labels: int | None = None) -> tuple[Array, Array]:
     """Label-sharded distributed prediction with local-topk + global merge.
 
-    X : (n, D) replicated test batch, W : (L, D) with L divisible by shard count.
+    X : (n, D) replicated test batch, W : (L, D) with L divisible by shard
+    count. `n_labels` masks padding rows (label id >= n_labels) out of the
+    merge so a row-padded W never serves phantom labels.
     """
     n_shards = mesh.shape[label_axis]
     L = W.shape[0]
@@ -42,9 +54,13 @@ def predict_topk_sharded(X: Array, W: Array, k: int, mesh: Mesh,
 
     def shard_fn(X_sh, W_sh):
         scores = X_sh @ W_sh.T                             # (n, L/shard)
+        offset = jax.lax.axis_index(label_axis) * shard_size
+        if n_labels is not None and n_labels < L:
+            local_ids = offset + jnp.arange(shard_size)
+            scores = jnp.where(local_ids[None, :] < n_labels, scores,
+                               jnp.float32(-3.0e38))
         s_loc, i_loc = jax.lax.top_k(scores, k)            # local top-k
         # Globalize label indices of this shard.
-        offset = jax.lax.axis_index(label_axis) * shard_size
         i_loc = i_loc + offset
         # Merge across shards: gather k*n_shards candidates, re-top-k.
         s_all = jax.lax.all_gather(s_loc, label_axis, axis=1, tiled=True)
@@ -53,9 +69,9 @@ def predict_topk_sharded(X: Array, W: Array, k: int, mesh: Mesh,
         i_top = jnp.take_along_axis(i_all, pos, axis=1)
         return s_top, i_top
 
-    fn = jax.shard_map(shard_fn, mesh=mesh,
-                       in_specs=(P(), P(label_axis, None)),
-                       out_specs=(P(), P()), check_vma=False)
+    fn = shard_map(shard_fn, mesh=mesh,
+                   in_specs=(P(), P(label_axis, None)),
+                   out_specs=(P(), P()), check_vma=False)
     return fn(X, W)
 
 

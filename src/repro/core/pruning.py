@@ -59,6 +59,9 @@ class BlockSparseModel:
       block_rows : (n_blocks,) label-block index of each packed block (sorted)
       block_cols : (n_blocks,) feature-block index of each packed block
       row_ptr    : (L/bl + 1,) CSR-style offsets into the packed arrays
+      shape      : (Lp, Dp) block-padded shape of the packed matrix
+      orig_shape : (L, D) true pre-padding shape — the labels/features that
+                   actually exist; serving must never answer outside it
     """
     blocks: Array
     block_rows: Array
@@ -66,6 +69,17 @@ class BlockSparseModel:
     row_ptr: Array
     shape: tuple[int, int]
     block_shape: tuple[int, int]
+    orig_shape: tuple[int, int] | None = None
+
+    @property
+    def n_labels(self) -> int:
+        """True label count (pre-padding)."""
+        return (self.orig_shape or self.shape)[0]
+
+    @property
+    def n_features(self) -> int:
+        """True feature dim (pre-padding)."""
+        return (self.orig_shape or self.shape)[1]
 
     @property
     def n_blocks(self) -> int:
@@ -78,15 +92,30 @@ class BlockSparseModel:
         return self.n_blocks / max(total, 1)
 
     def to_dense(self) -> Array:
+        # Host-side assembly into one numpy buffer: a single device transfer
+        # instead of one functional full-matrix update per block (this is on
+        # the dense/sharded backend load path).
         bl, bd = self.block_shape
-        L, D = self.shape
-        W = jnp.zeros((L, D), self.blocks.dtype)
+        W = np.zeros(self.shape, np.asarray(self.blocks).dtype)
         rows = np.asarray(self.block_rows)
         cols = np.asarray(self.block_cols)
+        blocks = np.asarray(self.blocks)
         for k in range(self.n_blocks):
-            W = W.at[rows[k] * bl:(rows[k] + 1) * bl,
-                     cols[k] * bd:(cols[k] + 1) * bd].set(self.blocks[k])
-        return W
+            W[rows[k] * bl:(rows[k] + 1) * bl,
+              cols[k] * bd:(cols[k] + 1) * bd] = blocks[k]
+        return jnp.asarray(W)
+
+    def save(self, directory: str, *, meta: dict | None = None) -> None:
+        """Persist as the serving checkpoint artifact (checkpoint/io.py) —
+        the paper's offline model files, in packed BSR form."""
+        from repro.checkpoint.io import save_block_sparse  # deferred: no cycle
+        save_block_sparse(self, directory, meta=meta)
+
+    @staticmethod
+    def load(directory: str) -> tuple["BlockSparseModel", dict]:
+        """Returns (model, meta). Inverse of `save`."""
+        from repro.checkpoint.io import load_block_sparse
+        return load_block_sparse(directory)
 
 
 def to_block_sparse(W: Array, block_shape: tuple[int, int] = (128, 128),
@@ -119,4 +148,4 @@ def to_block_sparse(W: Array, block_shape: tuple[int, int] = (128, 128),
         block_rows=jnp.asarray(rows, jnp.int32),
         block_cols=jnp.asarray(cols, jnp.int32),
         row_ptr=jnp.asarray(row_ptr),
-        shape=(Lp, Dp), block_shape=block_shape)
+        shape=(Lp, Dp), block_shape=block_shape, orig_shape=(L, D))

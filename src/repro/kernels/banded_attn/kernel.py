@@ -44,9 +44,13 @@ def _banded_kernel(q_ref, k_ref, v_ref, o_ref, *, window: int, span: int,
 
     q_end = (qi + 1) * qc
     start = jnp.clip(q_end - span, 0, Tk - span)
-    k = pl.load(k_ref, (0, pl.ds(start, span), slice(None))
+    # The leading batch index must be a traced scalar, not a Python int:
+    # jax 0.4.x's interpret-mode discharge rule assumes every non-Slice
+    # index has a .shape.
+    zero = jnp.int32(0)
+    k = pl.load(k_ref, (zero, pl.ds(start, span), slice(None))
                 ).astype(jnp.float32)                  # (span, hd)
-    v = pl.load(v_ref, (0, pl.ds(start, span), slice(None))
+    v = pl.load(v_ref, (zero, pl.ds(start, span), slice(None))
                 ).astype(jnp.float32)
 
     qf = q.reshape(G * qc, hd)

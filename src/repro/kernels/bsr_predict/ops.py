@@ -1,4 +1,10 @@
-"""Public wrapper: BSR prediction over a pruned DiSMEC model."""
+"""Public wrapper: BSR prediction over a pruned DiSMEC model.
+
+`bsr_predict` yields the dense (n, Lp) score matrix; `bsr_predict_topk`
+fuses it with the blocked Pallas top-k (kernels/topk) into the serving
+entry point used by `repro.serve.xmc.BsrBackend` — scores never leave the
+padded block coordinate system before being reduced to k candidates.
+"""
 
 from __future__ import annotations
 
@@ -8,6 +14,7 @@ import numpy as np
 
 from repro.core.pruning import BlockSparseModel
 from repro.kernels.bsr_predict.kernel import bsr_predict_pallas
+from repro.kernels.topk.kernel import NEG_INF
 
 
 def bsr_predict(x: jax.Array, model: BlockSparseModel,
@@ -29,6 +36,25 @@ def bsr_predict(x: jax.Array, model: BlockSparseModel,
     counts = model.row_ptr[1:] - model.row_ptr[:-1]          # (Lp/bl,)
     row_mask = jnp.repeat(counts > 0, bl)
     return jnp.where(row_mask[None, :], out, 0.0)
+
+
+def bsr_predict_topk(x: jax.Array, model: BlockSparseModel, k: int,
+                     *, n_labels: int | None = None,
+                     interpret: bool = True) -> tuple[jax.Array, jax.Array]:
+    """Fused predict -> top-k: (vals, idx) each (n, k), idx in true label ids.
+
+    Padding label rows (id >= n_labels) are masked to -inf between the two
+    kernels so a block-padded model never serves phantom labels. Fully
+    pruned real labels keep their exact-zero score, matching the dense path.
+    """
+    from repro.kernels.topk import ops as topk_ops   # deferred: no cycle
+
+    scores = bsr_predict(x, model, interpret=interpret)
+    Lp = scores.shape[1]
+    if n_labels is not None and n_labels < Lp:
+        ids = jnp.arange(Lp)
+        scores = jnp.where(ids[None, :] < n_labels, scores, NEG_INF)
+    return topk_ops.topk(scores, k, interpret=interpret)
 
 
 def model_flops(model: BlockSparseModel, n: int) -> int:

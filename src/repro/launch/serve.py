@@ -1,29 +1,103 @@
-"""Serving launcher: batched decode against a smoke model.
+"""Serving launcher: LM decode or XMC top-k label serving.
+
+LM mode (batched decode against a smoke model):
 
   PYTHONPATH=src python -m repro.launch.serve --arch mixtral-8x22b --smoke \
       --steps 16 --batch 4
+
+XMC mode (the paper's distributed prediction as a service; trains and
+checkpoints a small sparse model first if --ckpt does not exist yet):
+
+  PYTHONPATH=src python -m repro.launch.serve --xmc --backend bsr \
+      --ckpt /tmp/xmc_ckpt --requests 64 --k 5
 """
 
 from __future__ import annotations
 
 import argparse
+import os
 import time
 
 import jax
 import numpy as np
 
 from repro.configs.registry import ARCH_IDS, get_config
-from repro.models.model import build_model
-from repro.serve import serve_batch
 
 
-def main() -> None:
-    ap = argparse.ArgumentParser()
-    ap.add_argument("--arch", required=True, choices=list(ARCH_IDS))
-    ap.add_argument("--smoke", action="store_true")
-    ap.add_argument("--steps", type=int, default=16)
-    ap.add_argument("--batch", type=int, default=4)
-    args = ap.parse_args()
+def _ensure_xmc_checkpoint(ckpt: str, *, n_features: int, n_labels: int,
+                           seed: int) -> None:
+    """Train + prune + pack + save a small DiSMEC model unless one exists."""
+    from repro.checkpoint.io import BSR_INDEX
+    if os.path.exists(os.path.join(ckpt, BSR_INDEX)):
+        return
+    import jax.numpy as jnp
+    from repro.core.dismec import DiSMECConfig, train
+    from repro.core.pruning import to_block_sparse
+    from repro.data.xmc import make_xmc_dataset
+
+    print(f"[xmc] no checkpoint at {ckpt}; training a "
+          f"{n_labels}-label smoke model...")
+    d = make_xmc_dataset(n_train=600, n_test=64, n_features=n_features,
+                         n_labels=n_labels, seed=seed)
+    model = train(jnp.asarray(d.X_train), jnp.asarray(d.Y_train),
+                  DiSMECConfig(delta=0.01, label_batch=n_labels))
+    bsr = to_block_sparse(model.W, (128, 128))
+    bsr.save(ckpt, meta={"n_labels": n_labels, "n_features": n_features,
+                         "delta": model.delta})
+    print(f"[xmc] saved sparse checkpoint: {bsr.n_blocks} blocks, "
+          f"block density {bsr.density:.3f}")
+
+
+def serve_xmc(args) -> None:
+    from repro.serve import XMCEngine
+
+    _ensure_xmc_checkpoint(args.ckpt, n_features=args.features,
+                           n_labels=args.labels, seed=args.seed)
+    # Validate the request shape against the checkpoint meta BEFORE paying
+    # for engine load + per-bucket warm-up compiles.
+    from repro.checkpoint.io import load_block_sparse_meta
+    index = load_block_sparse_meta(args.ckpt)
+    ckpt_features = index["meta"].get(
+        "n_features", index.get("orig_shape", index["shape"])[1])
+    if ckpt_features != args.features:
+        raise SystemExit(
+            f"--features {args.features} does not match the checkpoint's "
+            f"feature dim {ckpt_features}; re-run with --features "
+            f"{ckpt_features} or point --ckpt elsewhere")
+
+    t0 = time.time()
+    engine = XMCEngine.from_checkpoint(args.ckpt, backend=args.backend,
+                                       k=args.k)
+    print(f"[xmc] backend={args.backend} loaded+warmed in "
+          f"{time.time() - t0:.1f}s "
+          f"(L={engine.backend.n_labels}, k={engine.backend.k})")
+
+    rng = np.random.default_rng(args.seed)
+    from repro.data.xmc import make_xmc_dataset
+    d = make_xmc_dataset(n_train=64, n_test=max(args.requests * 4, 64),
+                         n_features=args.features, n_labels=args.labels,
+                         seed=args.seed)
+    pool = np.asarray(d.X_test, np.float32)
+    requests = []
+    for _ in range(args.requests):
+        n_i = int(rng.integers(1, args.max_request_rows + 1))
+        rows = rng.integers(0, pool.shape[0], size=n_i)
+        requests.append(pool[rows])
+
+    results = engine.serve(requests)
+    stats = engine.latency_summary()
+    n_inst = sum(r.labels.shape[0] for r in results)
+    print(f"[xmc] served {len(results)} requests ({n_inst} instances): "
+          f"p50={stats['p50_ms']:.2f}ms p99={stats['p99_ms']:.2f}ms "
+          f"mean={stats['mean_ms']:.2f}ms")
+    sample = results[0]
+    print(f"[xmc] req[0] top-{args.k} labels per instance: "
+          f"{sample.labels[:2].tolist()}")
+
+
+def serve_lm(args) -> None:
+    from repro.models.model import build_model
+    from repro.serve import serve_batch
 
     cfg = get_config(args.arch, smoke=args.smoke)
     if cfg.is_encoder_decoder or cfg.n_prefix:
@@ -43,6 +117,36 @@ def main() -> None:
         print(f"req[{i}] -> {o.tolist()}")
     n_tok = args.batch * args.steps
     print(f"# {n_tok} tokens in {dt:.1f}s ({1e3 * dt / n_tok:.1f} ms/tok)")
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--xmc", action="store_true",
+                    help="serve XMC top-k label queries instead of LM decode")
+    ap.add_argument("--arch", default=None, choices=list(ARCH_IDS),
+                    help="LM mode: architecture to serve")
+    ap.add_argument("--smoke", action="store_true")
+    ap.add_argument("--steps", type=int, default=16)
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--backend", default="dense",
+                    choices=("dense", "bsr", "sharded"),
+                    help="XMC mode: predict backend")
+    ap.add_argument("--ckpt", default="/tmp/repro_xmc_ckpt",
+                    help="XMC mode: sparse checkpoint directory")
+    ap.add_argument("--k", type=int, default=5)
+    ap.add_argument("--requests", type=int, default=32)
+    ap.add_argument("--max-request-rows", type=int, default=8)
+    ap.add_argument("--features", type=int, default=4096)
+    ap.add_argument("--labels", type=int, default=256)
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args()
+
+    if args.xmc:
+        serve_xmc(args)
+    else:
+        if args.arch is None:
+            ap.error("--arch is required in LM mode (or pass --xmc)")
+        serve_lm(args)
 
 
 if __name__ == "__main__":

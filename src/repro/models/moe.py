@@ -26,6 +26,7 @@ from typing import Optional
 import jax
 import jax.numpy as jnp
 
+from repro.compat import shard_map
 from repro.configs.base import ArchConfig
 
 Array = jax.Array
@@ -196,7 +197,7 @@ def moe_ffn(cfg: ArchConfig, p: dict, x: Array, *,
     if shared is not None:
         shared_specs = {"w1": P(fsdp, model_axis), "w3": P(fsdp, model_axis),
                         "w2": P(model_axis, fsdp), "gate": P(fsdp, None)}
-    fn = jax.shard_map(
+    fn = shard_map(
         body, mesh=mesh,
         in_specs=(bspec, P(fsdp, None), P(None, fsdp, model_axis),
                   P(None, fsdp, model_axis), P(None, model_axis, fsdp),

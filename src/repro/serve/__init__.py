@@ -1,3 +1,17 @@
-from repro.serve.engine import generate, serve_batch
+"""Serving subsystem: two engines over one shared batching layer.
 
-__all__ = ["generate", "serve_batch"]
+  engine   — LM decode serving (prefill + decode_step loops).
+  xmc      — XMC top-k label serving over pluggable predict backends
+             (dense / BSR-Pallas / mesh-sharded).
+  batching — request-side machinery both engines share: ragged padding,
+             size-bucketed micro-batch queue, latency accounting.
+"""
+
+from repro.serve.engine import generate, serve_batch
+from repro.serve.xmc import (BACKENDS, BsrBackend, DenseBackend,
+                             PredictBackend, ShardedBackend, XMCEngine,
+                             XMCResult, make_backend)
+
+__all__ = ["generate", "serve_batch", "XMCEngine", "XMCResult",
+           "PredictBackend", "DenseBackend", "BsrBackend", "ShardedBackend",
+           "make_backend", "BACKENDS"]

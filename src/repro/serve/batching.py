@@ -1,0 +1,155 @@
+"""Request-side batching shared by LM and XMC serving.
+
+Both serving paths face the same problem: a ragged request stream (variable
+token counts for the LM, variable instance counts for XMC) must be packed
+into a small set of fixed shapes, because every distinct shape costs one XLA
+compile. This module owns that machinery:
+
+  * `left_pad_tokens`   — ragged token lists -> one (B, T) batch (LM decode).
+  * `pick_bucket`       — smallest power-of-two-ish bucket covering n rows.
+  * `pad_rows`          — zero-pad a feature batch up to its bucket size.
+  * `MicroBatchQueue`   — FIFO micro-batcher: coalesces queued requests into
+                          bucket-sized batches, preserving request identity.
+  * `LatencyStats`      — per-request latency percentiles (p50/p90/p99).
+
+The engines (`serve.engine` for LM decode, `serve.xmc.XMCEngine` for label
+queries) are thin loops around these primitives.
+"""
+
+from __future__ import annotations
+
+import collections
+import dataclasses
+from typing import Iterator, Sequence
+
+import numpy as np
+
+DEFAULT_BUCKETS = (1, 2, 4, 8, 16, 32, 64, 128, 256)
+
+
+def left_pad_tokens(requests: Sequence[np.ndarray],
+                    pad_id: int = 0) -> np.ndarray:
+    """Ragged token id lists -> one left-padded (B, max_len) int32 batch."""
+    B = len(requests)
+    T0 = max(len(r) for r in requests)
+    toks = np.full((B, T0), pad_id, np.int32)
+    for i, r in enumerate(requests):
+        toks[i, T0 - len(r):] = r
+    return toks
+
+
+def pick_bucket(n: int, buckets: Sequence[int] = DEFAULT_BUCKETS) -> int:
+    """Smallest bucket >= n. n larger than every bucket is a caller bug
+    (the queue splits oversize requests before picking)."""
+    for b in buckets:
+        if n <= b:
+            return b
+    raise ValueError(f"request of {n} rows exceeds largest bucket "
+                     f"{buckets[-1]}")
+
+
+def pad_rows(x: np.ndarray, bucket: int) -> np.ndarray:
+    """Zero-pad instances (rows) up to `bucket`. Zero rows score 0 for every
+    label and are sliced away before results leave the engine."""
+    n = x.shape[0]
+    if n == bucket:
+        return x
+    assert n < bucket, "pad_rows cannot shrink a batch"
+    return np.concatenate(
+        [x, np.zeros((bucket - n,) + x.shape[1:], x.dtype)], axis=0)
+
+
+@dataclasses.dataclass
+class _Pending:
+    request_id: int
+    x: np.ndarray                      # (n_i, D)
+
+
+@dataclasses.dataclass
+class MicroBatch:
+    """One padded batch plus the bookkeeping to un-pad it."""
+    x: np.ndarray                      # (bucket, D)
+    bucket: int
+    request_ids: list[int]
+    row_counts: list[int]              # rows per request, in order
+
+    def split(self, results: np.ndarray) -> Iterator[tuple[int, np.ndarray]]:
+        """Slice per-request rows back out of a (bucket, ...) result."""
+        off = 0
+        for rid, n in zip(self.request_ids, self.row_counts):
+            yield rid, results[off:off + n]
+            off += n
+
+
+class MicroBatchQueue:
+    """FIFO micro-batcher over size buckets.
+
+    Requests (arbitrary row counts) are enqueued in arrival order; `drain`
+    greedily coalesces consecutive requests while their combined row count
+    still fits the largest bucket, then pads the group to the smallest
+    covering bucket. Oversize requests are split across batches. FIFO order
+    is never reordered — a latency-fairness choice, not a throughput one.
+    """
+
+    def __init__(self, buckets: Sequence[int] = DEFAULT_BUCKETS):
+        self.buckets = tuple(sorted(buckets))
+        self._pending: collections.deque[_Pending] = collections.deque()
+        self._next_id = 0
+
+    def submit(self, x: np.ndarray) -> int:
+        """Enqueue one request of x.shape[0] instances; returns request id."""
+        assert x.ndim == 2, "a request is an (n_i, D) feature batch"
+        if x.shape[0] == 0:
+            # A zero-row request would never produce a micro-batch and its
+            # id would silently vanish from the results.
+            raise ValueError("empty request: need at least one instance")
+        rid = self._next_id
+        self._next_id += 1
+        cap = self.buckets[-1]
+        for start in range(0, x.shape[0], cap):      # split oversize
+            self._pending.append(_Pending(rid, x[start:start + cap]))
+        return rid
+
+    def __len__(self) -> int:
+        return len(self._pending)
+
+    def drain(self) -> Iterator[MicroBatch]:
+        """Yield padded micro-batches until the queue is empty."""
+        cap = self.buckets[-1]
+        while self._pending:
+            group: list[_Pending] = [self._pending.popleft()]
+            rows = group[0].x.shape[0]
+            while self._pending and \
+                    rows + self._pending[0].x.shape[0] <= cap:
+                nxt = self._pending.popleft()
+                group.append(nxt)
+                rows += nxt.x.shape[0]
+            bucket = pick_bucket(rows, self.buckets)
+            x = pad_rows(np.concatenate([p.x for p in group], axis=0), bucket)
+            yield MicroBatch(x=x, bucket=bucket,
+                             request_ids=[p.request_id for p in group],
+                             row_counts=[p.x.shape[0] for p in group])
+
+
+class LatencyStats:
+    """Wall-clock per-request latency accounting for the serving engines."""
+
+    def __init__(self):
+        self._ms: list[float] = []
+
+    def record(self, seconds: float, n_requests: int = 1):
+        self._ms.extend([seconds * 1e3] * n_requests)
+
+    @property
+    def count(self) -> int:
+        return len(self._ms)
+
+    def summary(self) -> dict[str, float]:
+        if not self._ms:
+            return {"count": 0}
+        a = np.asarray(self._ms)
+        return {"count": len(a),
+                "mean_ms": float(a.mean()),
+                "p50_ms": float(np.percentile(a, 50)),
+                "p90_ms": float(np.percentile(a, 90)),
+                "p99_ms": float(np.percentile(a, 99))}

@@ -1,8 +1,11 @@
-"""Serving engine: batched prefill + greedy/top-k decode against the cache.
+"""LM serving engine: batched prefill + greedy/top-k decode against the cache.
 
-This is the host-side loop around the jitted decode_step the dry-run lowers;
-the per-step top-k IS the paper's distributed prediction (§2.2.1): the head
-is label-sharded, each shard reduces locally, candidates merge globally.
+One of the two engines in the serving subsystem (the other is
+`serve.xmc.XMCEngine` for top-k label queries); both sit on the shared
+request-side layer in `serve.batching` — this engine uses its ragged token
+padding, the XMC engine its size-bucketed micro-batch queue. The per-step
+top-k here IS the paper's distributed prediction (§2.2.1): the head is
+label-sharded, each shard reduces locally, candidates merge globally.
 """
 
 from __future__ import annotations
@@ -12,6 +15,8 @@ from typing import Optional
 import jax
 import jax.numpy as jnp
 import numpy as np
+
+from repro.serve.batching import left_pad_tokens
 
 Array = jax.Array
 
@@ -52,11 +57,7 @@ def generate(model, params, prompt_tokens: Array, *, steps: int,
 def serve_batch(model, params, requests: list[np.ndarray], *, steps: int,
                 use_swa: bool = False) -> list[np.ndarray]:
     """Pad a ragged request list into one batch and decode `steps` tokens."""
-    B = len(requests)
-    T0 = max(len(r) for r in requests)
-    toks = np.zeros((B, T0), np.int32)
-    for i, r in enumerate(requests):
-        toks[i, T0 - len(r):] = r            # left-pad
+    toks = left_pad_tokens(requests)
     outs = generate(model, params, jnp.asarray(toks), steps=steps,
                     use_swa=use_swa)
-    return [outs[i] for i in range(B)]
+    return [outs[i] for i in range(len(requests))]

@@ -1,0 +1,278 @@
+"""XMC serving engine: top-k label queries over a pruned DiSMEC model.
+
+This is the paper's distributed prediction (§2.2.1) as a serving subsystem
+rather than an example script. One engine, three interchangeable backends
+behind the `PredictBackend` protocol:
+
+  dense    — jitted X @ W.T + lax.top_k on the densified model. Baseline
+             and reference semantics.
+  bsr      — the block-sparse Pallas predict kernel fused with the blocked
+             Pallas top-k (kernels/bsr_predict.ops.bsr_predict_topk); the
+             model stays in packed BSR form end-to-end, compute scales with
+             block density.
+  sharded  — label-sharded local-topk + all-gather merge
+             (core.prediction.predict_topk_sharded) on a device mesh; only
+             k*n_shards candidates ever cross the interconnect.
+
+All three produce identical top-k label ids on the same pruned model: the
+padding labels a backend introduces (BSR block padding, shard divisibility
+padding) are masked below any real score before the merge, and fully pruned
+real labels keep their exact-zero dense score in every backend.
+
+Request-side machinery lives here too: the engine pulls requests through
+`serve.batching.MicroBatchQueue` (size-bucketed padding of ragged streams),
+warms up one XLA compile per bucket, and tracks per-request latency
+percentiles. Models load from the sparse checkpoint artifact written by
+`BlockSparseModel.save` — saved once offline like the paper's per-batch
+model files, served without re-densifying (the dense/sharded backends
+densify in memory at load; the checkpoint on disk is always sparse).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Iterable, Protocol, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.prediction import predict_topk_sharded
+from repro.core.pruning import BlockSparseModel, to_block_sparse
+from repro.serve.batching import (DEFAULT_BUCKETS, LatencyStats,
+                                  MicroBatchQueue)
+
+Array = jax.Array
+
+BACKENDS = ("dense", "bsr", "sharded")
+
+
+class PredictBackend(Protocol):
+    """What the engine needs from a scoring implementation."""
+
+    name: str
+    n_labels: int
+    k: int
+
+    def topk(self, x: Array) -> tuple[Array, Array]:
+        """x (n, D) -> (scores, label ids), each (n, k)."""
+        ...
+
+
+class DenseBackend:
+    """Reference semantics: jitted dense scores + lax.top_k."""
+
+    name = "dense"
+
+    def __init__(self, W: Array, k: int, *, n_labels: int | None = None):
+        self.k = k
+        self.n_labels = int(n_labels if n_labels is not None else W.shape[0])
+        W = W[:self.n_labels]                      # drop any padding rows
+        self._W = jnp.asarray(W)
+        self._fn = jax.jit(lambda x: jax.lax.top_k(x @ self._W.T, k))
+
+    def topk(self, x: Array) -> tuple[Array, Array]:
+        return self._fn(x)
+
+
+class BsrBackend:
+    """Packed block-sparse model through the Pallas predict+topk kernels."""
+
+    name = "bsr"
+
+    def __init__(self, model: BlockSparseModel, k: int,
+                 *, n_labels: int | None = None, interpret: bool = True):
+        from repro.kernels.bsr_predict import ops as bsr_ops
+        self.k = k
+        self.n_labels = int(n_labels if n_labels is not None
+                            else model.n_labels)
+        self.model = model
+        self._fn = jax.jit(
+            lambda x: bsr_ops.bsr_predict_topk(
+                x, model, k, n_labels=self.n_labels, interpret=interpret))
+
+    def topk(self, x: Array) -> tuple[Array, Array]:
+        return self._fn(x)
+
+
+class ShardedBackend:
+    """Mesh label-sharded local-topk + all-gather merge (paper §2.2.1)."""
+
+    name = "sharded"
+
+    def __init__(self, W: Array, k: int, mesh, *, label_axis: str = "model",
+                 n_labels: int | None = None):
+        self.k = k
+        self.n_labels = int(n_labels if n_labels is not None else W.shape[0])
+        n_shards = mesh.shape[label_axis]
+        L = W.shape[0]
+        Lp = ((L + n_shards - 1) // n_shards) * n_shards
+        if Lp != L:                                 # shard-divisibility pad
+            W = jnp.concatenate(
+                [W, jnp.zeros((Lp - L, W.shape[1]), W.dtype)], axis=0)
+        self._W = jnp.asarray(W)
+        self._fn = jax.jit(
+            lambda x: predict_topk_sharded(x, self._W, k, mesh,
+                                           label_axis=label_axis,
+                                           n_labels=self.n_labels))
+
+    def topk(self, x: Array) -> tuple[Array, Array]:
+        return self._fn(x)
+
+
+def make_backend(kind: str, bsr: BlockSparseModel, k: int, *,
+                 n_labels: int | None = None, mesh=None,
+                 label_axis: str = "model",
+                 interpret: bool = True) -> PredictBackend:
+    """Build any backend from the one canonical model artifact (packed BSR).
+
+    dense/sharded densify in memory, sliced back to the true (L, D) so
+    block padding never surfaces; bsr serves the packed form directly (its
+    kernel pads x internally and its top-k masks padding labels).
+    """
+    n_labels = int(n_labels if n_labels is not None else bsr.n_labels)
+    n_features = bsr.n_features
+    if kind == "dense":
+        return DenseBackend(bsr.to_dense()[:n_labels, :n_features], k,
+                            n_labels=n_labels)
+    if kind == "bsr":
+        return BsrBackend(bsr, k, n_labels=n_labels, interpret=interpret)
+    if kind == "sharded":
+        if mesh is None:
+            from repro.launch.mesh import make_host_mesh
+            mesh = make_host_mesh(1, jax.device_count())
+        return ShardedBackend(bsr.to_dense()[:n_labels, :n_features], k,
+                              mesh, label_axis=label_axis, n_labels=n_labels)
+    raise ValueError(f"unknown backend {kind!r}; expected one of {BACKENDS}")
+
+
+@dataclasses.dataclass
+class XMCResult:
+    """Answer to one request: top-k labels for each of its instances."""
+    request_id: int
+    scores: np.ndarray                 # (n_i, k)
+    labels: np.ndarray                 # (n_i, k) true label ids
+
+
+class XMCEngine:
+    """Micro-batched top-k label serving over a `PredictBackend`.
+
+    The engine owns the request queue, bucket padding, per-bucket warm-up
+    compilation, and latency accounting; the backend owns the math.
+    """
+
+    def __init__(self, backend: PredictBackend,
+                 buckets: Sequence[int] = DEFAULT_BUCKETS,
+                 *, warmup: bool = True, n_features: int | None = None):
+        self.backend = backend
+        self.queue = MicroBatchQueue(buckets)
+        self.stats = LatencyStats()
+        self._warm: set[int] = set()
+        self._n_features = n_features
+        if warmup and n_features is not None:
+            self.warmup()
+
+    @property
+    def n_features(self) -> int | None:
+        """Feature dim the engine serves (from checkpoint meta or the first
+        submitted request); None until either is known."""
+        return self._n_features
+
+    # -- model loading ------------------------------------------------------
+
+    @classmethod
+    def from_checkpoint(cls, directory: str, *, backend: str = "bsr",
+                        k: int = 5, mesh=None, interpret: bool = True,
+                        buckets: Sequence[int] = DEFAULT_BUCKETS,
+                        warmup: bool = True) -> "XMCEngine":
+        """Serve the sparse artifact written by `BlockSparseModel.save`."""
+        bsr, meta = BlockSparseModel.load(directory)
+        n_labels = int(meta.get("n_labels", bsr.n_labels))
+        be = make_backend(backend, bsr, k, n_labels=n_labels, mesh=mesh,
+                          interpret=interpret)
+        return cls(be, buckets, warmup=warmup,
+                   n_features=int(meta.get("n_features", bsr.n_features)))
+
+    @classmethod
+    def from_dismec(cls, model, *, backend: str = "dense", k: int = 5,
+                    mesh=None, block_shape: tuple[int, int] = (128, 128),
+                    interpret: bool = True,
+                    buckets: Sequence[int] = DEFAULT_BUCKETS,
+                    warmup: bool = False) -> "XMCEngine":
+        """Convenience: engine straight from an in-memory DiSMECModel."""
+        bsr = to_block_sparse(model.W, block_shape)
+        be = make_backend(backend, bsr, k, n_labels=model.W.shape[0],
+                          mesh=mesh, interpret=interpret)
+        return cls(be, buckets, warmup=warmup,
+                   n_features=int(model.W.shape[1]))
+
+    # -- serving ------------------------------------------------------------
+
+    def warmup(self, buckets: Sequence[int] | None = None) -> int:
+        """Compile the backend once per bucket shape (cold-start cost paid
+        up front, not on the first unlucky request). Returns #compiles."""
+        assert self._n_features is not None, "n_features needed for warmup"
+        done = 0
+        for b in (buckets or self.queue.buckets):
+            if b in self._warm:
+                continue
+            x = jnp.zeros((b, self._n_features), jnp.float32)
+            jax.block_until_ready(self.backend.topk(x))
+            self._warm.add(b)
+            done += 1
+        return done
+
+    def submit(self, x: np.ndarray) -> int:
+        """Enqueue one request of (n_i, D) instances; returns request id.
+
+        Shape-checked at enqueue time: a mismatched request must never
+        reach step(), where a mid-drain failure would lose the results of
+        co-batched good requests.
+        """
+        if self._n_features is None:
+            self._n_features = int(x.shape[1])
+        elif x.shape[1] != self._n_features:
+            raise ValueError(
+                f"request feature dim {x.shape[1]} != engine feature dim "
+                f"{self._n_features}")
+        return self.queue.submit(np.asarray(x, np.float32))
+
+    def step(self) -> list[XMCResult]:
+        """Drain the queue: run every micro-batch, un-pad, return results."""
+        out: dict[int, list[tuple[np.ndarray, np.ndarray]]] = {}
+        lat_by_rid: dict[int, float] = {}
+        for mb in self.queue.drain():
+            if mb.bucket not in self._warm:
+                self.warmup([mb.bucket])
+            t0 = time.time()
+            scores, labels = self.backend.topk(jnp.asarray(mb.x))
+            jax.block_until_ready(labels)
+            dt = time.time() - t0
+            # Every co-batched request waited for the same dispatch; a
+            # request split across micro-batches waited for all of them.
+            for rid in set(mb.request_ids):
+                lat_by_rid[rid] = lat_by_rid.get(rid, 0.0) + dt
+            scores, labels = np.asarray(scores), np.asarray(labels)
+            for (rid, s), (_, l) in zip(mb.split(scores), mb.split(labels)):
+                out.setdefault(rid, []).append((s, l))
+        for rid in sorted(lat_by_rid):
+            self.stats.record(lat_by_rid[rid])
+        results = []
+        for rid in sorted(out):
+            parts = out[rid]
+            results.append(XMCResult(
+                request_id=rid,
+                scores=np.concatenate([p[0] for p in parts], axis=0),
+                labels=np.concatenate([p[1] for p in parts], axis=0)))
+        return results
+
+    def serve(self, requests: Iterable[np.ndarray]) -> list[XMCResult]:
+        """Submit a whole request stream and drain it. Results are ordered
+        by request id (== submission order)."""
+        for x in requests:
+            self.submit(x)
+        return self.step()
+
+    def latency_summary(self) -> dict[str, float]:
+        return self.stats.summary()

@@ -1,0 +1,118 @@
+"""Fallback for `hypothesis` when it is unavailable (offline CI image).
+
+Exports `given`, `settings`, `st`, `hnp`. With hypothesis installed these
+are the real thing; without it, `given` degrades to running the test body
+on a handful of deterministic pseudo-random examples drawn from lightweight
+strategy stand-ins. Property tests keep running either way and the suite
+never dies at collection.
+"""
+
+from __future__ import annotations
+
+import functools
+import inspect
+
+import numpy as np
+
+try:
+    from hypothesis import given, settings, strategies as st
+    import hypothesis.extra.numpy as hnp
+    HAVE_HYPOTHESIS = True
+except ImportError:
+    HAVE_HYPOTHESIS = False
+
+    _FALLBACK_EXAMPLES = 5
+
+    class _Strategy:
+        """A sampler: example(rng) -> one concrete value."""
+
+        def __init__(self, sample):
+            self._sample = sample
+
+        def example(self, rng: np.random.Generator):
+            return self._sample(rng)
+
+    class _FloatsStrategy(_Strategy):
+        """Keeps (lo, hi) so array strategies can vectorize element draws."""
+
+        def __init__(self, lo, hi):
+            self.lo, self.hi = float(lo), float(hi)
+            super().__init__(lambda r: float(lo + (hi - lo) * r.random()))
+
+    class _St:
+        @staticmethod
+        def integers(min_value, max_value):
+            return _Strategy(
+                lambda r: int(r.integers(min_value, max_value + 1)))
+
+        @staticmethod
+        def floats(min_value, max_value, width=64, **_kw):
+            return _FloatsStrategy(min_value, max_value)
+
+        @staticmethod
+        def sampled_from(elements):
+            seq = list(elements)
+            return _Strategy(lambda r: seq[int(r.integers(len(seq)))])
+
+        @staticmethod
+        def tuples(*strategies):
+            return _Strategy(
+                lambda r: tuple(s.example(r) for s in strategies))
+
+        @staticmethod
+        def booleans():
+            return _Strategy(lambda r: bool(r.integers(2)))
+
+    st = _St()
+
+    class _Hnp:
+        @staticmethod
+        def array_shapes(min_dims=1, max_dims=3, min_side=1, max_side=10):
+            def sample(r):
+                nd = int(r.integers(min_dims, max_dims + 1))
+                return tuple(int(r.integers(min_side, max_side + 1))
+                             for _ in range(nd))
+            return _Strategy(sample)
+
+        @staticmethod
+        def arrays(dtype, shape, elements=None):
+            def sample(r):
+                shp = shape.example(r) if isinstance(shape, _Strategy) \
+                    else tuple(shape)
+                if isinstance(elements, _FloatsStrategy):
+                    a = r.uniform(elements.lo, elements.hi, size=shp)
+                elif elements is None:
+                    a = r.standard_normal(size=shp)
+                else:
+                    flat = [elements.example(r)
+                            for _ in range(int(np.prod(shp)))]
+                    a = np.asarray(flat).reshape(shp)
+                return a.astype(dtype)
+            return _Strategy(sample)
+
+    hnp = _Hnp()
+
+    def given(**strategies):
+        """Run the test on a few fixed-seed examples instead of searching."""
+        def deco(fn):
+            @functools.wraps(fn)
+            def wrapper(*args, **kwargs):
+                for seed in range(_FALLBACK_EXAMPLES):
+                    rng = np.random.default_rng(seed)
+                    example = {name: s.example(rng)
+                               for name, s in strategies.items()}
+                    fn(*args, **example, **kwargs)
+            # Hide the strategy-filled parameters from pytest's fixture
+            # resolution (functools.wraps copies the full signature).
+            sig = inspect.signature(fn)
+            kept = [p for name, p in sig.parameters.items()
+                    if name not in strategies]
+            wrapper.__signature__ = sig.replace(parameters=kept)
+            return wrapper
+        return deco
+
+    def settings(**_kwargs):
+        return lambda fn: fn
+
+
+__all__ = ["given", "settings", "st", "hnp", "HAVE_HYPOTHESIS"]

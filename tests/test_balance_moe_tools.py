@@ -4,7 +4,7 @@ roofline term model)."""
 
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from _hyp_compat import given, settings, st
 
 import jax
 import jax.numpy as jnp

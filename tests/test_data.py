@@ -2,7 +2,7 @@
 
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from _hyp_compat import given, settings, st
 
 from repro.data.xmc import (PAPER_LIKE, load_paper_like, make_xmc_dataset,
                             power_law_sizes)

@@ -3,7 +3,7 @@ hypothesis properties."""
 
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from _hyp_compat import given, settings, st
 
 import jax.numpy as jnp
 

@@ -1,8 +1,7 @@
 """Delta-pruning and block-sparse conversion — property-based (hypothesis)."""
 
 import numpy as np
-from hypothesis import given, settings, strategies as st
-import hypothesis.extra.numpy as hnp
+from _hyp_compat import given, hnp, settings, st
 
 import jax.numpy as jnp
 

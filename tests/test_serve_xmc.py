@@ -1,0 +1,289 @@
+"""XMC serving subsystem: backend equivalence, sparse checkpoint round-trip,
+and micro-batch queue/bucketing semantics."""
+
+import os
+import subprocess
+import sys
+import tempfile
+import textwrap
+
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.pruning import BlockSparseModel, prune, to_block_sparse
+from repro.serve import BACKENDS, XMCEngine, make_backend
+from repro.serve.batching import (LatencyStats, MicroBatchQueue, pad_rows,
+                                  pick_bucket)
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+def _random_pruned_bsr(L, D, *, delta=0.05, seed=0, zero_rows=()):
+    """A pruned weight matrix in both dense and packed-BSR form."""
+    rng = np.random.default_rng(seed)
+    W = rng.normal(size=(L, D)).astype(np.float32) * 0.1
+    W = np.array(prune(jnp.asarray(W), delta))   # writable copy
+    for r in zero_rows:
+        W[r] = 0.0                       # fully pruned label
+    return W, to_block_sparse(jnp.asarray(W), (128, 128))
+
+
+# ---------------------------------------------------------------------------
+# Backend equivalence
+# ---------------------------------------------------------------------------
+
+def test_backends_agree_on_topk():
+    """dense / bsr / sharded must return identical top-k label ids for the
+    same pruned model (the acceptance criterion of the serving refactor)."""
+    L, D, k = 200, 512, 5
+    W, bsr = _random_pruned_bsr(L, D, seed=1)
+    rng = np.random.default_rng(2)
+    x = jnp.asarray(rng.normal(size=(16, D)).astype(np.float32))
+
+    out = {}
+    for kind in BACKENDS:
+        be = make_backend(kind, bsr, k, n_labels=L)
+        vals, idx = be.topk(x)
+        assert vals.shape == (16, k) and idx.shape == (16, k)
+        out[kind] = np.asarray(idx)
+        assert out[kind].max() < L, f"{kind} served a padding label"
+    np.testing.assert_array_equal(out["dense"], out["bsr"])
+    np.testing.assert_array_equal(out["dense"], out["sharded"])
+
+
+def test_backends_agree_with_fully_pruned_rows():
+    """Labels whose entire weight row was Delta-pruned score exactly 0 in
+    every backend (BSR's skipped empty row-blocks included), so the top-k
+    sets still agree even when 0.0 lands inside the top-k."""
+    L, D, k = 130, 256, 5
+    zero_rows = list(range(120, 130))    # kills the whole 2nd 128-row block
+    W, bsr = _random_pruned_bsr(L, D, seed=3, zero_rows=zero_rows)
+    # With few labels and negative-leaning x@W.T, zeros enter the top-k.
+    rng = np.random.default_rng(4)
+    x = jnp.asarray(-np.abs(rng.normal(size=(8, D))).astype(np.float32))
+
+    out = {}
+    for kind in BACKENDS:
+        be = make_backend(kind, bsr, k, n_labels=L)
+        _, idx = be.topk(x)
+        out[kind] = np.asarray(idx)
+        assert out[kind].max() < L, f"{kind} served a padding label"
+    np.testing.assert_array_equal(out["dense"], out["bsr"])
+    np.testing.assert_array_equal(out["dense"], out["sharded"])
+
+
+def test_default_n_labels_never_serves_padding():
+    """Without an explicit n_labels, backends must fall back to the true
+    pre-padding label count (orig_shape), not the block-padded shape —
+    zero-score padding rows would otherwise beat negative real scores."""
+    L, D, k = 200, 512, 5
+    _, bsr = _random_pruned_bsr(L, D, seed=11)
+    assert bsr.orig_shape == (L, D) and bsr.shape[0] > L
+    rng = np.random.default_rng(12)
+    x = jnp.asarray(-np.abs(rng.normal(size=(4, D))).astype(np.float32))
+    for kind in BACKENDS:
+        be = make_backend(kind, bsr, k)          # no n_labels passed
+        _, idx = be.topk(x)
+        assert np.asarray(idx).max() < L, f"{kind} served a padding label"
+
+
+def test_backends_handle_non_block_multiple_features():
+    """D not divisible by the block width: dense/sharded must slice the
+    densified model back to (L, D) so (n, D) requests work everywhere."""
+    L, D, k = 100, 300, 3
+    W, bsr = _random_pruned_bsr(L, D, seed=13)
+    assert bsr.shape[1] > D                      # feature dim was padded
+    rng = np.random.default_rng(14)
+    x = jnp.asarray(rng.normal(size=(4, D)).astype(np.float32))
+    out = {}
+    for kind in BACKENDS:
+        be = make_backend(kind, bsr, k)
+        _, idx = be.topk(x)
+        out[kind] = np.asarray(idx)
+    np.testing.assert_array_equal(out["dense"], out["bsr"])
+    np.testing.assert_array_equal(out["dense"], out["sharded"])
+
+
+def test_engine_rejects_mismatched_request_dim():
+    L, D = 140, 256
+    _, bsr = _random_pruned_bsr(L, D, seed=15)
+    be = make_backend("dense", bsr, 3)
+    engine = XMCEngine(be, buckets=(2, 4), warmup=False, n_features=D)
+    with pytest.raises(ValueError, match="feature dim"):
+        engine.submit(np.zeros((2, D + 1), np.float32))
+
+
+def test_sharded_backend_masks_shard_padding():
+    """L not divisible by the shard count: the row padding the backend adds
+    must never appear in served results (subprocess with 8 devices)."""
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.join(REPO, "src")
+    env["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    env["JAX_PLATFORMS"] = "cpu"
+    code = """
+        import numpy as np
+        import jax, jax.numpy as jnp
+        from repro.core.pruning import prune, to_block_sparse
+        from repro.serve import make_backend
+        mesh = jax.make_mesh((1, 8), ("data", "model"))
+        rng = np.random.default_rng(0)
+        L, D, k = 50, 256, 5
+        W = prune(jnp.asarray(rng.normal(size=(L, D)), jnp.float32) * 0.1,
+                  0.05)
+        bsr = to_block_sparse(W, (128, 128))
+        dense = make_backend("dense", bsr, k, n_labels=L)
+        sharded = make_backend("sharded", bsr, k, n_labels=L, mesh=mesh)
+        x = jnp.asarray(-np.abs(rng.normal(size=(4, D))), jnp.float32)
+        _, i1 = dense.topk(x)
+        _, i2 = sharded.topk(x)
+        assert np.asarray(i2).max() < L, "padding label served"
+        np.testing.assert_array_equal(np.asarray(i1), np.asarray(i2))
+        print("OK")
+    """
+    r = subprocess.run([sys.executable, "-c", textwrap.dedent(code)],
+                       capture_output=True, text=True, env=env, timeout=560)
+    assert r.returncode == 0, f"STDOUT:\n{r.stdout}\nSTDERR:\n{r.stderr}"
+    assert "OK" in r.stdout
+
+
+# ---------------------------------------------------------------------------
+# Sparse checkpoint round-trip
+# ---------------------------------------------------------------------------
+
+def test_block_sparse_checkpoint_roundtrip():
+    """blocks / block_rows / block_cols / row_ptr / shapes / meta all
+    survive save -> load exactly; the loaded model serves identically."""
+    L, D = 200, 512
+    W, bsr = _random_pruned_bsr(L, D, seed=5)
+    meta = {"n_labels": L, "n_features": D, "delta": 0.05}
+    with tempfile.TemporaryDirectory() as d:
+        bsr.save(d, meta=meta)
+        loaded, meta2 = BlockSparseModel.load(d)
+    assert meta2 == meta
+    assert loaded.shape == bsr.shape
+    assert loaded.block_shape == bsr.block_shape
+    np.testing.assert_array_equal(np.asarray(loaded.blocks),
+                                  np.asarray(bsr.blocks))
+    np.testing.assert_array_equal(np.asarray(loaded.block_rows),
+                                  np.asarray(bsr.block_rows))
+    np.testing.assert_array_equal(np.asarray(loaded.block_cols),
+                                  np.asarray(bsr.block_cols))
+    np.testing.assert_array_equal(np.asarray(loaded.row_ptr),
+                                  np.asarray(bsr.row_ptr))
+    np.testing.assert_array_equal(np.asarray(loaded.to_dense())[:L, :D], W)
+
+
+def test_engine_from_checkpoint_serves():
+    """End-to-end: save sparse artifact, load an engine, serve a ragged
+    stream, get per-request results in submission order."""
+    L, D = 140, 256
+    _, bsr = _random_pruned_bsr(L, D, seed=6)
+    rng = np.random.default_rng(7)
+    requests = [rng.normal(size=(int(n), D)).astype(np.float32)
+                for n in rng.integers(1, 6, size=9)]
+    with tempfile.TemporaryDirectory() as d:
+        bsr.save(d, meta={"n_labels": L, "n_features": D})
+        engine = XMCEngine.from_checkpoint(d, backend="dense", k=3,
+                                           warmup=False)
+        results = engine.serve(requests)
+    assert [r.request_id for r in results] == list(range(9))
+    for req, res in zip(requests, results):
+        assert res.labels.shape == (req.shape[0], 3)
+        assert res.scores.shape == (req.shape[0], 3)
+        assert res.labels.max() < L
+    stats = engine.latency_summary()
+    assert stats["count"] == 9 and stats["p99_ms"] >= stats["p50_ms"]
+
+
+# ---------------------------------------------------------------------------
+# Queue / bucketing
+# ---------------------------------------------------------------------------
+
+def test_pick_bucket_and_pad_rows():
+    assert pick_bucket(1, (1, 4, 16)) == 1
+    assert pick_bucket(3, (1, 4, 16)) == 4
+    assert pick_bucket(16, (1, 4, 16)) == 16
+    with pytest.raises(ValueError):
+        pick_bucket(17, (1, 4, 16))
+    x = np.ones((3, 5), np.float32)
+    p = pad_rows(x, 8)
+    assert p.shape == (8, 5)
+    np.testing.assert_array_equal(p[:3], x)
+    assert (p[3:] == 0).all()
+
+
+def test_micro_batch_queue_coalesces_and_unpads():
+    """Ragged requests coalesce FIFO into bucket-padded batches and split
+    back to per-request rows without loss or reordering."""
+    q = MicroBatchQueue(buckets=(2, 4, 8))
+    sizes = [3, 2, 1, 5, 8, 1]
+    reqs = [np.full((n, 4), i, np.float32)
+            for i, n in enumerate(sizes)]
+    rids = [q.submit(r) for r in reqs]
+    assert rids == list(range(6))
+
+    got: dict[int, list[np.ndarray]] = {}
+    for mb in q.drain():
+        assert mb.bucket in (2, 4, 8)
+        assert mb.x.shape[0] == mb.bucket
+        assert sum(mb.row_counts) <= mb.bucket
+        for rid, rows in mb.split(mb.x):
+            got.setdefault(rid, []).append(rows)
+    assert len(q) == 0
+    for i, n in enumerate(sizes):
+        rows = np.concatenate(got[i], axis=0)
+        assert rows.shape == (n, 4)
+        assert (rows == i).all()         # request identity preserved
+
+
+def test_micro_batch_queue_splits_oversize_requests():
+    q = MicroBatchQueue(buckets=(2, 4))
+    rid = q.submit(np.ones((10, 3), np.float32))
+    batches = list(q.drain())
+    assert all(mb.bucket <= 4 for mb in batches)
+    total = sum(sum(mb.row_counts) for mb in batches)
+    assert total == 10
+    assert all(set(mb.request_ids) == {rid} for mb in batches)
+
+
+def test_queue_rejects_empty_request():
+    q = MicroBatchQueue(buckets=(2, 4))
+    with pytest.raises(ValueError, match="empty request"):
+        q.submit(np.zeros((0, 3), np.float32))
+
+
+def test_split_request_counts_once_in_latency_stats():
+    """A request split across micro-batches is one request: one latency
+    sample (the sum of its dispatches), one result."""
+    L, D = 140, 256
+    _, bsr = _random_pruned_bsr(L, D, seed=9)
+    be = make_backend("dense", bsr, 3, n_labels=L)
+    engine = XMCEngine(be, buckets=(2, 4), warmup=False, n_features=D)
+    rng = np.random.default_rng(10)
+    results = engine.serve([rng.normal(size=(10, D)).astype(np.float32)])
+    assert len(results) == 1
+    assert results[0].labels.shape == (10, 3)
+    assert engine.latency_summary()["count"] == 1
+
+
+def test_latency_stats_percentiles():
+    s = LatencyStats()
+    for ms in [1, 2, 3, 4, 100]:
+        s.record(ms / 1e3)
+    out = s.summary()
+    assert out["count"] == 5
+    assert out["p50_ms"] == pytest.approx(3.0)
+    assert out["p99_ms"] > out["p50_ms"]
+
+
+def test_engine_bucket_warmup_counts():
+    """warmup compiles each bucket once and never recompiles it."""
+    L, D = 140, 256
+    _, bsr = _random_pruned_bsr(L, D, seed=8)
+    be = make_backend("dense", bsr, 3, n_labels=L)
+    engine = XMCEngine(be, buckets=(2, 4), warmup=False, n_features=D)
+    assert engine.warmup() == 2
+    assert engine.warmup() == 0          # idempotent

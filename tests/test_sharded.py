@@ -133,13 +133,14 @@ def test_dryrun_smoke_config_compiles_on_8dev_mesh():
     step on a (2, 4) mesh via the dryrun machinery."""
     out = _run("""
         import jax
+        from repro import compat
         from repro.launch.dryrun import build_lowerable
         mesh = jax.make_mesh((2, 4), ("data", "model"))
         fn, args = build_lowerable("qwen1.5-0.5b", "train_4k", mesh,
                                    smoke=True)
         with mesh:
             compiled = jax.jit(fn).lower(*args).compile()
-        assert compiled.cost_analysis()["flops"] > 0
+        assert compat.cost_analysis(compiled)["flops"] > 0
         print("OK")
     """)
     assert "OK" in out
