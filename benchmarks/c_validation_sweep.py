@@ -18,7 +18,7 @@ import numpy as np
 
 import jax.numpy as jnp
 
-from benchmarks._common import load, print_table
+from benchmarks._common import LABEL_BATCH, load, print_table
 from repro.core.dismec import (DiSMECConfig, balance_permutation,
                                signs_from_labels, train, train_label_batch)
 from repro.core.prediction import evaluate, predict_topk
@@ -37,8 +37,10 @@ def run(dataset: str = "wiki31k_like") -> list[dict]:
 
     rows = []
     for C in CS:
+        # Batched scheduler path (label_batch < n_labels), like production.
         m = train(Xt, Yt, DiSMECConfig(C=C, delta=0.01,
-                                       label_batch=data.n_labels))
+                                       label_batch=min(data.n_labels,
+                                                       LABEL_BATCH)))
         _, idx = predict_topk(Xv, m.W, 5)
         ev = evaluate(Yv, idx)
         rows.append({"C": C, "val_P@1": ev["P@1"], "val_P@5": ev["P@5"],

@@ -12,6 +12,7 @@ Modules (deliverable d):
   table_model_size       SS4.2 (model size accounting + paper-scale check)
   table_prediction_speed SS4.3 (prediction latency + BSR flops ratio)
   c_validation_sweep     SS3.3 (C tuned on validation) + shard balance
+  train_pipeline         streaming label-batch training: throughput/mem/resume
   serve_latency          serving-engine p50/p99 per predict backend
   roofline               deliverable (g): 3-term roofline from the dry-run
 """
@@ -33,6 +34,7 @@ MODULES = [
     "table_model_size",
     "table_prediction_speed",
     "c_validation_sweep",
+    "train_pipeline",
     "serve_latency",
     "roofline",
 ]

@@ -15,13 +15,10 @@ import time
 
 import numpy as np
 
-import jax.numpy as jnp
-
 from benchmarks._common import emit_json, print_table
-from repro.core.dismec import DiSMECConfig, train
-from repro.core.pruning import to_block_sparse
-from repro.data.xmc import make_xmc_dataset
+from repro.checkpoint.io import load_block_sparse
 from repro.serve import BACKENDS, XMCEngine
+from repro.train.xmc import train_demo_checkpoint
 
 OUT_JSON = "BENCH_serve.json"
 
@@ -31,26 +28,24 @@ K = 5
 
 
 def main():
-    data = make_xmc_dataset(n_train=800, n_test=512, n_features=4096,
-                            n_labels=256, seed=0)
-    model = train(jnp.asarray(data.X_train), jnp.asarray(data.Y_train),
-                  DiSMECConfig(delta=0.01, label_batch=256))
-    bsr = to_block_sparse(model.W, (128, 128))
-
-    rng = np.random.default_rng(0)
-    X = np.asarray(data.X_test, np.float32)
-    requests = []
-    for _ in range(N_REQUESTS):
-        n_i = int(rng.integers(1, MAX_ROWS + 1))
-        rows = rng.integers(0, X.shape[0], size=n_i)
-        requests.append(X[rows])
-    n_inst = sum(r.shape[0] for r in requests)
-
     rows_out = []
     with tempfile.TemporaryDirectory() as ckpt:
-        bsr.save(ckpt, meta={"n_labels": data.n_labels,
-                             "n_features": data.n_features,
-                             "delta": model.delta})
+        # Shared demo pipeline (streaming label-batch trainer) — the same
+        # setup behind launch/serve.py --xmc and examples/serve_xmc.py.
+        data, _ = train_demo_checkpoint(ckpt, n_train=800, n_test=512,
+                                        n_features=4096, n_labels=256,
+                                        label_batch=128, seed=0)
+        bsr, _ = load_block_sparse(ckpt)
+
+        rng = np.random.default_rng(0)
+        X = np.asarray(data.X_test, np.float32)
+        requests = []
+        for _ in range(N_REQUESTS):
+            n_i = int(rng.integers(1, MAX_ROWS + 1))
+            rows = rng.integers(0, X.shape[0], size=n_i)
+            requests.append(X[rows])
+        n_inst = sum(r.shape[0] for r in requests)
+
         for kind in BACKENDS:
             t0 = time.time()
             engine = XMCEngine.from_checkpoint(ckpt, backend=kind, k=K)

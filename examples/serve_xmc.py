@@ -1,11 +1,12 @@
 """Serving example: a thin client of the XMC serving subsystem.
 
-Trains a small DiSMEC model, saves it once as the sparse checkpoint
-artifact (the paper's offline model files), then serves the same ragged
-request stream through each predict backend of `repro.serve.XMCEngine`
-(dense / BSR-Pallas / mesh-sharded) and reports latency percentiles,
-accuracy of served answers, and cross-backend agreement. Also runs the LM
-serving path to show both engines share one subsystem.
+Streams a small DiSMEC model into the sparse multi-shard checkpoint (the
+paper's offline model files, written by the label-batch training pipeline),
+then serves the same ragged request stream through each predict backend of
+`repro.serve.XMCEngine` (dense / BSR-Pallas / mesh-sharded) and reports
+latency percentiles, accuracy of served answers, and cross-backend
+agreement. Also runs the LM serving path to show both engines share one
+subsystem.
 
 Run: PYTHONPATH=src python examples/serve_xmc.py
 """
@@ -17,28 +18,24 @@ import numpy as np
 
 import jax.numpy as jnp
 
-from repro.core.dismec import DiSMECConfig, train
+from repro.checkpoint.io import load_block_sparse
 from repro.core.prediction import evaluate
-from repro.core.pruning import to_block_sparse
-from repro.data.xmc import make_xmc_dataset
 from repro.kernels.bsr_predict import ops as bsr_ops
 from repro.serve import BACKENDS, XMCEngine
+from repro.train.xmc import train_demo_checkpoint
 
 
 def serve_xmc():
     print("== XMC serving (paper SS2.2.1) ==")
-    data = make_xmc_dataset(n_train=1000, n_test=512, n_features=4096,
-                            n_labels=256, seed=0)
-    model = train(jnp.asarray(data.X_train), jnp.asarray(data.Y_train),
-                  DiSMECConfig(delta=0.01, label_batch=256))
-    bsr = to_block_sparse(model.W, (128, 128))
-    print(f"model: {model.W.shape}, block density {bsr.density:.3f}")
-
-    # The paper's offline model file: saved sparse once, served many times.
+    # The paper's offline model files: streamed sparse once (shared demo
+    # pipeline, also behind launch/serve.py --xmc), served many times.
     with tempfile.TemporaryDirectory() as ckpt:
-        bsr.save(ckpt, meta={"n_labels": data.n_labels,
-                             "n_features": data.n_features,
-                             "delta": model.delta})
+        data, _ = train_demo_checkpoint(ckpt, n_train=1000, n_test=512,
+                                        n_features=4096, n_labels=256,
+                                        label_batch=128, seed=0)
+        bsr, _ = load_block_sparse(ckpt)
+        print(f"model: {(data.n_labels, data.n_features)}, "
+              f"block density {bsr.density:.3f}")
 
         # A ragged request stream over the test pool.
         rng = np.random.default_rng(0)

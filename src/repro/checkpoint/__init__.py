@@ -1,6 +1,8 @@
-from repro.checkpoint.io import (load_block_sparse, load_block_sparse_meta,
+from repro.checkpoint.io import (BlockSparseWriter, has_block_sparse_checkpoint,
+                                 load_block_sparse, load_block_sparse_meta,
                                  restore_pytree, save_block_sparse,
                                  save_pytree)
 
 __all__ = ["save_pytree", "restore_pytree", "save_block_sparse",
-           "load_block_sparse", "load_block_sparse_meta"]
+           "load_block_sparse", "load_block_sparse_meta",
+           "BlockSparseWriter", "has_block_sparse_checkpoint"]

@@ -8,6 +8,19 @@ Beyond pytrees, `save_block_sparse` / `load_block_sparse` round-trip the
 packed BSR artifact (`core.pruning.BlockSparseModel`) that the XMC serving
 subsystem loads: a pruned model is converted once offline — like the paper's
 per-batch model files — and served by any backend without re-densifying.
+
+Two on-disk layouts share one loader:
+
+  single-shard — `bsr_arrays.npz` + `bsr_index.json`, written in one shot by
+                 `save_block_sparse` after an in-memory conversion;
+  multi-shard  — `shard-<batch>.npz` per label batch + `bsr_manifest.json`,
+                 appended incrementally by `BlockSparseWriter` as the
+                 streaming trainer (train/xmc.py) finishes each batch. The
+                 manifest is rewritten atomically after every shard, so a
+                 killed job resumes by skipping the batches already listed;
+                 `load_block_sparse` stitches the shards back into one
+                 `BlockSparseModel` (pure row_ptr bookkeeping, no re-tiling)
+                 so the serving engine never sees the difference.
 """
 
 from __future__ import annotations
@@ -82,21 +95,220 @@ def save_block_sparse(model, directory: str, *, meta: dict | None = None):
         json.dump(index, f, indent=1)
 
 
+BSR_MANIFEST = "bsr_manifest.json"
+
+
+class BlockSparseWriter:
+    """Incremental multi-shard BSR checkpoint (the paper's per-batch model
+    files, written as training goes rather than after it).
+
+    One `shard-<batch>.npz` per label batch plus a JSON manifest. Each
+    `write_batch` first writes the shard file, then atomically rewrites the
+    manifest (tmp + rename) — a crash between the two leaves an orphan shard
+    that the next run simply re-solves and overwrites, so the manifest is
+    always the ground truth for what is done. `done_batches` is what a
+    resumed `XMCTrainJob` skips.
+    """
+
+    def __init__(self, directory: str, *, n_labels: int, n_features: int,
+                 block_shape: tuple[int, int], label_batch: int,
+                 n_batches: int, solver: dict | None = None,
+                 meta: dict | None = None, resume: bool = True):
+        """`solver` is an opaque dict of whatever determined the solution
+        (hyperparameters, dataset fingerprint): it is stored in the manifest
+        and must match exactly on resume — shards solved under different
+        settings must never be stitched into one 'complete' checkpoint."""
+        self.directory = directory
+        os.makedirs(directory, exist_ok=True)
+        self._path = os.path.join(directory, BSR_MANIFEST)
+        # A single-shard artifact in the same directory would shadow the
+        # stream on load (load_block_sparse prefers BSR_INDEX): refuse to
+        # write behind it unless the caller explicitly starts fresh.
+        index_path = os.path.join(directory, BSR_INDEX)
+        if os.path.exists(index_path):
+            if resume:
+                raise ValueError(
+                    f"{directory} already holds a single-shard checkpoint "
+                    f"({BSR_INDEX}), which would shadow the streamed one on "
+                    "load; pass resume=False to replace it, or stream into "
+                    "a different directory")
+            os.remove(index_path)
+            try:
+                os.remove(os.path.join(directory, BSR_ARRAYS))
+            except OSError:
+                pass
+        header = {
+            "format": "bsr-stream",
+            "n_labels": int(n_labels), "n_features": int(n_features),
+            "block_shape": [int(b) for b in block_shape],
+            "label_batch": int(label_batch), "n_batches": int(n_batches),
+            "solver": dict(solver or {}),
+        }
+        existing = None
+        if os.path.exists(self._path):
+            with open(self._path) as f:
+                existing = json.load(f)
+        if existing is not None and resume:
+            mismatch = {k: (existing.get(k), v) for k, v in header.items()
+                        if existing.get(k) != v}
+            if mismatch:
+                raise ValueError(
+                    f"cannot resume into {directory}: manifest disagrees on "
+                    f"{mismatch}; pass resume=False to start fresh")
+            self.manifest = existing
+        else:
+            if existing is not None:                 # fresh start: drop shards
+                for s in existing.get("shards", {}).values():
+                    try:
+                        os.remove(os.path.join(directory, s["file"]))
+                    except OSError:
+                        pass
+            self.manifest = {**header, "complete": False, "shards": {},
+                             "meta": dict(meta or {})}
+            self._flush()
+        if meta:
+            self.manifest["meta"].update(meta)
+
+    @property
+    def complete(self) -> bool:
+        return bool(self.manifest.get("complete"))
+
+    @property
+    def done_batches(self) -> set[int]:
+        return {int(b) for b in self.manifest["shards"]}
+
+    def _flush(self) -> None:
+        tmp = self._path + ".tmp"
+        with open(tmp, "w") as f:
+            json.dump(self.manifest, f, indent=1, sort_keys=True)
+        os.replace(tmp, self._path)
+
+    def write_batch(self, batch: int, part, *, row_start: int,
+                    n_rows: int) -> None:
+        """Append one solved label batch (append-form `BlockSparseModel`,
+        see `core.pruning.to_block_sparse(row_block_offset=...)`)."""
+        blocks = np.asarray(part.blocks)
+        fname = f"shard-{batch:05d}.npz"
+        np.savez_compressed(
+            os.path.join(self.directory, fname),
+            blocks=blocks,
+            block_rows=np.asarray(part.block_rows),
+            block_cols=np.asarray(part.block_cols),
+            row_ptr=np.asarray(part.row_ptr))
+        self.manifest["shards"][str(int(batch))] = {
+            "file": fname, "row_start": int(row_start),
+            "n_rows": int(n_rows), "padded_rows": int(part.shape[0]),
+            "n_blocks": int(blocks.shape[0]),
+            "nnz": int(np.count_nonzero(blocks)),
+        }
+        self._flush()
+
+    def read_batch_dense(self, batch: int) -> np.ndarray:
+        """Densify one already-written shard back to its (n_rows, D) weight
+        rows — the resume path of a materializing caller."""
+        entry = self.manifest["shards"][str(int(batch))]
+        data = np.load(os.path.join(self.directory, entry["file"]))
+        bl, bd = self.manifest["block_shape"]
+        D = self.manifest["n_features"]
+        row_off = entry["row_start"] // bl
+        W = np.zeros((entry["padded_rows"],
+                      -(-D // bd) * bd), np.float32)
+        for k in range(data["blocks"].shape[0]):
+            r = int(data["block_rows"][k]) - row_off
+            c = int(data["block_cols"][k])
+            W[r * bl:(r + 1) * bl, c * bd:(c + 1) * bd] = data["blocks"][k]
+        return W[:entry["n_rows"], :D]
+
+    def finalize(self) -> dict:
+        """Mark the checkpoint servable (all batches present)."""
+        missing = set(range(self.manifest["n_batches"])) - self.done_batches
+        if missing:
+            raise ValueError(f"cannot finalize: batches {sorted(missing)} "
+                             "missing from manifest")
+        self.manifest["complete"] = True
+        self._flush()
+        return self.manifest
+
+
+def has_block_sparse_checkpoint(directory: str) -> bool:
+    """True if `directory` holds a *servable* BSR checkpoint: a single-shard
+    index, or a multi-shard manifest whose job ran to completion."""
+    if os.path.exists(os.path.join(directory, BSR_INDEX)):
+        return True
+    path = os.path.join(directory, BSR_MANIFEST)
+    if not os.path.exists(path):
+        return False
+    with open(path) as f:
+        return bool(json.load(f).get("complete"))
+
+
+def _stream_index(directory: str) -> dict:
+    """Synthesize a single-shard-style index dict from a stream manifest so
+    pre-flight consumers (serving CLIs) see one schema for both layouts."""
+    with open(os.path.join(directory, BSR_MANIFEST)) as f:
+        manifest = json.load(f)
+    if not manifest.get("complete"):
+        raise ValueError(
+            f"{directory} holds an incomplete streamed checkpoint "
+            f"({len(manifest.get('shards', {}))}/{manifest.get('n_batches')} "
+            "batches); resume the training job to finish it")
+    bl, bd = manifest["block_shape"]
+    L, D = manifest["n_labels"], manifest["n_features"]
+    shards = manifest["shards"]
+    return {
+        "format": "bsr", "layout": "stream",
+        "shape": [sum(s["padded_rows"] for s in shards.values()),
+                  -(-D // bd) * bd],
+        "orig_shape": [L, D],
+        "block_shape": [bl, bd],
+        "n_blocks": sum(s["n_blocks"] for s in shards.values()),
+        "dtype": "float32",
+        "meta": manifest["meta"],
+        "manifest": manifest,
+    }
+
+
 def load_block_sparse_meta(directory: str) -> dict:
     """The index of a block-sparse checkpoint (shapes + user meta) without
-    touching the arrays — cheap pre-flight validation for serving CLIs."""
-    with open(os.path.join(directory, BSR_INDEX)) as f:
-        index = json.load(f)
-    if index.get("format") != "bsr":
-        raise ValueError(f"{directory} is not a block-sparse checkpoint")
-    return index
+    touching the arrays — cheap pre-flight validation for serving CLIs.
+    Reads both the single-shard and the streamed multi-shard layout."""
+    if os.path.exists(os.path.join(directory, BSR_INDEX)):
+        with open(os.path.join(directory, BSR_INDEX)) as f:
+            index = json.load(f)
+        if index.get("format") != "bsr":
+            raise ValueError(f"{directory} is not a block-sparse checkpoint")
+        return index
+    if os.path.exists(os.path.join(directory, BSR_MANIFEST)):
+        return _stream_index(directory)
+    raise FileNotFoundError(
+        f"no block-sparse checkpoint (index or manifest) in {directory}")
 
 
 def load_block_sparse(directory: str):
-    """Returns (BlockSparseModel, meta dict). Inverse of save_block_sparse."""
-    from repro.core.pruning import BlockSparseModel   # deferred: no cycle
+    """Returns (BlockSparseModel, meta dict). Reads both layouts: the
+    one-shot artifact written by `save_block_sparse` and the multi-shard
+    stream written by `BlockSparseWriter` (shards are stitched by row_ptr
+    bookkeeping — no block is ever unpacked)."""
+    from repro.core.pruning import (BlockSparseModel,       # deferred: no
+                                    concat_block_sparse)    # import cycle
 
     index = load_block_sparse_meta(directory)
+    if index.get("layout") == "stream":
+        manifest = index["manifest"]
+        bl, bd = manifest["block_shape"]
+        parts = []
+        for b in sorted(manifest["shards"], key=int):
+            entry = manifest["shards"][b]
+            data = np.load(os.path.join(directory, entry["file"]))
+            parts.append(BlockSparseModel(
+                blocks=jnp.asarray(data["blocks"]),
+                block_rows=jnp.asarray(data["block_rows"]),
+                block_cols=jnp.asarray(data["block_cols"]),
+                row_ptr=jnp.asarray(data["row_ptr"]),
+                shape=(entry["padded_rows"], index["shape"][1]),
+                block_shape=(bl, bd)))
+        model = concat_block_sparse(parts, tuple(index["orig_shape"]))
+        return model, index["meta"]
     data = np.load(os.path.join(directory, BSR_ARRAYS))
     model = BlockSparseModel(
         blocks=jnp.asarray(data["blocks"]),

@@ -1,10 +1,11 @@
 """DiSMEC core: distributed sparse one-vs-rest machines (the paper's contribution)."""
 
-from repro.core.dismec import (DiSMECConfig, DiSMECModel, signs_from_labels,
-                               train, train_label_batch, train_sharded)
-from repro.core.pruning import (ambiguous_fraction, nnz, prune, sparsity,
-                                to_block_sparse, weight_histogram,
-                                BlockSparseModel)
+from repro.core.dismec import (DiSMECConfig, DiSMECModel, make_batch_solver,
+                               signs_from_labels, train, train_label_batch,
+                               train_sharded)
+from repro.core.pruning import (ambiguous_fraction, concat_block_sparse, nnz,
+                                prune, sparsity, to_block_sparse,
+                                weight_histogram, BlockSparseModel)
 from repro.core.prediction import (evaluate, ndcg_at_k, precision_at_k,
                                    predict_scores, predict_topk,
                                    predict_topk_sharded)
@@ -12,8 +13,9 @@ from repro.core import head, losses, tron
 
 __all__ = [
     "DiSMECConfig", "DiSMECModel", "signs_from_labels", "train",
-    "train_label_batch", "train_sharded", "prune", "nnz", "sparsity",
-    "ambiguous_fraction", "weight_histogram", "to_block_sparse",
+    "train_label_batch", "train_sharded", "make_batch_solver", "prune",
+    "nnz", "sparsity", "ambiguous_fraction", "weight_histogram",
+    "to_block_sparse", "concat_block_sparse",
     "BlockSparseModel", "predict_scores", "predict_topk",
     "predict_topk_sharded", "precision_at_k", "ndcg_at_k", "evaluate",
     "head", "losses", "tron",

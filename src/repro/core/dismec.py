@@ -15,18 +15,22 @@ same device buffer. Beyond the paper, `shard_data=True` additionally shards
 the *instance* axis over the mesh `data` axis and reconstitutes gradients /
 Hessian-vector products with `psum` — the collective-based Newton-CG the
 paper could not express on a CPU cluster.
+
+Layer 1's sequential batch loop itself lives in train/xmc.py
+(`XMCTrainJob`): `train` and `train_sharded` here are thin wrappers over
+that one scheduler, and this module contributes the layer-2 engine
+(`make_batch_solver`) every path shares.
 """
 
 from __future__ import annotations
 
 import dataclasses
-from functools import partial
 from typing import Optional
 
 import jax
 import jax.numpy as jnp
 import numpy as np
-from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+from jax.sharding import Mesh, PartitionSpec as P
 
 from repro.compat import shard_map
 from repro.core import losses
@@ -107,34 +111,20 @@ def train_label_batch(X: Array, S: Array, cfg: DiSMECConfig,
 
 def train(X: Array, Y: Array, cfg: DiSMECConfig = DiSMECConfig()) -> DiSMECModel:
     """Algorithm 1 on one device: sequential label batches (layer 1),
-    batched TRON per batch (layer 2), Delta-pruning per batch (step 7)."""
-    N, L = Y.shape
-    S_full = signs_from_labels(Y)                     # (L, N)
-    B = L // cfg.label_batch + (1 if L % cfg.label_batch else 0)
-    blocks = []
-    for b in range(B):                                # paper's step 3 loop
-        S = S_full[b * cfg.label_batch:(b + 1) * cfg.label_batch]
-        res = train_label_batch(X, S, cfg)
-        blocks.append(prune(res.W, cfg.delta))        # step 7: model reduction
-    W = jnp.concatenate(blocks, axis=0)               # step 11: assemble W_{D,L}
-    return DiSMECModel(W=W, delta=cfg.delta, n_labels=L)
+    batched TRON per batch (layer 2), Delta-pruning per batch (step 7).
+
+    Thin wrapper over the one batch-scheduler code path (train/xmc.py,
+    `XMCTrainJob`) with the in-memory assembly step 11; pass the job an
+    output directory instead to stream the batches straight to a sparse
+    multi-shard checkpoint and never assemble W at all.
+    """
+    from repro.train.xmc import XMCTrainJob           # deferred: no cycle
+    return XMCTrainJob(cfg=cfg).run(X, Y).model
 
 
 # ---------------------------------------------------------------------------
 # Mesh-sharded solve: labels over `model`, optionally instances over `data`.
 # ---------------------------------------------------------------------------
-
-def _pad_labels(S: Array, n_shards: int) -> tuple[Array, int]:
-    L = S.shape[0]
-    Lp = ((L + n_shards - 1) // n_shards) * n_shards
-    if Lp != L:
-        # Padding labels have all-negative sign vectors; their solution is
-        # w = 0 (objective minimized at 0 when no positives and C small) —
-        # they converge instantly and are sliced away afterwards.
-        pad = -jnp.ones((Lp - L, S.shape[1]), S.dtype)
-        S = jnp.concatenate([S, pad], axis=0)
-    return S, Lp
-
 
 def balance_permutation(Y: Array, n_shards: int) -> np.ndarray:
     """Frequency-balanced label->shard assignment (beyond paper, DESIGN §2).
@@ -164,33 +154,54 @@ def balance_permutation(Y: Array, n_shards: int) -> np.ndarray:
     return perm
 
 
-def train_sharded(X: Array, Y: Array, cfg: DiSMECConfig, mesh: Mesh,
-                  *, label_axis: str = "model", data_axis: str = "data",
-                  shard_data: bool = False,
-                  balance: bool = False) -> DiSMECModel:
-    """Double parallelization on a mesh (paper layer 1 == label sharding).
+def make_batch_solver(X: Array, cfg: DiSMECConfig, mesh: Optional[Mesh] = None,
+                      *, label_axis: str = "model", data_axis: str = "data",
+                      shard_data: bool = False):
+    """Layer 2 of Algorithm 1 as a reusable jitted solver: S (rows, N) ->
+    Delta-pruned W (rows, D), rows a multiple of the label-shard count when
+    a mesh is given. The one code path behind `train`, `train_sharded` and
+    the streaming scheduler (train/xmc.py) — the scheduler keeps every label
+    batch the same padded shape so all batches share one executable.
 
+    mesh=None        : single-device batched TRON.
     shard_data=False : paper-faithful — X replicated per label-shard "node".
     shard_data=True  : beyond-paper — X sharded over `data`, grad/Hv psum'd.
-    balance=True     : beyond-paper — frequency-balanced label shards
-                       (equalizes per-shard TRON wall time; solution is
-                       identical, labels are permuted and un-permuted).
+                       N not divisible by the data axis is handled by padding
+                       X with zero rows and S with all-negative sign columns:
+                       a zero instance contributes nothing to the gradient or
+                       the Hessian-vector product (every term carries a factor
+                       of x = 0), and its constant C contribution to the
+                       squared-hinge objective (z = 1 - s*0 = 1, active) is
+                       subtracted back out after the psum, so the padded
+                       objective is exactly the unpadded one.
     """
-    S_full = signs_from_labels(Y)
-    n_label_shards = mesh.shape[label_axis]
-    perm = None
-    if balance:
-        perm = balance_permutation(Y, n_label_shards)
-        S_full = S_full[jnp.asarray(perm)]
-    S_pad, Lp = _pad_labels(S_full, n_label_shards)
+    X = jnp.asarray(X, jnp.float32)
     D = X.shape[1]
 
+    def solve_local(X_in: Array, S_in: Array) -> Array:
+        obj_grad, hvp, act_fn = _make_fns(X_in, S_in, cfg.C, cfg.use_pallas)
+        W0 = jnp.zeros((S_in.shape[0], D), jnp.float32)
+        res = tron_solve(obj_grad, hvp, act_fn, W0, eps=cfg.eps,
+                         max_newton=cfg.max_newton, max_cg=cfg.max_cg)
+        return prune(res.W, cfg.delta)                  # step 7 on-device
+
+    if mesh is None:
+        # X stays a traced argument (not a captured constant): XLA would
+        # otherwise try to constant-fold whole X contractions at compile.
+        jitted = jax.jit(solve_local)
+        return lambda S: jitted(X, S)
+
+    n_pad = 0
     if not shard_data:
         s_spec = P(label_axis, None)
         x_spec = P()                                    # replicated
     else:
         n_data = mesh.shape[data_axis]
-        assert X.shape[0] % n_data == 0, "N must divide data axis for psum path"
+        N = X.shape[0]
+        n_pad = (-N) % n_data                           # instance padding
+        if n_pad:
+            X = jnp.concatenate(
+                [X, jnp.zeros((n_pad, D), X.dtype)], axis=0)
         s_spec = P(label_axis, data_axis)
         x_spec = P(data_axis, None)
 
@@ -203,7 +214,8 @@ def train_sharded(X: Array, Y: Array, cfg: DiSMECConfig, mesh: Mesh,
                 r = act * (scores - S_sh)
                 f_loc = cfg.C * jnp.sum(act * z * z, axis=-1)
                 g_loc = 2.0 * cfg.C * (r @ X_sh)
-                f = jnp.sum(W * W, axis=-1) + jax.lax.psum(f_loc, data_axis)
+                f = (jnp.sum(W * W, axis=-1)
+                     + jax.lax.psum(f_loc, data_axis) - cfg.C * n_pad)
                 g = 2.0 * W + jax.lax.psum(g_loc, data_axis)
                 return f, g
 
@@ -214,20 +226,47 @@ def train_sharded(X: Array, Y: Array, cfg: DiSMECConfig, mesh: Mesh,
 
             def act_fn(W):
                 return (1.0 - S_sh * (W @ X_sh.T) > 0.0).astype(jnp.float32)
-        else:
-            obj_grad, hvp, act_fn = _make_fns(X_sh, S_sh, cfg.C, cfg.use_pallas)
 
-        W0 = jnp.zeros((S_sh.shape[0], D), jnp.float32)
-        res = tron_solve(obj_grad, hvp, act_fn, W0, eps=cfg.eps,
-                         max_newton=cfg.max_newton, max_cg=cfg.max_cg)
-        return prune(res.W, cfg.delta)                  # step 7 on-device
+            W0 = jnp.zeros((S_sh.shape[0], D), jnp.float32)
+            res = tron_solve(obj_grad, hvp, act_fn, W0, eps=cfg.eps,
+                             max_newton=cfg.max_newton, max_cg=cfg.max_cg)
+            return prune(res.W, cfg.delta)
+        return solve_local(X_sh, S_sh)
 
-    in_specs = (x_spec, s_spec)
-    out_specs = P(label_axis, None)
-    solve = shard_map(solve_shard, mesh=mesh, in_specs=in_specs,
-                      out_specs=out_specs, check_vma=False)
-    W = solve(jnp.asarray(X, jnp.float32), S_pad)[: S_full.shape[0]]
-    if perm is not None:
-        inv = np.argsort(perm)                      # undo the permutation
-        W = W[jnp.asarray(inv)]
-    return DiSMECModel(W=W, delta=cfg.delta, n_labels=Y.shape[1])
+    shmapped = shard_map(solve_shard, mesh=mesh, in_specs=(x_spec, s_spec),
+                         out_specs=P(label_axis, None), check_vma=False)
+
+    def solve(X_in: Array, S: Array) -> Array:
+        if n_pad:
+            S = jnp.concatenate(
+                [S, -jnp.ones((S.shape[0], n_pad), S.dtype)], axis=1)
+        return shmapped(X_in, S)
+
+    jitted = jax.jit(solve)
+    return lambda S: jitted(X, S)
+
+
+def train_sharded(X: Array, Y: Array, cfg: DiSMECConfig, mesh: Mesh,
+                  *, label_axis: str = "model", data_axis: str = "data",
+                  shard_data: bool = False,
+                  balance: bool = False) -> DiSMECModel:
+    """Double parallelization on a mesh (paper layer 1 == label sharding).
+
+    Thin wrapper over the batch-scheduler code path (train/xmc.py): the
+    outer label-batch loop (cfg.label_batch) wraps the mesh-sharded solve,
+    exactly like the paper's node dispatch — the old one-shot behaviour is
+    cfg.label_batch >= n_labels.
+
+    shard_data=False : paper-faithful — X replicated per label-shard "node".
+    shard_data=True  : beyond-paper — X sharded over `data`, grad/Hv psum'd
+                       (non-divisible N handled by zero-instance padding,
+                       see `make_batch_solver`).
+    balance=True     : beyond-paper — frequency-balanced label shards
+                       (equalizes per-shard TRON wall time; solution is
+                       identical, labels are permuted and un-permuted).
+    """
+    from repro.train.xmc import XMCTrainJob           # deferred: no cycle
+    job = XMCTrainJob(cfg=cfg, mesh=mesh, label_axis=label_axis,
+                      data_axis=data_axis, shard_data=shard_data,
+                      balance=balance)
+    return job.run(X, Y).model

@@ -119,9 +119,20 @@ class BlockSparseModel:
 
 
 def to_block_sparse(W: Array, block_shape: tuple[int, int] = (128, 128),
-                    pad_value: float = 0.0) -> BlockSparseModel:
+                    pad_value: float = 0.0, *, row_block_offset: int = 0,
+                    sentinel_if_empty: bool = True) -> BlockSparseModel:
     """Convert a (pruned) dense matrix to packed BSR. Host-side (numpy):
-    model conversion happens once, offline, like the paper's model files."""
+    model conversion happens once, offline, like the paper's model files.
+
+    Append/row-offset form (streaming training, train/xmc.py): with
+    `row_block_offset=k` the result describes rows [k*bl, k*bl + L) of a
+    larger matrix — `block_rows` are offset into the enclosing matrix while
+    `shape` and `row_ptr` stay local to this slice, so consecutive slices
+    concatenate with `concat_block_sparse` without re-tiling any block.
+    `sentinel_if_empty=False` lets an all-zero slice stay truly empty
+    (0 packed blocks) instead of carrying the single-zero-block sentinel
+    the standalone kernels expect.
+    """
     Wn = np.asarray(W)
     L, D = Wn.shape
     bl, bd = block_shape
@@ -138,14 +149,67 @@ def to_block_sparse(W: Array, block_shape: tuple[int, int] = (128, 128),
     blocks = tiles[rows, cols]                                  # (n_blocks, bl, bd)
     counts = np.bincount(rows, minlength=nbl)
     row_ptr = np.concatenate([[0], np.cumsum(counts)]).astype(np.int32)
-    if blocks.shape[0] == 0:                                    # fully pruned
+    if blocks.shape[0] == 0 and sentinel_if_empty:              # fully pruned
         blocks = np.zeros((1, bl, bd), Wn.dtype)
         rows = np.zeros((1,), np.int64)
         cols = np.zeros((1,), np.int64)
         row_ptr = np.zeros(nbl + 1, np.int32)
     return BlockSparseModel(
         blocks=jnp.asarray(blocks),
-        block_rows=jnp.asarray(rows, jnp.int32),
+        block_rows=jnp.asarray(rows + row_block_offset, jnp.int32),
         block_cols=jnp.asarray(cols, jnp.int32),
         row_ptr=jnp.asarray(row_ptr),
         shape=(Lp, Dp), block_shape=block_shape, orig_shape=(L, D))
+
+
+def concat_block_sparse(parts: list[BlockSparseModel],
+                        orig_shape: tuple[int, int]) -> BlockSparseModel:
+    """Stack per-batch BSR slices (append form, consecutive row ranges) into
+    one servable model without touching any packed block.
+
+    Every part must have been produced by `to_block_sparse(...,
+    row_block_offset=<its global start block>)` with the same block shape,
+    the same (padded) feature width, and row-block-aligned starts — exactly
+    what the streaming trainer emits. The merge is pure bookkeeping:
+    blocks/rows/cols concatenate, and each part's local row_ptr is shifted
+    by the packed-block count of everything before it.
+    """
+    if not parts:
+        raise ValueError("concat_block_sparse needs at least one part")
+    bl, bd = parts[0].block_shape
+    Dp = parts[0].shape[1]
+    blocks, rows, cols, row_ptr = [], [], [], [np.zeros(1, np.int32)]
+    row_block_off = 0
+    n_packed = 0
+    for p in parts:
+        if p.block_shape != (bl, bd) or p.shape[1] != Dp:
+            raise ValueError("parts disagree on block shape / feature width")
+        p_rows = np.asarray(p.block_rows, np.int64)
+        p_ptr = np.asarray(p.row_ptr, np.int64)
+        n_p = int(p_ptr[-1])            # packed blocks (0 for empty parts;
+        if n_p:                         # the sentinel would report ptr[-1]=0)
+            if p_rows[0] < row_block_off:
+                raise ValueError("part rows overlap the previous part")
+            blocks.append(np.asarray(p.blocks)[:n_p])
+            rows.append(p_rows[:n_p])
+            cols.append(np.asarray(p.block_cols, np.int64)[:n_p])
+        row_ptr.append(p_ptr[1:] + n_packed)
+        n_packed += n_p
+        row_block_off += p.shape[0] // bl
+    L, D = orig_shape
+    Lp, Dp_full = row_block_off * bl, Dp
+    if Lp < L or Dp_full < D:
+        raise ValueError(f"parts cover ({Lp}, {Dp_full}), need {orig_shape}")
+    if n_packed == 0:                                           # fully pruned
+        return BlockSparseModel(
+            blocks=jnp.zeros((1, bl, bd), jnp.float32),
+            block_rows=jnp.zeros((1,), jnp.int32),
+            block_cols=jnp.zeros((1,), jnp.int32),
+            row_ptr=jnp.zeros(row_block_off + 1, jnp.int32),
+            shape=(Lp, Dp_full), block_shape=(bl, bd), orig_shape=orig_shape)
+    return BlockSparseModel(
+        blocks=jnp.asarray(np.concatenate(blocks, axis=0)),
+        block_rows=jnp.asarray(np.concatenate(rows), jnp.int32),
+        block_cols=jnp.asarray(np.concatenate(cols), jnp.int32),
+        row_ptr=jnp.asarray(np.concatenate(row_ptr), jnp.int32),
+        shape=(Lp, Dp_full), block_shape=(bl, bd), orig_shape=orig_shape)

@@ -127,12 +127,12 @@ def tron_solve(obj_grad_fn: Callable[[Array], tuple[Array, Array]],
     tol = eps * gnorm0
 
     def cond(state):
-        _, _, _, gnorm, _, live, _, k = state
+        _, _, _, gnorm, _, live, _, _, k = state
         del gnorm
         return (k < max_newton) & jnp.any(live)
 
     def body(state):
-        W, f, g, gnorm, delta, live, n_cg, k = state
+        W, f, g, gnorm, delta, live, n_newton, n_cg, k = state
         cg_tol = jnp.minimum(0.1, jnp.sqrt(gnorm / (gnorm0 + 1e-38))) * gnorm
         d, cg_iters = _steihaug_cg(lambda V: hvp_fn(V, act_fn(W)),
                                    g, delta, cg_tol, max_cg, live)
@@ -162,13 +162,16 @@ def tron_solve(obj_grad_fn: Callable[[Array], tuple[Array, Array]],
         g_new = jnp.where(accept[:, None], g_try, g)
         gnorm_new = jnp.linalg.norm(g_new, axis=-1)
         live_new = live & (gnorm_new > tol)
+        # A label that entered this body live did one more Newton iteration;
+        # labels that converged earlier are masked no-ops and must not count
+        # (same per-label accounting as n_cg).
         return (W_new, f_new, g_new, gnorm_new, delta_new, live_new,
-                n_cg + cg_iters, k + 1)
+                n_newton + live.astype(jnp.int32), n_cg + cg_iters, k + 1)
 
     live0 = gnorm0 > tol
     init = (W0, f0, g0, gnorm0, delta0, live0, jnp.zeros((L,), jnp.int32),
-            jnp.int32(0))
-    W, f, g, gnorm, _, live, n_cg, k = jax.lax.while_loop(cond, body, init)
-    return TronResult(W=W, f=f, gnorm=gnorm,
-                      n_newton=jnp.full((L,), k, jnp.int32),
+            jnp.zeros((L,), jnp.int32), jnp.int32(0))
+    W, f, g, gnorm, _, live, n_newton, n_cg, _ = jax.lax.while_loop(
+        cond, body, init)
+    return TronResult(W=W, f=f, gnorm=gnorm, n_newton=n_newton,
                       n_cg=n_cg, converged=~live)

@@ -15,7 +15,6 @@ checkpoints a small sparse model first if --ckpt does not exist yet):
 from __future__ import annotations
 
 import argparse
-import os
 import time
 
 import jax
@@ -24,39 +23,19 @@ import numpy as np
 from repro.configs.registry import ARCH_IDS, get_config
 
 
-def _ensure_xmc_checkpoint(ckpt: str, *, n_features: int, n_labels: int,
-                           seed: int) -> None:
-    """Train + prune + pack + save a small DiSMEC model unless one exists."""
-    from repro.checkpoint.io import BSR_INDEX
-    if os.path.exists(os.path.join(ckpt, BSR_INDEX)):
-        return
-    import jax.numpy as jnp
-    from repro.core.dismec import DiSMECConfig, train
-    from repro.core.pruning import to_block_sparse
-    from repro.data.xmc import make_xmc_dataset
-
-    print(f"[xmc] no checkpoint at {ckpt}; training a "
-          f"{n_labels}-label smoke model...")
-    d = make_xmc_dataset(n_train=600, n_test=64, n_features=n_features,
-                         n_labels=n_labels, seed=seed)
-    model = train(jnp.asarray(d.X_train), jnp.asarray(d.Y_train),
-                  DiSMECConfig(delta=0.01, label_batch=n_labels))
-    bsr = to_block_sparse(model.W, (128, 128))
-    bsr.save(ckpt, meta={"n_labels": n_labels, "n_features": n_features,
-                         "delta": model.delta})
-    print(f"[xmc] saved sparse checkpoint: {bsr.n_blocks} blocks, "
-          f"block density {bsr.density:.3f}")
-
-
 def serve_xmc(args) -> None:
     from repro.serve import XMCEngine
+    from repro.train.xmc import train_demo_checkpoint
 
-    _ensure_xmc_checkpoint(args.ckpt, n_features=args.features,
-                           n_labels=args.labels, seed=args.seed)
+    # Shared demo setup (also used by examples/serve_xmc.py and
+    # benchmarks/serve_latency.py): dataset + streamed sparse checkpoint
+    # through the label-batch training pipeline, reused if already on disk.
+    d, index = train_demo_checkpoint(
+        args.ckpt, n_train=600, n_test=max(args.requests * 4, 64),
+        n_features=args.features, n_labels=args.labels,
+        label_batch=min(128, args.labels), seed=args.seed)
     # Validate the request shape against the checkpoint meta BEFORE paying
     # for engine load + per-bucket warm-up compiles.
-    from repro.checkpoint.io import load_block_sparse_meta
-    index = load_block_sparse_meta(args.ckpt)
     ckpt_features = index["meta"].get(
         "n_features", index.get("orig_shape", index["shape"])[1])
     if ckpt_features != args.features:
@@ -73,10 +52,6 @@ def serve_xmc(args) -> None:
           f"(L={engine.backend.n_labels}, k={engine.backend.k})")
 
     rng = np.random.default_rng(args.seed)
-    from repro.data.xmc import make_xmc_dataset
-    d = make_xmc_dataset(n_train=64, n_test=max(args.requests * 4, 64),
-                         n_features=args.features, n_labels=args.labels,
-                         seed=args.seed)
     pool = np.asarray(d.X_test, np.float32)
     requests = []
     for _ in range(args.requests):

@@ -1,10 +1,16 @@
-"""Training launcher: --arch <id> [--smoke] [--steps N] [--mesh dxm].
+"""Training launcher: LM train loop or streaming XMC pipeline.
 
-Examples:
+LM mode:
   PYTHONPATH=src python -m repro.launch.train --arch qwen1.5-0.5b --smoke \
       --steps 100 --seq-len 128 --batch 8
   PYTHONPATH=src python -m repro.launch.train --arch xlstm-125m --smoke \
       --mesh 1x1 --head softmax
+
+XMC mode (dataset -> streaming label-batch pipeline -> servable sparse
+checkpoint; re-running with the same --out resumes a killed job):
+  PYTHONPATH=src python -m repro.launch.train --xmc --labels 512 \
+      --label-batch 128 --out /tmp/xmc_ckpt
+  PYTHONPATH=src python -m repro.launch.serve --xmc --ckpt /tmp/xmc_ckpt
 """
 
 from __future__ import annotations
@@ -24,9 +30,70 @@ from repro.models import sharding as shd
 from repro.train.trainer import train_loop
 
 
+def train_xmc(args) -> None:
+    """--xmc: train a DiSMEC model through the streaming pipeline."""
+    from repro.checkpoint.io import load_block_sparse
+    from repro.core.dismec import DiSMECConfig
+    from repro.core.prediction import evaluate, predict_topk
+    from repro.data.xmc import make_xmc_dataset
+    from repro.train.xmc import XMCTrainJob
+
+    if args.out is None:
+        args.out = "/tmp/repro_xmc_train_ckpt"
+    mesh = None
+    if args.mesh:
+        d, m = (int(x) for x in args.mesh.split("x"))
+        mesh = jax.make_mesh((d, m), ("data", "model"))
+
+    data = make_xmc_dataset(n_train=args.train_n, n_test=args.test_n,
+                            n_features=args.features, n_labels=args.labels,
+                            seed=args.seed)
+    cfg = DiSMECConfig(C=args.C, delta=args.delta,
+                       label_batch=args.label_batch)
+    # Largest MXU-friendly block height that still divides the label batch
+    # (streamed shards must be row-block-aligned).
+    import math
+    bl = math.gcd(args.label_batch, 128)
+    job = XMCTrainJob(cfg=cfg, mesh=mesh, shard_data=args.shard_data,
+                      balance=args.balance, block_shape=(bl, 128))
+
+    t0 = time.time()
+    res = job.run(jnp.asarray(data.X_train), jnp.asarray(data.Y_train),
+                  args.out, resume=not args.fresh,
+                  on_batch=lambda b, n: print(
+                      f"[xmc] batch {b + 1}/{n} done "
+                      f"({time.time() - t0:.1f}s)"))
+    wall = time.time() - t0
+    print(f"[xmc] {len(res.solved)} batches solved, {len(res.skipped)} "
+          f"resumed from manifest in {wall:.1f}s -> {args.out}")
+
+    nnz = sum(s["nnz"] for s in res.manifest["shards"].values())
+    total = args.labels * args.features
+    print(f"[xmc] model: {nnz} nonzeros / {total} "
+          f"({100.0 * nnz / total:.2f}% dense)")
+
+    # Quick-eval only at smoke scale: to_dense() would rebuild the full
+    # (L, D) matrix the streaming pipeline just avoided materializing.
+    if args.labels * args.features <= 50_000_000:
+        model, _ = load_block_sparse(args.out)
+        W = model.to_dense()[:args.labels, :args.features]
+        _, idx = predict_topk(jnp.asarray(data.X_test), W, 5)
+        ev = evaluate(jnp.asarray(data.Y_test), idx)
+        print(f"[xmc] test P@1={ev['P@1']:.3f} P@5={ev['P@5']:.3f}")
+    else:
+        print("[xmc] model too large for dense quick-eval; serve it with "
+              "the bsr backend instead")
+    print(f"[xmc] serve it: PYTHONPATH=src python -m repro.launch.serve "
+          f"--xmc --ckpt {args.out} --features {args.features} "
+          f"--labels {args.labels}")
+
+
 def main() -> None:
     ap = argparse.ArgumentParser()
-    ap.add_argument("--arch", required=True, choices=list(ARCH_IDS))
+    ap.add_argument("--xmc", action="store_true",
+                    help="run the streaming XMC pipeline instead of LM train")
+    ap.add_argument("--arch", default=None, choices=list(ARCH_IDS),
+                    help="LM mode: architecture to train")
     ap.add_argument("--smoke", action="store_true",
                     help="reduced config (CPU-trainable)")
     ap.add_argument("--steps", type=int, default=100)
@@ -36,7 +103,28 @@ def main() -> None:
     ap.add_argument("--head", choices=["dismec", "softmax"], default=None)
     ap.add_argument("--mesh", default=None, help="e.g. 2x4 (data x model)")
     ap.add_argument("--out", default=None, help="checkpoint directory")
+    # XMC-mode knobs (streaming label-batch pipeline).
+    ap.add_argument("--labels", type=int, default=512)
+    ap.add_argument("--features", type=int, default=4096)
+    ap.add_argument("--train-n", type=int, default=1000)
+    ap.add_argument("--test-n", type=int, default=300)
+    ap.add_argument("--label-batch", type=int, default=128)
+    ap.add_argument("--C", type=float, default=1.0)
+    ap.add_argument("--delta", type=float, default=0.01)
+    ap.add_argument("--balance", action="store_true",
+                    help="frequency-balanced label->shard dealing per batch")
+    ap.add_argument("--shard-data", action="store_true",
+                    help="also shard instances over the mesh data axis")
+    ap.add_argument("--fresh", action="store_true",
+                    help="ignore any existing manifest (no resume)")
+    ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args()
+
+    if args.xmc:
+        train_xmc(args)
+        return
+    if args.arch is None:
+        ap.error("--arch is required in LM mode (or pass --xmc)")
 
     cfg = get_config(args.arch, smoke=args.smoke)
     if args.head:

@@ -1,3 +1,7 @@
 from repro.train.trainer import TrainState, make_train_step, train_loop
+from repro.train.xmc import (XMCTrainJob, XMCTrainResult,
+                             train_demo_checkpoint, train_streaming)
 
-__all__ = ["TrainState", "make_train_step", "train_loop"]
+__all__ = ["TrainState", "make_train_step", "train_loop",
+           "XMCTrainJob", "XMCTrainResult", "train_streaming",
+           "train_demo_checkpoint"]

@@ -1,0 +1,256 @@
+"""Streaming label-batch training pipeline for DiSMEC (Algorithm 1 at scale).
+
+The paper's model never exists dense — 870 GB of OvR weights become 3 GB of
+(value, index) pairs via Delta-pruning (§2.2) — and this pipeline makes the
+*training* side honor that: device memory is O(label_batch x D), the servable
+artifact is written incrementally, and a killed job resumes where it stopped.
+
+`XMCTrainJob` composes the two layers of Algorithm 1 with the streaming
+writer; the mapping to the algorithm's steps 3-11:
+
+  step 3    `for b in 0..B` over label batches   -> the host-side scheduler
+            loop in `run()`. Batches are contiguous label ranges of size
+            `cfg.label_batch` so the checkpoint streams in label order; the
+            last partial batch is padded with all-negative sign rows so every
+            batch shares one compiled solver executable.
+  steps 4-6 dispatch batch b to a node, train its binary problems in
+            parallel -> one mesh-sharded batched-TRON call
+            (`core.dismec.make_batch_solver`): labels sharded over the mesh
+            `model` axis (optionally instances over `data` with psum'd
+            grad/Hv), each shard solved by one SIMT-style TRON loop.
+            `balance=True` deals a batch's labels to shards with the
+            frequency-balanced `balance_permutation` (the un-permutation is
+            host-side, per batch), equalizing shard wall times.
+  step 7    prune ambiguous weights  -> `prune` runs inside the jitted solve,
+            on device, before the block ever travels to the host.
+  steps 8-10 write batch b's sparse model file -> the pruned block lands on
+            the host, is packed to append-form BSR
+            (`to_block_sparse(row_block_offset=...)`) and appended to the
+            multi-shard checkpoint by `checkpoint.io.BlockSparseWriter`
+            (one shard .npz per batch + an atomically rewritten manifest).
+  step 11   assemble W  -> never materialized during training. The manifest
+            IS the model: `checkpoint.io.load_block_sparse` stitches the
+            shards by row_ptr bookkeeping and PR 1's `XMCEngine` serves the
+            result unchanged. (`materialize=True`, used by the in-memory
+            `core.dismec.train` wrapper, assembles W host-side instead.)
+
+Resume: the manifest lists finished batches; a restarted job skips them and
+solves only the rest. A crash between a shard write and its manifest update
+orphans one shard file, which the next run simply re-solves and overwrites.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh
+
+from repro.checkpoint.io import (BlockSparseWriter, has_block_sparse_checkpoint,
+                                 load_block_sparse_meta)
+from repro.core.dismec import (DiSMECConfig, DiSMECModel, balance_permutation,
+                               make_batch_solver)
+from repro.core.pruning import to_block_sparse
+
+Array = jax.Array
+
+
+@dataclasses.dataclass
+class XMCTrainResult:
+    """What one `XMCTrainJob.run` did (and, if materialized, the model)."""
+    model: Optional[DiSMECModel]   # only when materialize=True and complete
+    out_dir: Optional[str]         # streamed checkpoint directory (if any)
+    n_batches: int                 # total label batches of the job
+    solved: list[int]              # batch ids solved by THIS run
+    skipped: list[int]             # batch ids resumed from the manifest
+    complete: bool                 # all batches present (checkpoint servable)
+    manifest: Optional[dict]       # final manifest when streamed + complete
+
+
+@dataclasses.dataclass(frozen=True)
+class XMCTrainJob:
+    """Algorithm 1's outer loop as a restartable streaming pipeline.
+
+    cfg.label_batch sets the layer-1 batch size (the paper's per-node label
+    count); when streaming to a checkpoint it must be a multiple of the BSR
+    block height so per-batch blocks append without re-tiling. `mesh` turns
+    on layer-2 mesh sharding for each batch's solve; `balance` deals each
+    batch's labels to mesh shards frequency-balanced (no-op without a mesh).
+    """
+    cfg: DiSMECConfig
+    mesh: Optional[Mesh] = None
+    label_axis: str = "model"
+    data_axis: str = "data"
+    shard_data: bool = False
+    balance: bool = False
+    block_shape: tuple[int, int] = (128, 128)
+
+    def label_batches(self, n_labels: int) -> list[tuple[int, int]]:
+        """Contiguous [start, stop) label ranges of the scheduler loop."""
+        lb = min(self.cfg.label_batch, n_labels)
+        return [(s, min(s + lb, n_labels)) for s in range(0, n_labels, lb)]
+
+    def run(self, X: Array, Y: Array, out_dir: Optional[str] = None, *,
+            resume: bool = True, materialize: Optional[bool] = None,
+            max_batches: Optional[int] = None, meta: Optional[dict] = None,
+            on_batch: Optional[Callable[[int, int], None]] = None,
+            ) -> XMCTrainResult:
+        """Train X (N, D), Y (N, L) into `out_dir` (streamed multi-shard
+        checkpoint) and/or an in-memory model.
+
+        resume       : skip batches already listed in out_dir's manifest
+                       (False starts the checkpoint fresh).
+        materialize  : assemble the dense W host-side and return a
+                       DiSMECModel; defaults to True only when not streaming.
+        max_batches  : stop after solving this many new batches (the
+                       checkpoint is left incomplete — the crash/preemption
+                       story, used by tests and the resume benchmark).
+        on_batch     : callback (batch_id, n_batches) after each solved
+                       batch — progress reporting / instrumentation hooks.
+        """
+        Yn = np.asarray(Y)
+        N, L = Yn.shape
+        D = int(X.shape[1])
+        batches = self.label_batches(L)
+        lb = batches[0][1] - batches[0][0]
+        n_shards = self.mesh.shape[self.label_axis] if self.mesh else 1
+        # Every batch is padded to one shape: lb rounded up to the label-shard
+        # count, so the whole run compiles the solver exactly once.
+        lb_solve = -(-lb // n_shards) * n_shards
+        bl, bd = self.block_shape
+        if materialize is None:
+            materialize = out_dir is None
+
+        writer = None
+        done: set[int] = set()
+        if out_dir is not None:
+            if lb % bl != 0 and len(batches) > 1:
+                raise ValueError(
+                    f"label_batch={lb} must be a multiple of the BSR block "
+                    f"height {bl} to stream batches without re-tiling "
+                    "(round label_batch up, or shrink block_shape)")
+            # The solved weights depend on every solver hyperparameter and on
+            # the dataset: record them so a resumed run cannot silently mix
+            # shards trained under different settings into one checkpoint.
+            solver_id = {"C": self.cfg.C, "delta": self.cfg.delta,
+                         "eps": self.cfg.eps,
+                         "max_newton": self.cfg.max_newton,
+                         "max_cg": self.cfg.max_cg,
+                         "use_pallas": self.cfg.use_pallas,
+                         # Mesh topology and sharding mode change reduction
+                         # order (psum vs local), so shards from different
+                         # layouts must not mix either.
+                         "mesh": (None if self.mesh is None else
+                                  {a: int(s) for a, s in
+                                   zip(self.mesh.axis_names,
+                                       self.mesh.devices.shape)}),
+                         "shard_data": self.shard_data,
+                         "balance": self.balance,
+                         "data": [int(N), int(D),
+                                  float(np.asarray(X).sum()),
+                                  int(Yn.sum())]}
+            writer = BlockSparseWriter(
+                out_dir, n_labels=L, n_features=D,
+                block_shape=self.block_shape, label_batch=lb,
+                n_batches=len(batches), resume=resume, solver=solver_id,
+                meta={"n_labels": L, "n_features": D,
+                      "delta": self.cfg.delta, **(meta or {})})
+            done = writer.done_batches
+
+        X_dev = jnp.asarray(X, jnp.float32)
+        solver = make_batch_solver(X_dev, self.cfg, self.mesh,
+                                   label_axis=self.label_axis,
+                                   data_axis=self.data_axis,
+                                   shard_data=self.shard_data)
+
+        host_blocks: dict[int, np.ndarray] = {}
+        solved: list[int] = []
+        skipped: list[int] = []
+        for b, (start, stop) in enumerate(batches):       # paper's step 3
+            if b in done:
+                skipped.append(b)
+                if materialize:
+                    host_blocks[b] = writer.read_batch_dense(b)
+                continue
+            if max_batches is not None and len(solved) >= max_batches:
+                break
+            rows = stop - start
+            signs = (2.0 * Yn[:, start:stop].T - 1.0).astype(np.float32)
+            perm = None
+            if self.balance and self.mesh is not None and rows > n_shards:
+                perm = balance_permutation(Yn[:, start:stop], n_shards)
+                signs = signs[perm]
+            if rows < lb_solve:                           # shape-constant pad
+                signs = np.concatenate(
+                    [signs, -np.ones((lb_solve - rows, N), np.float32)])
+            W_b = np.asarray(solver(jnp.asarray(signs))[:rows])
+            if perm is not None:
+                W_b = W_b[np.argsort(perm)]               # undo shard dealing
+            if writer is not None:                        # steps 8-10
+                part = to_block_sparse(W_b, self.block_shape,
+                                       row_block_offset=start // bl,
+                                       sentinel_if_empty=False)
+                writer.write_batch(b, part, row_start=start, n_rows=rows)
+            if materialize:
+                host_blocks[b] = W_b
+            solved.append(b)
+            if on_batch is not None:
+                on_batch(b, len(batches))
+
+        complete = len(solved) + len(skipped) == len(batches)
+        manifest = writer.finalize() if (writer and complete) else None
+        model = None
+        if materialize and complete:
+            W = np.concatenate([host_blocks[b] for b in range(len(batches))])
+            model = DiSMECModel(W=jnp.asarray(W), delta=self.cfg.delta,
+                                n_labels=L)
+        return XMCTrainResult(model=model, out_dir=out_dir,
+                              n_batches=len(batches), solved=solved,
+                              skipped=skipped, complete=complete,
+                              manifest=manifest)
+
+
+def train_streaming(X: Array, Y: Array, cfg: DiSMECConfig, out_dir: str,
+                    **job_kwargs) -> XMCTrainResult:
+    """Convenience: stream-train into a servable multi-shard checkpoint."""
+    run_kwargs = {k: job_kwargs.pop(k)
+                  for k in ("resume", "materialize", "max_batches", "meta",
+                            "on_batch") if k in job_kwargs}
+    return XMCTrainJob(cfg=cfg, **job_kwargs).run(X, Y, out_dir, **run_kwargs)
+
+
+def train_demo_checkpoint(ckpt_dir: str, *, n_train: int = 800,
+                          n_test: int = 512, n_features: int = 4096,
+                          n_labels: int = 256, label_batch: int = 128,
+                          C: float = 1.0, delta: float = 0.01,
+                          seed: int = 0, reuse: bool = True,
+                          verbose: bool = True):
+    """Train-and-checkpoint a small DiSMEC model for demos/benchmarks.
+
+    The one shared setup behind `launch/serve.py --xmc`,
+    `examples/serve_xmc.py` and `benchmarks/serve_latency.py`: builds the
+    synthetic dataset, streams a model into `ckpt_dir` through `XMCTrainJob`
+    (unless a servable checkpoint is already there and `reuse`), and returns
+    `(dataset, index)` where `index` is the checkpoint's pre-flight metadata
+    (`checkpoint.io.load_block_sparse_meta`).
+    """
+    from repro.data.xmc import make_xmc_dataset       # deferred: keep light
+    data = make_xmc_dataset(n_train=n_train, n_test=n_test,
+                            n_features=n_features, n_labels=n_labels,
+                            seed=seed)
+    if not (reuse and has_block_sparse_checkpoint(ckpt_dir)):
+        if verbose:
+            print(f"[xmc] no servable checkpoint at {ckpt_dir}; streaming a "
+                  f"{n_labels}-label model in batches of {label_batch}...")
+        cfg = DiSMECConfig(C=C, delta=delta, label_batch=label_batch)
+        XMCTrainJob(cfg=cfg).run(
+            jnp.asarray(data.X_train), jnp.asarray(data.Y_train), ckpt_dir)
+        if verbose:
+            index = load_block_sparse_meta(ckpt_dir)
+            print(f"[xmc] saved sparse checkpoint: {index['n_blocks']} "
+                  "blocks across "
+                  f"{len(index['manifest']['shards'])} shards")
+    return data, load_block_sparse_meta(ckpt_dir)

@@ -1,12 +1,14 @@
 """Delta-pruning and block-sparse conversion — property-based (hypothesis)."""
 
 import numpy as np
+import pytest
 from _hyp_compat import given, hnp, settings, st
 
 import jax.numpy as jnp
 
-from repro.core.pruning import (ambiguous_fraction, nnz, prune, sparsity,
-                                to_block_sparse, weight_histogram)
+from repro.core.pruning import (ambiguous_fraction, concat_block_sparse, nnz,
+                                prune, sparsity, to_block_sparse,
+                                weight_histogram)
 
 W_STRAT = hnp.arrays(np.float32, hnp.array_shapes(min_dims=2, max_dims=2,
                                                   min_side=1, max_side=64),
@@ -70,6 +72,64 @@ def test_block_sparse_skips_zero_blocks():
     m = to_block_sparse(jnp.asarray(W), (16, 16))
     assert m.n_blocks == 1
     assert m.density == 1 / 16
+
+
+@given(W=hnp.arrays(np.float32, st.tuples(st.sampled_from([16, 32, 48, 72]),
+                                          st.integers(1, 40)),
+                    elements=st.floats(-1.0, 1.0, width=32)),
+       chunk=st.sampled_from([16, 32]))
+@settings(max_examples=30, deadline=None)
+def test_concat_append_form_matches_full_conversion(W, chunk):
+    """Splitting W into row chunks, converting each in append form
+    (row_block_offset) and concatenating must reproduce the one-shot
+    conversion FIELD-BY-FIELD — the invariant the streamed multi-shard
+    checkpoint relies on (no re-tiling, identical packing order)."""
+    bl, bd = 16, 8
+    full = to_block_sparse(jnp.asarray(W), (bl, bd))
+    parts = [to_block_sparse(jnp.asarray(W[s:s + chunk]), (bl, bd),
+                             row_block_offset=s // bl,
+                             sentinel_if_empty=False)
+             for s in range(0, W.shape[0], chunk)]
+    cat = concat_block_sparse(parts, W.shape)
+    assert cat.shape == full.shape and cat.block_shape == full.block_shape
+    assert cat.orig_shape == full.orig_shape
+    np.testing.assert_array_equal(np.asarray(cat.blocks),
+                                  np.asarray(full.blocks))
+    np.testing.assert_array_equal(np.asarray(cat.block_rows),
+                                  np.asarray(full.block_rows))
+    np.testing.assert_array_equal(np.asarray(cat.block_cols),
+                                  np.asarray(full.block_cols))
+    np.testing.assert_array_equal(np.asarray(cat.row_ptr),
+                                  np.asarray(full.row_ptr))
+
+
+def test_concat_all_empty_parts_yields_sentinel():
+    """A fully-pruned model streamed in batches still loads: the concat of
+    empty append-form parts carries the same single-zero-block sentinel the
+    kernels expect from a one-shot conversion of an all-zero matrix."""
+    Z = np.zeros((32, 16), np.float32)
+    parts = [to_block_sparse(jnp.asarray(Z[s:s + 16]), (16, 16),
+                             row_block_offset=s // 16,
+                             sentinel_if_empty=False)
+             for s in (0, 16)]
+    assert all(int(p.row_ptr[-1]) == 0 for p in parts)
+    cat = concat_block_sparse(parts, (32, 16))
+    full = to_block_sparse(jnp.asarray(Z), (16, 16))
+    np.testing.assert_array_equal(np.asarray(cat.blocks),
+                                  np.asarray(full.blocks))
+    np.testing.assert_array_equal(np.asarray(cat.row_ptr),
+                                  np.asarray(full.row_ptr))
+    np.testing.assert_array_equal(np.asarray(cat.to_dense()), Z)
+
+
+def test_concat_rejects_mismatched_parts():
+    a = to_block_sparse(jnp.ones((16, 16)), (16, 16), sentinel_if_empty=False)
+    b = to_block_sparse(jnp.ones((16, 32)), (16, 16), row_block_offset=1,
+                        sentinel_if_empty=False)
+    with pytest.raises(ValueError, match="feature width"):
+        concat_block_sparse([a, b], (32, 16))
+    with pytest.raises(ValueError, match="at least one part"):
+        concat_block_sparse([], (0, 16))
 
 
 def test_weight_histogram_sums():

@@ -1,0 +1,190 @@
+"""Streaming label-batch training pipeline (train/xmc.py): bit-exactness of
+the streamed checkpoint vs the in-memory path, resume-after-kill semantics,
+serving integration, and the append-form BSR plumbing underneath it."""
+
+import json
+import os
+import tempfile
+
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from repro.checkpoint.io import (BSR_MANIFEST, has_block_sparse_checkpoint,
+                                 load_block_sparse, load_block_sparse_meta)
+from repro.core.dismec import DiSMECConfig, train
+from repro.serve import XMCEngine
+from repro.train.xmc import XMCTrainJob
+
+L, D = 72, 512         # L = 4.5 x label_batch: exercises the partial batch
+LABEL_BATCH = 16
+BLOCK = (16, 16)
+CFG = DiSMECConfig(label_batch=LABEL_BATCH, eps=1e-2)
+
+
+@pytest.fixture(scope="module")
+def xmc_data():
+    from repro.data.xmc import make_xmc_dataset
+    d = make_xmc_dataset(n_train=200, n_test=50, n_features=D, n_labels=L,
+                         seed=0)
+    return (jnp.asarray(d.X_train), jnp.asarray(d.Y_train),
+            jnp.asarray(d.X_test))
+
+
+@pytest.fixture(scope="module")
+def streamed_ckpt(xmc_data, tmp_path_factory):
+    """One streamed multi-shard checkpoint shared by the read-only tests."""
+    X, Y, _ = xmc_data
+    out = str(tmp_path_factory.mktemp("xmc_stream"))
+    res = XMCTrainJob(cfg=CFG, block_shape=BLOCK).run(X, Y, out)
+    assert res.complete and res.n_batches == 5
+    return out
+
+
+def test_streamed_checkpoint_bit_exact_with_train(xmc_data, streamed_ckpt):
+    """The streamed artifact must hold EXACTLY the weights the in-memory
+    wrapper returns: pack -> shard -> manifest -> stitch loses nothing."""
+    X, Y, _ = xmc_data
+    model = train(X, Y, CFG)                   # same scheduler, materialized
+    loaded, meta = load_block_sparse(streamed_ckpt)
+    W = np.asarray(loaded.to_dense())[:L, :D]
+    np.testing.assert_array_equal(W, np.asarray(model.W))
+    assert meta["n_labels"] == L and meta["n_features"] == D
+
+
+def test_streamed_checkpoint_serves_identical_topk(xmc_data, streamed_ckpt):
+    """Acceptance criterion: the streamed checkpoint through PR 1's engine
+    returns identical top-k to a model trained one-shot (label_batch=L)."""
+    X, Y, Xte = xmc_data
+    one_shot = train(X, Y, DiSMECConfig(label_batch=L, eps=1e-2))
+    eng_stream = XMCEngine.from_checkpoint(streamed_ckpt, backend="bsr",
+                                           k=5, warmup=False)
+    eng_one = XMCEngine.from_dismec(one_shot, backend="dense", k=5)
+    q = np.asarray(Xte[:32], np.float32)
+    r_stream = eng_stream.serve([q])[0]
+    r_one = eng_one.serve([q])[0]
+    np.testing.assert_array_equal(r_stream.labels, r_one.labels)
+
+
+def test_resume_after_kill_identical_manifest(xmc_data, tmp_path):
+    """Kill the job mid-run (max_batches), resume, and land on a manifest
+    identical to an uninterrupted run — without re-solving done batches."""
+    X, Y, _ = xmc_data
+    job = XMCTrainJob(cfg=CFG, block_shape=BLOCK)
+    a, b = str(tmp_path / "killed"), str(tmp_path / "clean")
+
+    r1 = job.run(X, Y, a, max_batches=2)
+    assert not r1.complete and r1.solved == [0, 1]
+    assert not has_block_sparse_checkpoint(a)          # not servable yet
+    with pytest.raises(ValueError, match="incomplete"):
+        load_block_sparse(a)
+
+    solved_on_resume = []
+    r2 = job.run(X, Y, a, on_batch=lambda i, n: solved_on_resume.append(i))
+    assert r2.complete
+    assert r2.skipped == [0, 1]                        # no re-solving
+    assert r2.solved == solved_on_resume == [2, 3, 4]
+
+    r3 = job.run(X, Y, b)
+    assert r3.complete
+    with open(os.path.join(a, BSR_MANIFEST)) as f:
+        ma = json.load(f)
+    with open(os.path.join(b, BSR_MANIFEST)) as f:
+        mb = json.load(f)
+    assert ma == mb
+    Wa = np.asarray(load_block_sparse(a)[0].to_dense())
+    Wb = np.asarray(load_block_sparse(b)[0].to_dense())
+    np.testing.assert_array_equal(Wa, Wb)
+
+
+def test_streaming_never_materializes_dense_W(tmp_path):
+    """Device memory scales with label_batch: no live (L, D) / (L, N) array
+    at any batch boundary of a streaming (materialize=False) run. Uses its
+    own (L, D, N) so arrays cached by other tests can't collide."""
+    from repro.data.xmc import make_xmc_dataset
+    L2, D2, N2 = 80, 640, 150          # unique to this test; L = 5 x batch
+    d = make_xmc_dataset(n_train=N2, n_test=10, n_features=D2, n_labels=L2,
+                         seed=3)
+    X, Y = jnp.asarray(d.X_train), jnp.asarray(d.Y_train)
+    forbidden = {(L2, D2), (L2, N2)}
+
+    def check(_b, _n):
+        live = {tuple(a.shape) for a in jax.live_arrays() if a.ndim == 2}
+        assert not (live & forbidden), live & forbidden
+
+    res = XMCTrainJob(cfg=DiSMECConfig(label_batch=16, eps=1e-2),
+                      block_shape=BLOCK).run(
+        X, Y, str(tmp_path / "ck"), on_batch=check)
+    assert res.complete and res.model is None
+
+
+def test_misaligned_label_batch_raises(xmc_data, tmp_path):
+    X, Y, _ = xmc_data
+    job = XMCTrainJob(cfg=DiSMECConfig(label_batch=20), block_shape=(16, 16))
+    with pytest.raises(ValueError, match="multiple of the BSR block height"):
+        job.run(X, Y, str(tmp_path / "ck"))
+
+
+def test_resume_config_mismatch_raises(xmc_data, streamed_ckpt):
+    X, Y, _ = xmc_data
+    job = XMCTrainJob(cfg=DiSMECConfig(label_batch=8, eps=1e-2),
+                      block_shape=(8, 8))
+    with pytest.raises(ValueError, match="manifest disagrees"):
+        job.run(X, Y, streamed_ckpt)
+    # Same shapes but different solver hyperparameters: the shards on disk
+    # were solved under another C, so stitching more onto them is wrong.
+    job2 = XMCTrainJob(cfg=DiSMECConfig(label_batch=LABEL_BATCH, eps=1e-2,
+                                        C=10.0), block_shape=BLOCK)
+    with pytest.raises(ValueError, match="manifest disagrees"):
+        job2.run(X, Y, streamed_ckpt)
+    # ...and so is resuming with different training data.
+    job3 = XMCTrainJob(cfg=CFG, block_shape=BLOCK)
+    with pytest.raises(ValueError, match="manifest disagrees"):
+        job3.run(X * 2.0, Y, streamed_ckpt)
+
+
+def test_stream_refuses_dir_with_single_shard_checkpoint(xmc_data, tmp_path):
+    """A pre-existing single-shard artifact would shadow the stream on load
+    (load_block_sparse prefers bsr_index.json): streaming into such a
+    directory must fail loudly unless explicitly starting fresh — and after
+    resume=False, loads must return the NEW model, not the stale one."""
+    from repro.core.pruning import prune, to_block_sparse
+    X, Y, _ = xmc_data
+    out = str(tmp_path / "ck")
+    rng = np.random.default_rng(0)
+    stale = prune(jnp.asarray(rng.normal(size=(L, D)), jnp.float32), 0.5)
+    to_block_sparse(stale, BLOCK).save(out, meta={"n_labels": L,
+                                                  "n_features": D})
+    job = XMCTrainJob(cfg=CFG, block_shape=BLOCK)
+    with pytest.raises(ValueError, match="single-shard"):
+        job.run(X, Y, out)
+    res = job.run(X, Y, out, resume=False)
+    assert res.complete
+    W = np.asarray(load_block_sparse(out)[0].to_dense())[:L, :D]
+    np.testing.assert_array_equal(W, np.asarray(train(X, Y, CFG).W))
+
+
+def test_stream_meta_preflight(streamed_ckpt):
+    """load_block_sparse_meta serves the same pre-flight schema for the
+    multi-shard layout as for the single-shard one (serving CLI contract)."""
+    index = load_block_sparse_meta(streamed_ckpt)
+    assert index["format"] == "bsr" and index["layout"] == "stream"
+    assert index["orig_shape"] == [L, D]
+    assert index["meta"]["n_features"] == D
+    assert index["n_blocks"] == sum(
+        s["n_blocks"] for s in index["manifest"]["shards"].values())
+
+
+def test_materializing_resume_reads_shards(xmc_data, tmp_path):
+    """materialize=True over a partially-complete checkpoint rebuilds the
+    already-solved rows from their shards instead of re-solving them."""
+    X, Y, _ = xmc_data
+    job = XMCTrainJob(cfg=CFG, block_shape=BLOCK)
+    out = str(tmp_path / "ck")
+    job.run(X, Y, out, max_batches=3)
+    res = job.run(X, Y, out, materialize=True)
+    assert res.complete and res.skipped == [0, 1, 2]
+    np.testing.assert_array_equal(np.asarray(res.model.W),
+                                  np.asarray(train(X, Y, CFG).W))

@@ -87,10 +87,40 @@ def test_label_independence(problem):
                                np.asarray(res_3.W), rtol=1e-2, atol=1e-4)
 
 
+def test_newton_counts_are_per_label():
+    """n_newton must count each label's OWN live iterations (like n_cg), not
+    the global outer-loop count: labels that converge early report strictly
+    fewer Newton steps than the label that kept the loop running."""
+    rng = np.random.default_rng(7)
+    N, D = 96, 48
+    X = np.asarray(rng.normal(size=(N, D)), np.float32)
+    # Label 0 is sign(x_0): linearly separable, so the squared hinge keeps
+    # pushing the weight out and TRON needs many trust-region steps. Labels
+    # 1..5 are random signs: a crude fit satisfies eps=1e-3 much sooner.
+    S = np.concatenate([np.sign(X[:, :1].T * 10),
+                        np.sign(rng.normal(size=(5, N)))]).astype(np.float32)
+    Xj, Sj = jnp.asarray(X), jnp.asarray(S)
+    obj_grad, hvp, act = _fns(Xj, Sj, 1.0)
+    res = tron_solve(obj_grad, hvp, act, jnp.zeros((6, D)), eps=1e-3)
+    n = np.asarray(res.n_newton)
+    assert bool(jnp.all(res.converged))
+    # Early-converged labels report fewer steps (the old bug reported the
+    # global loop count k for every label, even early-converged ones).
+    assert n.min() < n.max(), n
+    assert n.min() >= 1
+
+    # Stronger: a label's count in the joint solve equals its count when
+    # solved alone — the accounting is truly per label, not loop-global.
+    for l in (1, 2):
+        ogl, hvl, acl = _fns(Xj, Sj[l:l + 1], 1.0)
+        solo = tron_solve(ogl, hvl, acl, jnp.zeros((1, D)), eps=1e-3)
+        assert int(solo.n_newton[0]) == int(n[l]), (l, solo.n_newton, n)
+
+
 def test_all_negative_label_goes_to_zero_weight():
     """A padding label (all signs -1) has optimum near w=0 when instances are
-    mild: the solver must keep it tiny (this is the padding trick in
-    dismec._pad_labels)."""
+    mild: the solver must keep it tiny (this is the label-padding trick the
+    batch scheduler uses to keep every batch the same shape, train/xmc.py)."""
     rng = np.random.default_rng(4)
     N, D = 64, 16
     X = jnp.asarray(rng.normal(size=(N, D)) * 0.01, jnp.float32)
