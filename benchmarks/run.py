@@ -13,6 +13,7 @@ Modules (deliverable d):
   table_prediction_speed SS4.3 (prediction latency + BSR flops ratio)
   c_validation_sweep     SS3.3 (C tuned on validation) + shard balance
   train_pipeline         streaming label-batch training: throughput/mem/resume
+  tron_hotpath           CG matmul accounting + scheduler-overlap wall clock
   serve_latency          serving-engine p50/p99 per predict backend
   roofline               deliverable (g): 3-term roofline from the dry-run
 """
@@ -35,6 +36,7 @@ MODULES = [
     "table_prediction_speed",
     "c_validation_sweep",
     "train_pipeline",
+    "tron_hotpath",
     "serve_latency",
     "roofline",
 ]

@@ -56,6 +56,19 @@ def make_mesh(axis_shapes, axis_names, *, axis_types=None, **kwargs):
     return jax.make_mesh(axis_shapes, axis_names, **kwargs)
 
 
+def default_pallas_interpret() -> bool:
+    """Backend-appropriate default for pallas_call's `interpret=`: compiled
+    Mosaic kernels on TPU, the (slow, portable) interpreter everywhere else.
+    Callers that take `interpret: bool | None = None` resolve None through
+    this so CPU CI and real TPU lanes share one code path."""
+    return jax.default_backend() != "tpu"
+
+
+def resolve_interpret(interpret) -> bool:
+    """None -> backend default, anything else -> bool(it)."""
+    return default_pallas_interpret() if interpret is None else bool(interpret)
+
+
 def cost_analysis(compiled) -> dict:
     """`compiled.cost_analysis()` as one flat dict on every jax version
     (0.4.x returns a one-element list of per-program dicts)."""

@@ -20,6 +20,14 @@ Layer 1's sequential batch loop itself lives in train/xmc.py
 (`XMCTrainJob`): `train` and `train_sharded` here are thin wrappers over
 that one scheduler, and this module contributes the layer-2 engine
 (`make_batch_solver`) every path shares.
+
+All three injection sites — the jnp losses path, the Pallas-kernel path
+(`use_pallas=True`, interpret/compiled auto-selected per backend via
+`cfg.pallas_interpret=None`), and the data-sharded psum closures — speak
+core/tron.py's margin-caching protocol: `obj_grad(W) -> (f, grad, act)`
+derives the active mask from the one score pass it already ran, and
+`hvp(V, act)` consumes that cached mask, so no CG iteration ever re-runs
+the (L, D) x (D, N) score matmul just to rebuild the active set.
 """
 
 from __future__ import annotations
@@ -50,6 +58,10 @@ class DiSMECConfig:
     max_cg: int = 40
     label_batch: int = 1000      # paper's per-node batch size (layer 1)
     use_pallas: bool = False     # route obj/grad + Hv through Pallas kernels
+    # Pallas execution mode: None auto-selects per backend (compiled Mosaic
+    # on TPU, interpreter elsewhere — compat.default_pallas_interpret);
+    # True/False force it. Only consulted when use_pallas=True.
+    pallas_interpret: Optional[bool] = None
 
 
 @dataclasses.dataclass
@@ -80,17 +92,25 @@ def signs_from_labels(Y: Array) -> Array:
     return (2.0 * Y.T - 1.0).astype(jnp.float32)
 
 
-def _make_fns(X: Array, S: Array, C: float, use_pallas: bool = False):
-    if use_pallas:
+def _make_fns(X: Array, S: Array, cfg: "DiSMECConfig"):
+    """The margin-caching TRON protocol pair (core/tron.py): obj_grad(W) ->
+    (f, grad, act) and hvp(V, act). The active mask is produced by the same
+    score pass that computes f/grad — on the Pallas path it streams out of
+    the fused hinge kernel tile-by-tile, so no separate mask matmul exists
+    anywhere."""
+    C = cfg.C
+    if cfg.use_pallas:
         from repro.kernels.hinge import ops as hinge_ops
         from repro.kernels.hvp import ops as hvp_ops
-        obj_grad = lambda W: hinge_ops.objective_and_grad(W, X, S, C)
-        hvp = lambda V, act: hvp_ops.hessian_vp(V, X, act, C)
+        interp = cfg.pallas_interpret
+        obj_grad = lambda W: hinge_ops.objective_grad_act(
+            W, X, S, C, interpret=interp)
+        hvp = lambda V, act: hvp_ops.hessian_vp(V, X, act, C,
+                                                interpret=interp)
     else:
-        obj_grad = lambda W: losses.objective_and_grad(W, X, S, C)
+        obj_grad = lambda W: losses.objective_grad_act(W, X, S, C)
         hvp = lambda V, act: losses.hessian_vp(V, X, act, C)
-    act = lambda W: losses.active_mask(W, X, S)
-    return obj_grad, hvp, act
+    return obj_grad, hvp
 
 
 # ---------------------------------------------------------------------------
@@ -104,8 +124,8 @@ def train_label_batch(X: Array, S: Array, cfg: DiSMECConfig,
     D = X.shape[1]
     if W0 is None:
         W0 = jnp.zeros((L, D), jnp.float32)
-    obj_grad, hvp, act = _make_fns(X, S, cfg.C, cfg.use_pallas)
-    return tron_solve(obj_grad, hvp, act, W0, eps=cfg.eps,
+    obj_grad, hvp = _make_fns(X, S, cfg)
+    return tron_solve(obj_grad, hvp, W0, eps=cfg.eps,
                       max_newton=cfg.max_newton, max_cg=cfg.max_cg)
 
 
@@ -179,9 +199,9 @@ def make_batch_solver(X: Array, cfg: DiSMECConfig, mesh: Optional[Mesh] = None,
     D = X.shape[1]
 
     def solve_local(X_in: Array, S_in: Array) -> Array:
-        obj_grad, hvp, act_fn = _make_fns(X_in, S_in, cfg.C, cfg.use_pallas)
+        obj_grad, hvp = _make_fns(X_in, S_in, cfg)
         W0 = jnp.zeros((S_in.shape[0], D), jnp.float32)
-        res = tron_solve(obj_grad, hvp, act_fn, W0, eps=cfg.eps,
+        res = tron_solve(obj_grad, hvp, W0, eps=cfg.eps,
                          max_newton=cfg.max_newton, max_cg=cfg.max_cg)
         return prune(res.W, cfg.delta)                  # step 7 on-device
 
@@ -207,6 +227,10 @@ def make_batch_solver(X: Array, cfg: DiSMECConfig, mesh: Optional[Mesh] = None,
 
     def solve_shard(X_sh: Array, S_sh: Array) -> Array:
         if shard_data:
+            # Margin-caching protocol over the data axis: the act payload is
+            # the LOCAL (rows, N/n_data) mask of this shard's instance slice
+            # — the Hv psum reconstitutes the global product from the cached
+            # local masks, so CG does one local score pass per iteration.
             def obj_grad(W):
                 scores = W @ X_sh.T
                 z = 1.0 - S_sh * scores
@@ -217,18 +241,15 @@ def make_batch_solver(X: Array, cfg: DiSMECConfig, mesh: Optional[Mesh] = None,
                 f = (jnp.sum(W * W, axis=-1)
                      + jax.lax.psum(f_loc, data_axis) - cfg.C * n_pad)
                 g = 2.0 * W + jax.lax.psum(g_loc, data_axis)
-                return f, g
+                return f, g, act
 
             def hvp(V, act):
                 Xv = V @ X_sh.T
                 loc = 2.0 * cfg.C * ((act * Xv) @ X_sh)
                 return 2.0 * V + jax.lax.psum(loc, data_axis)
 
-            def act_fn(W):
-                return (1.0 - S_sh * (W @ X_sh.T) > 0.0).astype(jnp.float32)
-
             W0 = jnp.zeros((S_sh.shape[0], D), jnp.float32)
-            res = tron_solve(obj_grad, hvp, act_fn, W0, eps=cfg.eps,
+            res = tron_solve(obj_grad, hvp, W0, eps=cfg.eps,
                              max_newton=cfg.max_newton, max_cg=cfg.max_cg)
             return prune(res.W, cfg.delta)
         return solve_local(X_sh, S_sh)

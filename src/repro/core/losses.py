@@ -44,12 +44,18 @@ def objective(W: Array, X: Array, S: Array, C: float) -> Array:
     return jnp.sum(W * W, axis=-1) + C * jnp.sum(hinge * hinge, axis=-1)
 
 
-def objective_and_grad(W: Array, X: Array, S: Array, C: float) -> tuple[Array, Array]:
-    """Returns (f, grad) with f:(L,), grad:(L, D).
+def objective_grad_act(W: Array, X: Array, S: Array,
+                       C: float) -> tuple[Array, Array, Array]:
+    """Returns (f, grad, act) with f:(L,), grad:(L, D), act:(L, N).
 
     grad f(w_l) = 2 w_l + 2C X_I^T (X_I w_l - s_I)
                 = 2 w_l - 2C sum_{i in I} s_i z_i x_i      [since s_i^2 = 1]
     (the paper quotes the gradient of f/2; we optimize f itself — same argmin).
+
+    The third output is the active mask D_l already derived from the same
+    score pass — the margin-caching TRON protocol (core/tron.py) threads it
+    to every Hessian-vector product at this iterate so CG never re-runs the
+    (L, D) x (D, N) score matmul just to rebuild the mask.
     """
     scores = W @ X.T                       # (L, N)
     z = 1.0 - S * scores                   # margins
@@ -58,6 +64,13 @@ def objective_and_grad(W: Array, X: Array, S: Array, C: float) -> tuple[Array, A
     r = act * (scores - S)                 # (L, N)
     f = jnp.sum(W * W, axis=-1) + C * jnp.sum(act * z * z, axis=-1)
     grad = 2.0 * W + 2.0 * C * (r @ X)     # (L, D)
+    return f, grad, act
+
+
+def objective_and_grad(W: Array, X: Array, S: Array, C: float) -> tuple[Array, Array]:
+    """(f, grad) only — see `objective_grad_act` for the solver-facing form
+    that also returns the active mask it derived along the way."""
+    f, grad, _ = objective_grad_act(W, X, S, C)
     return f, grad
 
 

@@ -120,7 +120,8 @@ class BlockSparseModel:
 
 def to_block_sparse(W: Array, block_shape: tuple[int, int] = (128, 128),
                     pad_value: float = 0.0, *, row_block_offset: int = 0,
-                    sentinel_if_empty: bool = True) -> BlockSparseModel:
+                    sentinel_if_empty: bool = True,
+                    device: bool = True) -> BlockSparseModel:
     """Convert a (pruned) dense matrix to packed BSR. Host-side (numpy):
     model conversion happens once, offline, like the paper's model files.
 
@@ -132,6 +133,12 @@ def to_block_sparse(W: Array, block_shape: tuple[int, int] = (128, 128),
     `sentinel_if_empty=False` lets an all-zero slice stay truly empty
     (0 packed blocks) instead of carrying the single-zero-block sentinel
     the standalone kernels expect.
+
+    `device=False` keeps the packed arrays as numpy instead of jnp.
+    The streaming checkpoint writer consumes them host-side immediately —
+    and its background worker must not enqueue device puts that would
+    contend with in-flight batch solves (train/xmc.py overlap mode); a
+    serving-bound conversion should keep the default and land on device.
     """
     Wn = np.asarray(W)
     L, D = Wn.shape
@@ -154,11 +161,12 @@ def to_block_sparse(W: Array, block_shape: tuple[int, int] = (128, 128),
         rows = np.zeros((1,), np.int64)
         cols = np.zeros((1,), np.int64)
         row_ptr = np.zeros(nbl + 1, np.int32)
+    put = jnp.asarray if device else np.asarray
     return BlockSparseModel(
-        blocks=jnp.asarray(blocks),
-        block_rows=jnp.asarray(rows + row_block_offset, jnp.int32),
-        block_cols=jnp.asarray(cols, jnp.int32),
-        row_ptr=jnp.asarray(row_ptr),
+        blocks=put(blocks),
+        block_rows=put((rows + row_block_offset).astype(np.int32)),
+        block_cols=put(cols.astype(np.int32)),
+        row_ptr=put(row_ptr),
         shape=(Lp, Dp), block_shape=block_shape, orig_shape=(L, D))
 
 

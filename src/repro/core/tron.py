@@ -9,10 +9,25 @@ CG residuals, convergence flag) becomes a vector of length L, and converged
 labels turn into masked no-ops instead of exiting (DESIGN.md §2, "SIMT-style").
 
 This file is deliberately independent of how the data is laid out: callers
-pass `obj_grad_fn(W) -> (f, grad)` and `hvp_fn(V, act) -> H V` plus an
-`act_fn(W)` for the active mask, so dismec.py can inject replicated-X,
-data-sharded (psum) or Pallas-kernel implementations without touching the
-optimizer. All control flow is jax.lax so the whole solve jits/shards.
+pass `obj_grad_fn(W) -> (f, grad, act_aux)` and `hvp_fn(V, act_aux) -> H V`,
+so dismec.py can inject replicated-X, data-sharded (psum) or Pallas-kernel
+implementations without touching the optimizer. All control flow is jax.lax
+so the whole solve jits/shards.
+
+Margin-caching protocol
+-----------------------
+The generalized Hessian H_l = 2I + 2C X^T D_l X is constant throughout one
+Newton step: D_l = diag(active mask at the CURRENT iterate W). The scores
+`W @ X.T` that determine that mask are already computed by `obj_grad_fn`,
+so the solver threads its third return value — `act_aux`, an opaque
+active-set payload whose leaves lead with the label axis — through the
+Newton carry and hands it back to every `hvp_fn` call. CG therefore runs
+ONE (L, N)-shaped score pass per iteration (the X v contraction) instead
+of two (mask re-derivation + X v), and the quadratic-model `H d` reuses the
+same cached mask. On a rejected trust-region step the cached `act_aux` of
+the incumbent W is kept; on acceptance it is swapped for the one
+`obj_grad_fn(W_try)` just produced — bit-identical to re-deriving the mask
+from W at every use, minus the redundant matmuls.
 """
 
 from __future__ import annotations
@@ -106,11 +121,19 @@ def _steihaug_cg(hvp: Callable[[Array], Array], g: Array, delta: Array,
     return d, iters
 
 
-@partial(jax.jit, static_argnames=("obj_grad_fn", "hvp_fn", "act_fn",
+def _select_aux(accept: Array, new, old):
+    """Per-label select over an opaque active-set payload: every leaf is
+    assumed to lead with the label axis (the shape `accept` indexes)."""
+    def sel(a, b):
+        acc = accept.reshape(accept.shape + (1,) * (a.ndim - 1))
+        return jnp.where(acc, a, b)
+    return jax.tree_util.tree_map(sel, new, old)
+
+
+@partial(jax.jit, static_argnames=("obj_grad_fn", "hvp_fn",
                                    "max_newton", "max_cg"))
-def tron_solve(obj_grad_fn: Callable[[Array], tuple[Array, Array]],
+def tron_solve(obj_grad_fn: Callable[[Array], tuple[Array, Array, Array]],
                hvp_fn: Callable[[Array, Array], Array],
-               act_fn: Callable[[Array], Array],
                W0: Array,
                *,
                eps: float = 0.01,
@@ -118,30 +141,35 @@ def tron_solve(obj_grad_fn: Callable[[Array], tuple[Array, Array]],
                max_cg: int = 40) -> TronResult:
     """Solve min_w f_l(w_l) for all labels l at once.
 
+    obj_grad_fn(W) -> (f, grad, act_aux): objective, gradient, and the
+        active-set payload at W (usually the (L, N) mask; opaque here, its
+        leaves must lead with the label axis). Cached and threaded to every
+        Hessian product at the same iterate — see module docstring.
+    hvp_fn(V, act_aux) -> H V using the cached active set.
     eps: relative gradient-norm tolerance, ||g|| <= eps * ||g_0|| (liblinear).
     """
     L = W0.shape[0]
-    f0, g0 = obj_grad_fn(W0)
+    f0, g0, act0 = obj_grad_fn(W0)
     gnorm0 = jnp.linalg.norm(g0, axis=-1)
     delta0 = gnorm0                           # liblinear: Delta_0 = ||g_0||
     tol = eps * gnorm0
 
     def cond(state):
-        _, _, _, gnorm, _, live, _, _, k = state
+        _, _, _, _, gnorm, _, live, _, _, k = state
         del gnorm
         return (k < max_newton) & jnp.any(live)
 
     def body(state):
-        W, f, g, gnorm, delta, live, n_newton, n_cg, k = state
+        W, act, f, g, gnorm, delta, live, n_newton, n_cg, k = state
         cg_tol = jnp.minimum(0.1, jnp.sqrt(gnorm / (gnorm0 + 1e-38))) * gnorm
-        d, cg_iters = _steihaug_cg(lambda V: hvp_fn(V, act_fn(W)),
+        d, cg_iters = _steihaug_cg(lambda V: hvp_fn(V, act),
                                    g, delta, cg_tol, max_cg, live)
 
         W_try = W + d
-        f_try, g_try = obj_grad_fn(W_try)
+        f_try, g_try, act_try = obj_grad_fn(W_try)
 
-        # Quadratic-model decrease: -(<g,d> + 0.5 <d, H d>).
-        Hd = hvp_fn(d, act_fn(W))
+        # Quadratic-model decrease: -(<g,d> + 0.5 <d, H d>), H at W (cached).
+        Hd = hvp_fn(d, act)
         pred = -(jnp.sum(g * d, axis=-1) + 0.5 * jnp.sum(d * Hd, axis=-1))
         actual = f - f_try
         rho = actual / jnp.where(pred != 0.0, pred, 1.0)
@@ -158,6 +186,7 @@ def tron_solve(obj_grad_fn: Callable[[Array], tuple[Array, Array]],
         delta_new = jnp.where(live, delta_new, delta)
 
         W_new = jnp.where(accept[:, None], W_try, W)
+        act_new = _select_aux(accept, act_try, act)
         f_new = jnp.where(accept, f_try, f)
         g_new = jnp.where(accept[:, None], g_try, g)
         gnorm_new = jnp.linalg.norm(g_new, axis=-1)
@@ -165,13 +194,14 @@ def tron_solve(obj_grad_fn: Callable[[Array], tuple[Array, Array]],
         # A label that entered this body live did one more Newton iteration;
         # labels that converged earlier are masked no-ops and must not count
         # (same per-label accounting as n_cg).
-        return (W_new, f_new, g_new, gnorm_new, delta_new, live_new,
+        return (W_new, act_new, f_new, g_new, gnorm_new, delta_new, live_new,
                 n_newton + live.astype(jnp.int32), n_cg + cg_iters, k + 1)
 
     live0 = gnorm0 > tol
-    init = (W0, f0, g0, gnorm0, delta0, live0, jnp.zeros((L,), jnp.int32),
-            jnp.zeros((L,), jnp.int32), jnp.int32(0))
-    W, f, g, gnorm, _, live, n_newton, n_cg, _ = jax.lax.while_loop(
+    init = (W0, act0, f0, g0, gnorm0, delta0, live0,
+            jnp.zeros((L,), jnp.int32), jnp.zeros((L,), jnp.int32),
+            jnp.int32(0))
+    W, _, f, g, gnorm, _, live, n_newton, n_cg, _ = jax.lax.while_loop(
         cond, body, init)
     return TronResult(W=W, f=f, gnorm=gnorm, n_newton=n_newton,
                       n_cg=n_cg, converged=~live)

@@ -6,11 +6,17 @@ Each kernel directory contains:
   ref.py    — pure-jnp oracle the tests assert against
 
 Kernels (DESIGN.md §3):
-  hinge       fused squared-hinge objective + gradient (TRON outer loop)
-  hvp         fused generalized-Hessian vector product (CG inner loop)
+  hinge       fused squared-hinge objective + gradient + active mask
+              (TRON outer loop; the mask output feeds the margin-caching
+              solver protocol, core/tron.py)
+  hvp         fused generalized-Hessian vector product consuming the
+              cached mask (CG inner loop)
   bsr_predict block-sparse W x predict — skips Delta-pruned zero blocks
   topk        blocked two-stage top-k for distributed prediction
 
 All kernels are validated on CPU with interpret=True; on TPU the same
-pallas_call lowers to Mosaic. VMEM budgets are documented per kernel.
+pallas_call lowers to Mosaic. The training kernels (hinge/hvp) take
+`interpret=None` and auto-select per backend (compiled Mosaic on TPU,
+interpreter elsewhere — compat.default_pallas_interpret). VMEM budgets
+are documented per kernel.
 """

@@ -1,25 +1,37 @@
-"""Fused squared-hinge objective + gradient kernel (TRON outer-loop hot spot).
+"""Fused squared-hinge objective + gradient + active-mask kernel (TRON
+outer-loop hot spot).
 
 Computes, for a shard of labels at once (paper layer-2 parallelism):
 
     f_l    = ||w_l||^2 + C sum_i max(0, 1 - s_li <w_l, x_i>)^2
     grad_l = 2 w_l + 2C sum_i act_li (<w_l, x_i> - s_li) x_i
+    act_li = 1[1 - s_li <w_l, x_i> > 0]        (the label's active set I_l)
+
+The third output is the margin-caching solver protocol's `act_aux`
+(core/tron.py): the mask is emitted tile-by-tile from the SAME score
+contraction that feeds f/grad, so the TRON/CG loop never runs a separate
+(L, D) x (D, N) matmul just to rebuild the active set — the HVP kernel
+(kernels/hvp) consumes this mask directly.
 
 Tiling
 ------
 grid = (L/bl, N/bn); j (instances) is the innermost, sequential axis so the
 (bl,)-objective and (bl, D)-gradient output blocks are *revisited* and
 accumulated in VMEM across the N sweep — the margin nonlinearity is applied
-tile-by-tile with zero HBM round-trips for the (L, N) score matrix.
+tile-by-tile with zero HBM round-trips for the (L, N) score matrix. The
+(bl, bn) act tile is written exactly once, at its own (i, j) grid step.
 
 VMEM budget (f32, bl = bn = 128, D <= 8192):
-    W tile 4 MB + X tile 4 MB + grad tile 4 MB + S/score tiles 128 KB
-    ~= 12.2 MB < 16 MB v5e VMEM.  ops.py enforces the D bound and falls
+    W tile 4 MB + X tile 4 MB + grad tile 4 MB + S/score/act tiles 192 KB
+    ~= 12.3 MB < 16 MB v5e VMEM.  ops.py enforces the D bound and falls
 back to the decomposed jnp path for larger D.
 
 MXU notes: both contractions are (128 x D) x (D x 128) and (128 x 128) x
 (128 x D) — lane/sublane aligned; f32 accumulation via
 preferred_element_type regardless of input dtype.
+
+`interpret=None` auto-selects per backend (compiled Mosaic on TPU, the
+interpreter elsewhere — compat.default_pallas_interpret).
 """
 
 from __future__ import annotations
@@ -30,12 +42,14 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
+from repro.compat import resolve_interpret
+
 DEFAULT_BL = 128      # label-tile rows
 DEFAULT_BN = 128      # instance-tile rows
 MAX_FUSED_D = 8192    # full-D blocks must fit VMEM (see module docstring)
 
 
-def _hinge_kernel(w_ref, x_ref, s_ref, f_ref, g_ref, *, C: float):
+def _hinge_kernel(w_ref, x_ref, s_ref, f_ref, g_ref, a_ref, *, C: float):
     """One (label-tile i, instance-tile j) grid step."""
     j = pl.program_id(1)
     W = w_ref[...].astype(jnp.float32)       # (bl, D)
@@ -59,16 +73,22 @@ def _hinge_kernel(w_ref, x_ref, s_ref, f_ref, g_ref, *, C: float):
 
     f_ref[...] += f_part
     g_ref[...] += g_part
+    a_ref[...] = act                         # (i, j) tile, written once
 
 
 def hinge_obj_grad_pallas(W: jax.Array, X: jax.Array, S: jax.Array, C: float,
                           *, bl: int = DEFAULT_BL, bn: int = DEFAULT_BN,
-                          interpret: bool = True):
-    """Raw pallas_call. Requires L % bl == 0 and N % bn == 0 (ops.py pads)."""
+                          interpret: bool | None = None):
+    """Raw pallas_call -> (f, grad, act). Tile-aligned inputs only (L % bl
+    == 0 and N % bn == 0; ops.py pads arbitrary shapes)."""
     L, D = W.shape
     N = X.shape[0]
     assert S.shape == (L, N), (S.shape, (L, N))
-    assert L % bl == 0 and N % bn == 0
+    if L % bl != 0 or N % bn != 0:
+        raise ValueError(
+            f"hinge_obj_grad_pallas needs tile-aligned inputs: got "
+            f"(L, N) = {(L, N)} with tiles (bl, bn) = {(bl, bn)}; call "
+            "repro.kernels.hinge.ops.objective_grad_act for arbitrary shapes")
     grid = (L // bl, N // bn)
     return pl.pallas_call(
         partial(_hinge_kernel, C=C),
@@ -77,8 +97,10 @@ def hinge_obj_grad_pallas(W: jax.Array, X: jax.Array, S: jax.Array, C: float,
                   pl.BlockSpec((bn, D), lambda i, j: (j, 0)),
                   pl.BlockSpec((bl, bn), lambda i, j: (i, j))],
         out_specs=[pl.BlockSpec((bl,), lambda i, j: (i,)),
-                   pl.BlockSpec((bl, D), lambda i, j: (i, 0))],
+                   pl.BlockSpec((bl, D), lambda i, j: (i, 0)),
+                   pl.BlockSpec((bl, bn), lambda i, j: (i, j))],
         out_shape=[jax.ShapeDtypeStruct((L,), jnp.float32),
-                   jax.ShapeDtypeStruct((L, D), jnp.float32)],
-        interpret=interpret,
+                   jax.ShapeDtypeStruct((L, D), jnp.float32),
+                   jax.ShapeDtypeStruct((L, N), jnp.float32)],
+        interpret=resolve_interpret(interpret),
     )(W, X, S)

@@ -6,8 +6,8 @@ import jax
 import jax.numpy as jnp
 
 
-def objective_and_grad(W: jax.Array, X: jax.Array, S: jax.Array,
-                       C: float) -> tuple[jax.Array, jax.Array]:
+def objective_grad_act(W: jax.Array, X: jax.Array, S: jax.Array,
+                       C: float) -> tuple[jax.Array, jax.Array, jax.Array]:
     W = W.astype(jnp.float32)
     X = X.astype(jnp.float32)
     S = S.astype(jnp.float32)
@@ -17,4 +17,10 @@ def objective_and_grad(W: jax.Array, X: jax.Array, S: jax.Array,
     r = act * (scores - S)
     f = jnp.sum(W * W, axis=-1) + C * jnp.sum(act * z * z, axis=-1)
     grad = 2.0 * W + 2.0 * C * (r @ X)
+    return f, grad, act
+
+
+def objective_and_grad(W: jax.Array, X: jax.Array, S: jax.Array,
+                       C: float) -> tuple[jax.Array, jax.Array]:
+    f, grad, _ = objective_grad_act(W, X, S, C)
     return f, grad

@@ -6,6 +6,14 @@ This runs once per CG iteration per Newton step — by far the most-executed
 compute in DiSMEC training. Same (L/bl, N/bn) accumulation tiling as the
 hinge kernel (see kernels/hinge/kernel.py for the VMEM budget): the (bl, bn)
 masked intermediate act * (X v) lives only in VMEM.
+
+`act` is the active-set payload the fused hinge kernel emitted at the
+current Newton iterate (the margin-caching protocol, core/tron.py) — this
+kernel performs ONE score-shaped contraction (X v) per call; the mask is
+never re-derived.
+
+`interpret=None` auto-selects per backend (compiled Mosaic on TPU, the
+interpreter elsewhere — compat.default_pallas_interpret).
 """
 
 from __future__ import annotations
@@ -15,6 +23,8 @@ from functools import partial
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
+
+from repro.compat import resolve_interpret
 
 DEFAULT_BL = 128
 DEFAULT_BN = 128
@@ -41,11 +51,17 @@ def _hvp_kernel(v_ref, x_ref, a_ref, o_ref, *, C: float):
 
 def hvp_pallas(V: jax.Array, X: jax.Array, act: jax.Array, C: float,
                *, bl: int = DEFAULT_BL, bn: int = DEFAULT_BN,
-               interpret: bool = True) -> jax.Array:
+               interpret: bool | None = None) -> jax.Array:
+    """Raw pallas_call. Tile-aligned inputs only (L % bl == 0 and
+    N % bn == 0; ops.py pads arbitrary shapes)."""
     L, D = V.shape
     N = X.shape[0]
-    assert act.shape == (L, N)
-    assert L % bl == 0 and N % bn == 0
+    assert act.shape == (L, N), (act.shape, (L, N))
+    if L % bl != 0 or N % bn != 0:
+        raise ValueError(
+            f"hvp_pallas needs tile-aligned inputs: got (L, N) = {(L, N)} "
+            f"with tiles (bl, bn) = {(bl, bn)}; call "
+            "repro.kernels.hvp.ops.hessian_vp for arbitrary shapes")
     grid = (L // bl, N // bn)
     return pl.pallas_call(
         partial(_hvp_kernel, C=C),
@@ -55,5 +71,5 @@ def hvp_pallas(V: jax.Array, X: jax.Array, act: jax.Array, C: float,
                   pl.BlockSpec((bl, bn), lambda i, j: (i, j))],
         out_specs=pl.BlockSpec((bl, D), lambda i, j: (i, 0)),
         out_shape=jax.ShapeDtypeStruct((L, D), jnp.float32),
-        interpret=interpret,
+        interpret=resolve_interpret(interpret),
     )(V, X, act)

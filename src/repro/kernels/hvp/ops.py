@@ -1,4 +1,7 @@
-"""Public wrapper for the Hessian-vector-product kernel."""
+"""Public wrapper for the Hessian-vector-product kernel: padding, bounds,
+fallback — the same arbitrary-shape contract as the hinge wrapper, so the
+Pallas training path works on any (L, N, D) instead of silently requiring
+tile-aligned inputs (the raw `hvp_pallas` rejects those loudly)."""
 
 from __future__ import annotations
 
@@ -24,10 +27,19 @@ def _pad_to(x: jax.Array, axis: int, mult: int, value: float = 0.0):
 @partial(jax.jit, static_argnames=("C", "bl", "bn", "interpret"))
 def hessian_vp(V: jax.Array, X: jax.Array, act: jax.Array, C: float,
                *, bl: int = 128, bn: int = 128,
-               interpret: bool = True) -> jax.Array:
-    """Hv for all labels. Padded instances have x = 0 and act = 0, so their
-    contribution is exactly zero; padded label rows are sliced away."""
+               interpret: bool | None = None) -> jax.Array:
+    """Hv for all labels, any (L, N, D): pads every axis to its tile
+    multiple. Padded instances have x = 0 and act = 0, so their contribution
+    is exactly zero; padded label rows are sliced away. `act` is the cached
+    mask from the hinge kernel's `objective_grad_act` (or any (L, N) float
+    mask)."""
     L, D = V.shape
+    N = X.shape[0]
+    if act.shape != (L, N):
+        raise ValueError(
+            f"act must be the (L, N) = {(L, N)} active mask matching V/X; "
+            f"got {act.shape} — pass the mask emitted by "
+            "kernels.hinge.ops.objective_grad_act at the same iterate")
     if D > MAX_FUSED_D:
         return ref.hessian_vp(V, X, act, C)
     Vp = _pad_to(V, 0, bl)

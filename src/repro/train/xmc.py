@@ -28,6 +28,18 @@ writer; the mapping to the algorithm's steps 3-11:
             (`to_block_sparse(row_block_offset=...)`) and appended to the
             multi-shard checkpoint by `checkpoint.io.BlockSparseWriter`
             (one shard .npz per batch + an atomically rewritten manifest).
+            With `overlap=True` (default) this host leg runs on a bounded
+            background worker: the scheduler dispatches batch b+1's solver
+            (jax dispatch is asynchronous) before batch b's result has even
+            left the device, so the device->host transfer + BSR pack +
+            compressed shard write of batch b hide behind batch b+1's
+            compute. `max_inflight` bounds how many un-drained device
+            results may exist at once (device memory stays
+            O(max_inflight x label_batch x D)); the single worker drains
+            them strictly in dispatch order, so the manifest grows in
+            exactly the sequential order and every crash/resume/manifest
+            invariant below is unchanged (`overlap=False` restores the
+            fully sequential scheduler).
   step 11   assemble W  -> never materialized during training. The manifest
             IS the model: `checkpoint.io.load_block_sparse` stitches the
             shards by row_ptr bookkeeping and PR 1's `XMCEngine` serves the
@@ -42,6 +54,8 @@ orphans one shard file, which the next run simply re-solves and overwrites.
 from __future__ import annotations
 
 import dataclasses
+import queue
+import threading
 from typing import Callable, Optional
 
 import jax
@@ -51,6 +65,7 @@ from jax.sharding import Mesh
 
 from repro.checkpoint.io import (BlockSparseWriter, has_block_sparse_checkpoint,
                                  load_block_sparse_meta)
+from repro.compat import resolve_interpret
 from repro.core.dismec import (DiSMECConfig, DiSMECModel, balance_permutation,
                                make_batch_solver)
 from repro.core.pruning import to_block_sparse
@@ -79,6 +94,14 @@ class XMCTrainJob:
     block height so per-batch blocks append without re-tiling. `mesh` turns
     on layer-2 mesh sharding for each batch's solve; `balance` deals each
     batch's labels to mesh shards frequency-balanced (no-op without a mesh).
+
+    `overlap` double-buffers the loop: batch b+1's solve is dispatched
+    before batch b's result is pulled off the device, and the
+    transfer/pack/write leg runs on a background worker; a semaphore
+    acquired before dispatch and released after the drain caps un-drained
+    device results at `max_inflight` (see the module docstring). The
+    produced checkpoint is byte-identical to a sequential
+    (`overlap=False`) run.
     """
     cfg: DiSMECConfig
     mesh: Optional[Mesh] = None
@@ -87,6 +110,8 @@ class XMCTrainJob:
     shard_data: bool = False
     balance: bool = False
     block_shape: tuple[int, int] = (128, 128)
+    overlap: bool = True
+    max_inflight: int = 2
 
     def label_batches(self, n_labels: int) -> list[tuple[int, int]]:
         """Contiguous [start, stop) label ranges of the scheduler loop."""
@@ -110,6 +135,10 @@ class XMCTrainJob:
                        story, used by tests and the resume benchmark).
         on_batch     : callback (batch_id, n_batches) after each solved
                        batch — progress reporting / instrumentation hooks.
+                       With overlap=True it fires on the background writer
+                       thread, still in batch order and still after that
+                       batch's shard write; an exception it raises aborts
+                       the run like a write failure would.
         """
         Yn = np.asarray(Y)
         N, L = Yn.shape
@@ -140,6 +169,14 @@ class XMCTrainJob:
                          "max_newton": self.cfg.max_newton,
                          "max_cg": self.cfg.max_cg,
                          "use_pallas": self.cfg.use_pallas,
+                         # Interpret vs compiled Mosaic may differ in fp
+                         # accumulation details, so shards from the two
+                         # modes must not be stitched together. Resolved
+                         # (None -> backend default) so the fingerprint is
+                         # the mode that actually ran.
+                         "pallas_interpret": (
+                             resolve_interpret(self.cfg.pallas_interpret)
+                             if self.cfg.use_pallas else None),
                          # Mesh topology and sharding mode change reduction
                          # order (psum vs local), so shards from different
                          # layouts must not mix either.
@@ -169,14 +206,9 @@ class XMCTrainJob:
         host_blocks: dict[int, np.ndarray] = {}
         solved: list[int] = []
         skipped: list[int] = []
-        for b, (start, stop) in enumerate(batches):       # paper's step 3
-            if b in done:
-                skipped.append(b)
-                if materialize:
-                    host_blocks[b] = writer.read_batch_dense(b)
-                continue
-            if max_batches is not None and len(solved) >= max_batches:
-                break
+
+        def dispatch(b: int, start: int, stop: int):
+            """Host-side prep + asynchronous device dispatch of one batch."""
             rows = stop - start
             signs = (2.0 * Yn[:, start:stop].T - 1.0).astype(np.float32)
             perm = None
@@ -186,19 +218,82 @@ class XMCTrainJob:
             if rows < lb_solve:                           # shape-constant pad
                 signs = np.concatenate(
                     [signs, -np.ones((lb_solve - rows, N), np.float32)])
-            W_b = np.asarray(solver(jnp.asarray(signs))[:rows])
+            return b, start, rows, perm, solver(jnp.asarray(signs))[:rows]
+
+        def drain(item) -> None:
+            """Device->host transfer + BSR pack + shard write of one solved
+            batch (paper's steps 8-10) — the leg that overlaps batch b+1's
+            device compute when `overlap=True`."""
+            b, start, rows, perm, W_dev = item
+            W_b = np.asarray(W_dev)
             if perm is not None:
                 W_b = W_b[np.argsort(perm)]               # undo shard dealing
-            if writer is not None:                        # steps 8-10
+            if writer is not None:
+                # device=False: the pack stays numpy end-to-end — a device
+                # put here would queue behind the in-flight batch solves
+                # this worker is meant to overlap.
                 part = to_block_sparse(W_b, self.block_shape,
                                        row_block_offset=start // bl,
-                                       sentinel_if_empty=False)
+                                       sentinel_if_empty=False, device=False)
                 writer.write_batch(b, part, row_start=start, n_rows=rows)
             if materialize:
                 host_blocks[b] = W_b
             solved.append(b)
             if on_batch is not None:
                 on_batch(b, len(batches))
+
+        to_solve: list[tuple[int, int, int]] = []
+        for b, (start, stop) in enumerate(batches):       # paper's step 3
+            if b in done:
+                skipped.append(b)
+                if materialize:
+                    host_blocks[b] = writer.read_batch_dense(b)
+                continue
+            if max_batches is not None and len(to_solve) >= max_batches:
+                break
+            to_solve.append((b, start, stop))
+
+        if not self.overlap:
+            for b, start, stop in to_solve:
+                drain(dispatch(b, start, stop))
+        elif to_solve:
+            # Double-buffered: the main thread keeps dispatching solves; a
+            # single background worker drains results in dispatch order.
+            # A slot must be acquired BEFORE a batch is dispatched and is
+            # released only once its result is fully drained, so at most
+            # max_inflight un-drained device results exist at any moment.
+            failed: list[BaseException] = []
+            slots = threading.Semaphore(max(1, self.max_inflight))
+            inflight: queue.Queue = queue.Queue()
+
+            def worker():
+                while True:
+                    item = inflight.get()
+                    if item is None:
+                        return
+                    try:
+                        if not failed:
+                            drain(item)
+                    except BaseException as e:   # propagate to the main loop
+                        failed.append(e)
+                    finally:
+                        slots.release()
+
+            t = threading.Thread(target=worker, daemon=True,
+                                 name="xmc-checkpoint-writer")
+            t.start()
+            try:
+                for b, start, stop in to_solve:
+                    slots.acquire()
+                    if failed:
+                        slots.release()
+                        break
+                    inflight.put(dispatch(b, start, stop))
+            finally:
+                inflight.put(None)
+                t.join()
+            if failed:
+                raise failed[0]
 
         complete = len(solved) + len(skipped) == len(batches)
         manifest = writer.finalize() if (writer and complete) else None

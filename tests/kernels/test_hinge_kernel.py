@@ -26,14 +26,19 @@ def test_objective_and_grad_allclose(L, N, D, dtype, C):
     X = jnp.asarray(rng.normal(size=(N, D))).astype(dtype)
     S = jnp.asarray(np.sign(rng.normal(size=(L, N))), jnp.float32)
 
-    f_k, g_k = ops.objective_and_grad(W, X, S, C, bl=32, bn=32)
-    f_r, g_r = ref.objective_and_grad(W.astype(jnp.float32),
-                                      X.astype(jnp.float32), S, C)
+    f_k, g_k, a_k = ops.objective_grad_act(W, X, S, C, bl=32, bn=32)
+    f_r, g_r, a_r = ref.objective_grad_act(W.astype(jnp.float32),
+                                           X.astype(jnp.float32), S, C)
     tol = 1e-4 if dtype == jnp.float32 else 5e-2
     np.testing.assert_allclose(np.asarray(f_k), np.asarray(f_r),
                                rtol=tol, atol=tol * 10)
     np.testing.assert_allclose(np.asarray(g_k), np.asarray(g_r),
                                rtol=tol, atol=tol * 10)
+    # The emitted active mask: exactly the (L, N) mask, pad columns/rows
+    # sliced away (bf16 scores may flip exact-boundary ties vs the f32
+    # oracle; none exist in this random data).
+    assert a_k.shape == (L, N)
+    np.testing.assert_array_equal(np.asarray(a_k), np.asarray(a_r))
 
 
 def test_large_d_falls_back_to_ref():

@@ -99,6 +99,73 @@ def test_resume_after_kill_identical_manifest(xmc_data, tmp_path):
     np.testing.assert_array_equal(Wa, Wb)
 
 
+def test_overlap_checkpoint_identical_to_sequential(xmc_data, tmp_path):
+    """The double-buffered scheduler (overlap=True, the default) must write
+    a byte-identical checkpoint to the fully sequential one: same manifest,
+    same stitched weights."""
+    X, Y, _ = xmc_data
+    a, b = str(tmp_path / "seq"), str(tmp_path / "ovl")
+    r_seq = XMCTrainJob(cfg=CFG, block_shape=BLOCK, overlap=False).run(X, Y, a)
+    r_ovl = XMCTrainJob(cfg=CFG, block_shape=BLOCK, overlap=True,
+                        max_inflight=3).run(X, Y, b)
+    assert r_seq.complete and r_ovl.complete
+    assert r_seq.solved == r_ovl.solved                  # dispatch order kept
+    with open(os.path.join(a, BSR_MANIFEST)) as f:
+        ma = json.load(f)
+    with open(os.path.join(b, BSR_MANIFEST)) as f:
+        mb = json.load(f)
+    assert ma == mb
+    np.testing.assert_array_equal(
+        np.asarray(load_block_sparse(a)[0].to_dense()),
+        np.asarray(load_block_sparse(b)[0].to_dense()))
+
+
+def test_overlap_kill_resume_bit_identical(xmc_data, tmp_path):
+    """Satellite: a double-buffered job stopped mid-flight — while writes
+    are still sitting in the background queue — leaves a manifest that
+    resumes to a bit-identical checkpoint vs a sequential run.
+
+    The kill is injected from the writer thread itself (on_batch raising
+    after batch 1's shard write), so at the moment of death later batches
+    are already dispatched and their results queued but unwritten: exactly
+    the crash window double-buffering adds."""
+    X, Y, _ = xmc_data
+
+    class Kill(RuntimeError):
+        pass
+
+    def die_after_two(b, n):
+        if b >= 1:
+            raise Kill(f"killed after batch {b}")
+
+    job = XMCTrainJob(cfg=CFG, block_shape=BLOCK, overlap=True,
+                      max_inflight=3)
+    killed, clean = str(tmp_path / "killed"), str(tmp_path / "clean")
+    with pytest.raises(Kill):
+        job.run(X, Y, killed, on_batch=die_after_two)
+    with open(os.path.join(killed, BSR_MANIFEST)) as f:
+        m_killed = json.load(f)
+    # Only fully written batches are in the manifest; queued-but-unwritten
+    # ones are not (they will be re-solved on resume).
+    assert not m_killed["complete"]
+    assert set(m_killed["shards"]) == {"0", "1"}
+
+    r2 = job.run(X, Y, killed)                           # resume
+    assert r2.complete and r2.skipped == [0, 1]
+
+    r3 = XMCTrainJob(cfg=CFG, block_shape=BLOCK, overlap=False).run(
+        X, Y, clean)
+    assert r3.complete
+    with open(os.path.join(killed, BSR_MANIFEST)) as f:
+        ma = json.load(f)
+    with open(os.path.join(clean, BSR_MANIFEST)) as f:
+        mb = json.load(f)
+    assert ma == mb
+    np.testing.assert_array_equal(
+        np.asarray(load_block_sparse(killed)[0].to_dense()),
+        np.asarray(load_block_sparse(clean)[0].to_dense()))
+
+
 def test_streaming_never_materializes_dense_W(tmp_path):
     """Device memory scales with label_batch: no live (L, D) / (L, N) array
     at any batch boundary of a streaming (materialize=False) run. Uses its

@@ -11,10 +11,10 @@ from repro.core.tron import tron_solve
 
 
 def _fns(X, S, C):
-    obj_grad = lambda W: losses.objective_and_grad(W, X, S, C)
+    """Margin-caching protocol pair: obj_grad -> (f, g, act), hvp(V, act)."""
+    obj_grad = lambda W: losses.objective_grad_act(W, X, S, C)
     hvp = lambda V, act: losses.hessian_vp(V, X, act, C)
-    act = lambda W: losses.active_mask(W, X, S)
-    return obj_grad, hvp, act
+    return obj_grad, hvp
 
 
 @pytest.fixture(scope="module")
@@ -29,23 +29,23 @@ def problem():
 def test_converges_to_tolerance(problem):
     X, S = problem
     C = 1.0
-    obj_grad, hvp, act = _fns(X, S, C)
+    obj_grad, hvp = _fns(X, S, C)
     L = S.shape[0]
-    res = tron_solve(obj_grad, hvp, act, jnp.zeros((L, X.shape[1])), eps=0.01)
+    res = tron_solve(obj_grad, hvp, jnp.zeros((L, X.shape[1])), eps=0.01)
     assert bool(jnp.all(res.converged))
     # ||g|| <= eps * ||g0|| (liblinear stopping rule)
-    _, g0 = obj_grad(jnp.zeros((L, X.shape[1])))
+    _, g0, _ = obj_grad(jnp.zeros((L, X.shape[1])))
     gn0 = jnp.linalg.norm(g0, axis=-1)
     assert bool(jnp.all(res.gnorm <= 0.01 * gn0 + 1e-6))
 
 
 def test_objective_decreases_from_zero(problem):
     X, S = problem
-    obj_grad, hvp, act = _fns(X, S, 1.0)
+    obj_grad, hvp = _fns(X, S, 1.0)
     L = S.shape[0]
     W0 = jnp.zeros((L, X.shape[1]))
-    f0, _ = obj_grad(W0)
-    res = tron_solve(obj_grad, hvp, act, W0)
+    f0, _, _ = obj_grad(W0)
+    res = tron_solve(obj_grad, hvp, W0)
     assert bool(jnp.all(res.f <= f0))
 
 
@@ -54,9 +54,9 @@ def test_matches_lbfgs_quality(problem):
     on the same strongly-convex objective."""
     X, S = problem
     C = 0.5
-    obj_grad, hvp, act = _fns(X, S, C)
+    obj_grad, hvp = _fns(X, S, C)
     L, D = S.shape[0], X.shape[1]
-    res = tron_solve(obj_grad, hvp, act, jnp.zeros((L, D)), eps=1e-3,
+    res = tron_solve(obj_grad, hvp, jnp.zeros((L, D)), eps=1e-3,
                      max_newton=100)
 
     # Plain GD with a safe step (Lipschitz bound 2 + 2C sigma_max^2).
@@ -64,9 +64,9 @@ def test_matches_lbfgs_quality(problem):
     step = 1.0 / (2.0 + 2.0 * C * sigma ** 2)
     W = jnp.zeros((L, D))
     for _ in range(3000):
-        _, g = obj_grad(W)
+        _, g, _ = obj_grad(W)
         W = W - step * g
-    f_gd, _ = obj_grad(W)
+    f_gd, _, _ = obj_grad(W)
     # TRON should be at least as good (tiny slack for fp).
     assert bool(jnp.all(res.f <= f_gd + 1e-2 * jnp.abs(f_gd)))
 
@@ -75,14 +75,14 @@ def test_label_independence(problem):
     """Solving labels jointly or separately must give identical solutions —
     the property the paper's double parallelization relies on."""
     X, S = problem
-    obj_grad, hvp, act = _fns(X, S, 1.0)
+    obj_grad, hvp = _fns(X, S, 1.0)
     L, D = S.shape[0], X.shape[1]
-    res_all = tron_solve(obj_grad, hvp, act, jnp.zeros((L, D)), eps=1e-3)
+    res_all = tron_solve(obj_grad, hvp, jnp.zeros((L, D)), eps=1e-3)
 
     # Solve the first 3 labels on their own.
     S3 = S[:3]
-    og3, hv3, ac3 = _fns(X, S3, 1.0)
-    res_3 = tron_solve(og3, hv3, ac3, jnp.zeros((3, D)), eps=1e-3)
+    og3, hv3 = _fns(X, S3, 1.0)
+    res_3 = tron_solve(og3, hv3, jnp.zeros((3, D)), eps=1e-3)
     np.testing.assert_allclose(np.asarray(res_all.W[:3]),
                                np.asarray(res_3.W), rtol=1e-2, atol=1e-4)
 
@@ -100,8 +100,8 @@ def test_newton_counts_are_per_label():
     S = np.concatenate([np.sign(X[:, :1].T * 10),
                         np.sign(rng.normal(size=(5, N)))]).astype(np.float32)
     Xj, Sj = jnp.asarray(X), jnp.asarray(S)
-    obj_grad, hvp, act = _fns(Xj, Sj, 1.0)
-    res = tron_solve(obj_grad, hvp, act, jnp.zeros((6, D)), eps=1e-3)
+    obj_grad, hvp = _fns(Xj, Sj, 1.0)
+    res = tron_solve(obj_grad, hvp, jnp.zeros((6, D)), eps=1e-3)
     n = np.asarray(res.n_newton)
     assert bool(jnp.all(res.converged))
     # Early-converged labels report fewer steps (the old bug reported the
@@ -112,8 +112,8 @@ def test_newton_counts_are_per_label():
     # Stronger: a label's count in the joint solve equals its count when
     # solved alone — the accounting is truly per label, not loop-global.
     for l in (1, 2):
-        ogl, hvl, acl = _fns(Xj, Sj[l:l + 1], 1.0)
-        solo = tron_solve(ogl, hvl, acl, jnp.zeros((1, D)), eps=1e-3)
+        ogl, hvl = _fns(Xj, Sj[l:l + 1], 1.0)
+        solo = tron_solve(ogl, hvl, jnp.zeros((1, D)), eps=1e-3)
         assert int(solo.n_newton[0]) == int(n[l]), (l, solo.n_newton, n)
 
 
@@ -125,6 +125,6 @@ def test_all_negative_label_goes_to_zero_weight():
     N, D = 64, 16
     X = jnp.asarray(rng.normal(size=(N, D)) * 0.01, jnp.float32)
     S = -jnp.ones((1, N), jnp.float32)
-    obj_grad, hvp, act = _fns(X, S, 1.0)
-    res = tron_solve(obj_grad, hvp, act, jnp.zeros((1, D)))
+    obj_grad, hvp = _fns(X, S, 1.0)
+    res = tron_solve(obj_grad, hvp, jnp.zeros((1, D)))
     assert float(jnp.linalg.norm(res.W)) < 0.5
