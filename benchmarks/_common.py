@@ -8,9 +8,10 @@ import time
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.dismec import DiSMECConfig, train
 from repro.core.prediction import evaluate, predict_topk
 from repro.data.xmc import XMCDataset, load_paper_like
+from repro.specs import ScheduleSpec, SolverSpec
+from repro.xmc_api import XMCSpec, job_from_spec
 
 # The scaled-down name-alikes of the paper's Table 1 datasets.
 DATASETS = ("wiki31k_like", "amazon670k_like", "delicious200k_like",
@@ -29,10 +30,15 @@ LABEL_BATCH = 256
 
 def fit_dismec(data: XMCDataset, *, C: float = 1.0, delta: float = 0.01,
                eps: float = 0.01):
+    """Benchmark fits run as adapters over the one spec-driven session
+    path (repro.xmc_api), materialized in memory for the table scorers."""
+    spec = XMCSpec(
+        solver=SolverSpec(C=C, delta=delta, eps=eps),
+        schedule=ScheduleSpec(
+            label_batch=min(data.n_labels, LABEL_BATCH)))
     t0 = time.time()
-    model = train(jnp.asarray(data.X_train), jnp.asarray(data.Y_train),
-                  DiSMECConfig(C=C, delta=delta, eps=eps,
-                               label_batch=min(data.n_labels, LABEL_BATCH)))
+    model = job_from_spec(spec).run(
+        jnp.asarray(data.X_train), jnp.asarray(data.Y_train)).model
     return model, time.time() - t0
 
 

@@ -2,6 +2,8 @@
 
   PYTHONPATH=src python -m benchmarks.run            # everything
   PYTHONPATH=src python -m benchmarks.run --only fig5_delta_sweep
+  PYTHONPATH=src python -m benchmarks.run --smoke    # CI: pipeline benches
+                                                     # on tiny shapes
 
 Modules (deliverable d):
   table2_accuracy        Table 2 + Fig 3 (P@k / nDCG@k vs baselines)
@@ -22,6 +24,7 @@ from __future__ import annotations
 
 import argparse
 import importlib
+import inspect
 import sys
 import time
 import traceback
@@ -41,23 +44,39 @@ MODULES = [
     "roofline",
 ]
 
+# --smoke: the pipeline benchmarks (train / hot path / serve) on tiny
+# shapes — a CI gate (tools/verify.sh) that keeps every benchmark
+# entrypoint importable and runnable without the full CPU cost.
+SMOKE_MODULES = ["train_pipeline", "tron_hotpath", "serve_latency"]
+
 
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default=None,
                     help="comma-separated module subset")
+    ap.add_argument("--smoke", action="store_true",
+                    help=f"tiny-shape pass over {SMOKE_MODULES}")
     args = ap.parse_args()
-    mods = args.only.split(",") if args.only else MODULES
+    mods = (args.only.split(",") if args.only
+            else SMOKE_MODULES if args.smoke else MODULES)
 
     failures = []
     for name in mods:
-        print(f"\n{'=' * 72}\n== benchmarks.{name}\n{'=' * 72}")
+        print(f"\n{'=' * 72}\n== benchmarks.{name}"
+              f"{' (smoke)' if args.smoke else ''}\n{'=' * 72}")
         t0 = time.time()
         try:
             mod = importlib.import_module(f"benchmarks.{name}")
             if name == "roofline":
                 sys.argv = ["roofline"]          # default args
-            mod.main()
+            kwargs = {}
+            if args.smoke:
+                if "smoke" not in inspect.signature(mod.main).parameters:
+                    raise TypeError(f"benchmarks.{name}.main has no smoke "
+                                    "mode; drop it from SMOKE_MODULES or "
+                                    "add the parameter")
+                kwargs["smoke"] = True
+            mod.main(**kwargs)
             print(f"\n[benchmarks.{name} done in {time.time() - t0:.1f}s]")
         except Exception:
             traceback.print_exc()

@@ -16,9 +16,10 @@ import time
 import numpy as np
 
 from benchmarks._common import emit_json, print_table
-from repro.checkpoint.io import load_block_sparse
-from repro.serve import BACKENDS, XMCEngine
+from repro.serve import BACKENDS
+from repro.specs import ServeSpec
 from repro.train.xmc import train_demo_checkpoint
+from repro.xmc_api import CheckpointHandle
 
 OUT_JSON = "BENCH_serve.json"
 
@@ -27,20 +28,25 @@ MAX_ROWS = 8
 K = 5
 
 
-def main():
+def main(smoke: bool = False):
+    n_requests = 8 if smoke else N_REQUESTS
+    demo = (dict(n_train=200, n_test=64, n_features=512, n_labels=64,
+                 label_batch=32) if smoke else
+            dict(n_train=800, n_test=512, n_features=4096, n_labels=256,
+                 label_batch=128))
     rows_out = []
     with tempfile.TemporaryDirectory() as ckpt:
-        # Shared demo pipeline (streaming label-batch trainer) — the same
-        # setup behind launch/serve.py --xmc and examples/serve_xmc.py.
-        data, _ = train_demo_checkpoint(ckpt, n_train=800, n_test=512,
-                                        n_features=4096, n_labels=256,
-                                        label_batch=128, seed=0)
-        bsr, _ = load_block_sparse(ckpt)
+        # Shared demo pipeline (spec-driven fit) — the same setup behind
+        # launch/serve.py --xmc and examples/serve_xmc.py. The handle
+        # serves each backend by overriding just the ServeSpec.
+        data, _ = train_demo_checkpoint(ckpt, seed=0, **demo)
+        handle = CheckpointHandle.open(ckpt)
+        bsr, _ = handle.model()
 
         rng = np.random.default_rng(0)
         X = np.asarray(data.X_test, np.float32)
         requests = []
-        for _ in range(N_REQUESTS):
+        for _ in range(n_requests):
             n_i = int(rng.integers(1, MAX_ROWS + 1))
             rows = rng.integers(0, X.shape[0], size=n_i)
             requests.append(X[rows])
@@ -48,15 +54,15 @@ def main():
 
         for kind in BACKENDS:
             t0 = time.time()
-            engine = XMCEngine.from_checkpoint(ckpt, backend=kind, k=K)
+            engine = handle.engine(ServeSpec(backend=kind, k=K))
             t_load = time.time() - t0
             t0 = time.time()
             results = engine.serve(requests)
             wall = time.time() - t0
             stats = engine.latency_summary()
-            assert len(results) == N_REQUESTS
-            rec = {"bench": "serve_latency", "backend": kind,
-                   "n_requests": N_REQUESTS, "n_instances": n_inst,
+            assert len(results) == n_requests
+            rec = {"bench": "serve_latency", "backend": kind, "smoke": smoke,
+                   "n_requests": n_requests, "n_instances": n_inst,
                    "k": K, "block_density": bsr.density,
                    "load_warmup_s": t_load,
                    "p50_ms": stats["p50_ms"], "p90_ms": stats["p90_ms"],
@@ -69,7 +75,7 @@ def main():
                              "inst/s": n_inst / wall})
 
     print_table("serving latency per backend "
-                f"({N_REQUESTS} ragged requests, {n_inst} instances, k={K})",
+                f"({n_requests} ragged requests, {n_inst} instances, k={K})",
                 rows_out, ["backend", "p50_ms", "p99_ms", "mean_ms", "inst/s"])
     print(f"\nwrote {OUT_JSON}")
 

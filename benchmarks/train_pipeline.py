@@ -40,6 +40,10 @@ OUT_JSON = "BENCH_train.json"
 N_TRAIN, N_FEATURES, N_LABELS = 500, 4096, 640
 LABEL_BATCH = 128                      # L = 5 x label_batch
 BLOCK = (128, 128)
+# --smoke (tools/verify.sh / CI): same pipeline, tiny shapes — keeps the
+# benchmark entrypoint exercised without the full CPU cost.
+SMOKE_DIMS = dict(n_train=160, n_features=1024, n_labels=64,
+                  label_batch=16, block=(16, 128))
 # TRON working set per solve: W, f/g/gnorm/delta vectors, CG d/r/p/Hp and
 # the W_try/g_try pair — ~9 (rows, D) arrays dominate.
 TRON_ARRAYS = 9
@@ -67,9 +71,17 @@ def run_job(job: XMCTrainJob, X, Y, out_dir, **kw):
     return res, wall, peak
 
 
-def main():
-    data = make_xmc_dataset(n_train=N_TRAIN, n_test=64,
-                            n_features=N_FEATURES, n_labels=N_LABELS, seed=0)
+def main(smoke: bool = False):
+    if smoke:
+        n_train, n_features, n_labels = (SMOKE_DIMS["n_train"],
+                                         SMOKE_DIMS["n_features"],
+                                         SMOKE_DIMS["n_labels"])
+        label_batch, block = SMOKE_DIMS["label_batch"], SMOKE_DIMS["block"]
+    else:
+        n_train, n_features, n_labels = N_TRAIN, N_FEATURES, N_LABELS
+        label_batch, block = LABEL_BATCH, BLOCK
+    data = make_xmc_dataset(n_train=n_train, n_test=64,
+                            n_features=n_features, n_labels=n_labels, seed=0)
     X = jnp.asarray(data.X_train)
     Y = jnp.asarray(data.Y_train)
     base_mb = live_mb()                # X/Y and friends, common to all modes
@@ -77,14 +89,16 @@ def main():
     rows_out = []
 
     def record(mode, wall, peak_sampled, rows_solve, n_batches, extra=None,
-               labels_solved=N_LABELS):
-        rec = {"bench": "train_pipeline", "mode": mode,
-               "n_labels": N_LABELS, "n_features": N_FEATURES,
+               labels_solved=None):
+        if labels_solved is None:
+            labels_solved = n_labels
+        rec = {"bench": "train_pipeline", "mode": mode, "smoke": smoke,
+               "n_labels": n_labels, "n_features": n_features,
                "label_batch": rows_solve, "n_batches": n_batches,
                "wall_s": wall,
                "labels_per_s": labels_solved / wall,
                "peak_live_mb": peak_sampled,
-               "solve_working_set_mb": solve_peak_mb(rows_solve, N_FEATURES),
+               "solve_working_set_mb": solve_peak_mb(rows_solve, n_features),
                "baseline_live_mb": base_mb}
         rec.update(extra or {})
         emit_json(OUT_JSON, rec)
@@ -94,48 +108,48 @@ def main():
                          "labels/s": rec["labels_per_s"]})
         return rec
 
-    cfg_stream = DiSMECConfig(delta=0.01, label_batch=LABEL_BATCH)
-    cfg_oneshot = DiSMECConfig(delta=0.01, label_batch=N_LABELS)
+    cfg_stream = DiSMECConfig(delta=0.01, label_batch=label_batch)
+    cfg_oneshot = DiSMECConfig(delta=0.01, label_batch=n_labels)
 
     # one_shot: all L labels in a single device solve (the non-scaling path).
     with tempfile.TemporaryDirectory() as d:
         res, wall, peak = run_job(
-            XMCTrainJob(cfg=cfg_oneshot, block_shape=BLOCK), X, Y, d)
+            XMCTrainJob(cfg=cfg_oneshot, block_shape=block), X, Y, d)
         assert res.complete
-        record("one_shot", wall, peak, N_LABELS, res.n_batches)
+        record("one_shot", wall, peak, n_labels, res.n_batches)
 
     # streamed: label batches through one compiled solver, BSR appended.
     with tempfile.TemporaryDirectory() as d:
         res, wall_streamed, peak_streamed = run_job(
-            XMCTrainJob(cfg=cfg_stream, block_shape=BLOCK), X, Y, d)
-        assert res.complete and res.n_batches == N_LABELS // LABEL_BATCH
+            XMCTrainJob(cfg=cfg_stream, block_shape=block), X, Y, d)
+        assert res.complete and res.n_batches == n_labels // label_batch
         nnz = sum(s["nnz"] for s in res.manifest["shards"].values())
-        record("streamed", wall_streamed, peak_streamed, LABEL_BATCH,
+        record("streamed", wall_streamed, peak_streamed, label_batch,
                res.n_batches, {"model_nnz": nnz})
 
     # resume: kill halfway, restart from the manifest.
     with tempfile.TemporaryDirectory() as d:
-        job = XMCTrainJob(cfg=cfg_stream, block_shape=BLOCK)
-        half = (N_LABELS // LABEL_BATCH) // 2
+        job = XMCTrainJob(cfg=cfg_stream, block_shape=block)
+        half = (n_labels // label_batch) // 2
         res1, wall_partial, _ = run_job(job, X, Y, d, max_batches=half)
         assert not res1.complete
         res2, wall_resume, peak = run_job(job, X, Y, d)
         assert res2.complete and len(res2.skipped) == half
         overhead = wall_partial + wall_resume - wall_streamed
-        record("resume", wall_resume, peak, LABEL_BATCH, res2.n_batches,
+        record("resume", wall_resume, peak, label_batch, res2.n_batches,
                {"resumed_batches": len(res2.skipped),
                 "resume_overhead_s": overhead,
                 "resume_overhead_frac": overhead / wall_streamed},
                # The resume leg only re-solved the non-skipped batches.
-               labels_solved=len(res2.solved) * LABEL_BATCH)
+               labels_solved=len(res2.solved) * label_batch)
 
     print_table(
-        f"streaming train pipeline (L={N_LABELS}, D={N_FEATURES}, "
-        f"label_batch={LABEL_BATCH})",
+        f"streaming train pipeline (L={n_labels}, D={n_features}, "
+        f"label_batch={label_batch})",
         rows_out, ["mode", "wall_s", "peak_live_mb", "solve_mb", "labels/s"])
 
-    one_shot_mb = solve_peak_mb(N_LABELS, N_FEATURES)
-    streamed_mb = solve_peak_mb(LABEL_BATCH, N_FEATURES)
+    one_shot_mb = solve_peak_mb(n_labels, n_features)
+    streamed_mb = solve_peak_mb(label_batch, n_features)
     print(f"\nsolver working set: one_shot {one_shot_mb:.0f} MB vs streamed "
           f"{streamed_mb:.0f} MB ({one_shot_mb / streamed_mb:.1f}x — scales "
           "with label_batch, not L)")

@@ -145,14 +145,14 @@ def bench_cg_passes():
     print("score passes per CG iteration: 2 -> 1 on both paths")
 
 
-def bench_solve_wall():
+def bench_solve_wall(L=L_W, N=N_W, D=D_W, repeats=3, smoke=False):
     """End-to-end tron_solve wall clock, cached vs legacy protocol, plus the
     bit-identity of their solutions (the legacy protocol emulated through
     the act_aux payload)."""
     rng = np.random.default_rng(5)
-    X = jnp.asarray(rng.normal(size=(N_W, D_W)), jnp.float32)
-    S = jnp.asarray(np.sign(rng.normal(size=(L_W, N_W))), jnp.float32)
-    W0 = jnp.zeros((L_W, D_W), jnp.float32)
+    X = jnp.asarray(rng.normal(size=(N, D)), jnp.float32)
+    S = jnp.asarray(np.sign(rng.normal(size=(L, N))), jnp.float32)
+    W0 = jnp.zeros((L, D), jnp.float32)
 
     def run(protocol):
         if protocol == "cached":
@@ -165,7 +165,7 @@ def bench_solve_wall():
         res = tron_solve(*args, W0, eps=1e-3)          # compile + solve
         jax.block_until_ready(res.W)
         best = float("inf")
-        for _ in range(3):
+        for _ in range(repeats):
             t0 = time.time()
             res = tron_solve(*args, W0, eps=1e-3)
             jax.block_until_ready(res.W)
@@ -189,7 +189,7 @@ def bench_solve_wall():
             tron_solve,
             static_argnames=("obj_grad_fn", "hvp_fn", "max_newton",
                              "max_cg")).lower(*args, W0, eps=1e-3).compile()
-        want = (f"f32[{L_W},{N_W}]", f"f32[{N_W},{L_W}]")
+        want = (f"f32[{L},{N}]", f"f32[{N},{L}]")
         return sum(1 for line in compiled.as_text().splitlines()
                    if " dot(" in line and "= " in line
                    and line.split("= ")[1].split("{")[0].strip() in want)
@@ -200,8 +200,8 @@ def bench_solve_wall():
                                   np.asarray(r_legacy.W))
     dots_cached = module_score_dots("cached")
     dots_legacy = module_score_dots("legacy")
-    rec = {"bench": "tron_hotpath", "metric": "solve_wall",
-           "L": L_W, "N": N_W, "D": D_W,
+    rec = {"bench": "tron_hotpath", "metric": "solve_wall", "smoke": smoke,
+           "L": L, "N": N, "D": D,
            "wall_s_cached": t_cached, "wall_s_legacy": t_legacy,
            "speedup": t_legacy / t_cached,
            "module_score_dots_cached": dots_cached,
@@ -209,20 +209,22 @@ def bench_solve_wall():
            "identical_W": True}
     emit_json(OUT_JSON, rec)
     assert dots_cached < dots_legacy, (dots_cached, dots_legacy)
-    print(f"\nfull tron_solve (L={L_W}, N={N_W}, D={D_W}): score-shaped "
+    print(f"\nfull tron_solve (L={L}, N={N}, D={D}): score-shaped "
           f"dots in the compiled module {dots_legacy} -> {dots_cached}; "
           f"wall legacy {t_legacy:.3f}s vs cached {t_cached:.3f}s "
           f"({rec['speedup']:.2f}x), identical W")
 
 
-def bench_overlap():
+def bench_overlap(n_train=N_TRAIN, n_features=N_FEATURES, n_labels=N_LABELS,
+                  label_batch=LABEL_BATCH, block=BLOCK, repeats=2,
+                  smoke=False):
     from repro.data.xmc import make_xmc_dataset
-    data = make_xmc_dataset(n_train=N_TRAIN, n_test=64,
-                            n_features=N_FEATURES, n_labels=N_LABELS,
+    data = make_xmc_dataset(n_train=n_train, n_test=64,
+                            n_features=n_features, n_labels=n_labels,
                             seed=0)
     X, Y = jnp.asarray(data.X_train), jnp.asarray(data.Y_train)
     q = np.asarray(data.X_test[:32], np.float32)
-    cfg = DiSMECConfig(delta=0.01, label_batch=LABEL_BATCH, eps=1e-2)
+    cfg = DiSMECConfig(delta=0.01, label_batch=label_batch, eps=1e-2)
 
     def run(overlap):
         """Returns (steady wall, total wall, top-k). Steady state = first
@@ -230,9 +232,9 @@ def bench_overlap():
         one-off solver compile whose run-to-run variance would swamp the
         per-batch overlap signal."""
         best_steady, best_total, labels = float("inf"), float("inf"), None
-        for _ in range(2):                     # best-of-2: CPU timing noise
+        for _ in range(repeats):               # best-of-N: CPU timing noise
             with tempfile.TemporaryDirectory() as d:
-                job = XMCTrainJob(cfg=cfg, block_shape=BLOCK,
+                job = XMCTrainJob(cfg=cfg, block_shape=block,
                                   overlap=overlap)
                 stamps = []
                 t0 = time.time()
@@ -257,19 +259,20 @@ def bench_overlap():
         lambda W: (*losses.objective_and_grad(W, X, S, cfg.C), W),
         lambda V, W: losses.hessian_vp(
             V, X, losses.active_mask(W, X, S), cfg.C),
-        jnp.zeros((N_LABELS, N_FEATURES), jnp.float32), eps=cfg.eps)
+        jnp.zeros((n_labels, n_features), jnp.float32), eps=cfg.eps)
     from repro.core.dismec import DiSMECModel
     legacy_model = DiSMECModel(W=prune(legacy.W, cfg.delta), delta=cfg.delta,
-                               n_labels=N_LABELS)
+                               n_labels=n_labels)
     eng = XMCEngine.from_dismec(legacy_model, backend="dense", k=5)
     topk_legacy = np.asarray(eng.serve([q])[0].labels)
 
     identical = (np.array_equal(topk_seq, topk_ovl)
                  and np.array_equal(topk_seq, topk_legacy))
     rec = {"bench": "tron_hotpath", "metric": "scheduler_overlap",
-           "n_labels": N_LABELS, "n_features": N_FEATURES,
-           "label_batch": LABEL_BATCH,
-           "n_batches": N_LABELS // LABEL_BATCH,
+           "smoke": smoke,
+           "n_labels": n_labels, "n_features": n_features,
+           "label_batch": label_batch,
+           "n_batches": n_labels // label_batch,
            "steady_wall_s_sequential": steady_seq,
            "steady_wall_s_overlapped": steady_ovl,
            "speedup": steady_seq / steady_ovl,
@@ -279,7 +282,7 @@ def bench_overlap():
     emit_json(OUT_JSON, rec)
     print_table(
         f"streamed training, sequential vs double-buffered "
-        f"(L={N_LABELS}, D={N_FEATURES}, label_batch={LABEL_BATCH}, "
+        f"(L={n_labels}, D={n_features}, label_batch={label_batch}, "
         "steady state)",
         [{"mode": "sequential", "steady_s": steady_seq, "total_s": wall_seq,
           "speedup": 1.0},
@@ -292,10 +295,17 @@ def bench_overlap():
     return rec
 
 
-def main():
+def main(smoke: bool = False):
     bench_cg_passes()
-    bench_solve_wall()
-    bench_overlap()
+    if smoke:
+        # Same claims, tiny shapes: the 2->1 CG accounting above is exact
+        # at any size; the solve/overlap legs just need to run end-to-end.
+        bench_solve_wall(L=64, N=128, D=128, repeats=1, smoke=True)
+        bench_overlap(n_train=96, n_features=1024, n_labels=96,
+                      label_batch=32, block=(32, 128), repeats=1, smoke=True)
+    else:
+        bench_solve_wall()
+        bench_overlap()
     print(f"\nwrote {OUT_JSON}")
 
 

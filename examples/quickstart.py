@@ -1,20 +1,30 @@
-"""Quickstart: the paper end-to-end in ~40 lines of public API.
+"""Quickstart: the paper end-to-end through the declarative session API.
 
-Generates a power-law XMC dataset (paper Fig. 1 statistics), trains DiSMEC
-(Algorithm 1: batched TRON + Delta-pruning), evaluates P@k / nDCG@k
-(paper §3.2), and serves through the block-sparse predict kernel (§2.2.1).
+One frozen `XMCSpec` describes the whole experiment — solver (Algorithm 1's
+hyper-parameters), schedule (label-batch streaming), and serving plan —
+and three calls run it:
+
+  fit(X, Y, spec, ckpt)            train -> streamed sparse checkpoint
+  CheckpointHandle.open(ckpt)      re-open it, spec recovered from the
+                                   manifest alone
+  handle.engine()                  serve top-k exactly as the spec says
+
+plus the warm-start session: re-fit under a changed spec with
+`init_from=` seeding every label batch's TRON from the prior checkpoint.
 
 Run: PYTHONPATH=src python examples/quickstart.py
 """
 
-import jax
+import tempfile
+
+import numpy as np
+
 import jax.numpy as jnp
 
-from repro.core.dismec import DiSMECConfig, train
-from repro.core.prediction import evaluate, predict_topk
-from repro.core.pruning import to_block_sparse
+from repro.core.prediction import evaluate
 from repro.data.xmc import make_xmc_dataset
-from repro.kernels.bsr_predict import ops as bsr_ops
+from repro.specs import ScheduleSpec, ServeSpec, SolverSpec
+from repro.xmc_api import CheckpointHandle, XMCSpec, fit
 
 
 def main():
@@ -22,27 +32,51 @@ def main():
     data = make_xmc_dataset(n_train=1500, n_test=500, n_features=4096,
                             n_labels=512, beta=1.0, seed=0)
     print("dataset:", data.stats())
+    X, Y = jnp.asarray(data.X_train), jnp.asarray(data.Y_train)
+    queries = np.asarray(data.X_test, np.float32)
 
-    # 2. Algorithm 1: one-vs-rest squared-hinge SVMs, batched TRON solver,
-    #    Delta=0.01 ambiguity pruning (steps 3-7).
-    cfg = DiSMECConfig(C=1.0, delta=0.01, label_batch=512)
-    model = train(jnp.asarray(data.X_train), jnp.asarray(data.Y_train), cfg)
-    print(f"model: {model.W.shape}, density "
-          f"{model.nnz / model.W.size:.3f} after Delta-pruning")
+    # 2. The experiment as one JSON-round-trippable value.
+    spec = XMCSpec(
+        solver=SolverSpec(C=1.0, delta=0.01),          # Eq. 2.2 + step 7
+        schedule=ScheduleSpec(label_batch=128),        # layer-1 batches
+        serve=ServeSpec(backend="bsr", k=5))           # §2.2.1 serving
+    assert XMCSpec.from_json(spec.to_json()) == spec
+    print("spec:", spec.to_json())
 
-    # 3. Evaluate (paper Table 2 metrics).
-    _, topk = predict_topk(jnp.asarray(data.X_test), model.W, 5)
-    print("metrics:", evaluate(jnp.asarray(data.Y_test), topk))
+    with tempfile.TemporaryDirectory() as root:
+        ckpt = f"{root}/model"
 
-    # 4. Serving path (paper §2.2.1): block-sparse model, zero blocks
-    #    skipped by the Pallas kernel (interpret mode on CPU).
-    bsr = to_block_sparse(model.W, (128, 128))
-    scores = bsr_ops.bsr_predict(jnp.asarray(data.X_test), bsr)
-    _, topk_bsr = jax.lax.top_k(scores[:, :model.n_labels], 5)
-    agree = float((topk == topk_bsr).mean())
-    print(f"BSR serving: block density {bsr.density:.3f}, "
-          f"executes {bsr_ops.model_flops(bsr, 500) / bsr_ops.dense_flops(bsr, 500):.2f}x dense FLOPs, "
-          f"top-k agreement {agree:.4f}")
+        # 3. fit: Algorithm 1 streamed into a servable sparse checkpoint
+        #    (device memory O(label_batch x D); killed runs resume).
+        handle = fit(X, Y, spec, ckpt)
+        model, _ = handle.model()
+        print(f"model: {model.orig_shape}, block density "
+              f"{model.density:.3f} after Delta-pruning")
+
+        # 4. The checkpoint alone reproduces the experiment description.
+        reopened = CheckpointHandle.open(ckpt)
+        assert reopened.spec == spec
+
+        # 5. Serve as the spec says (paper Table 2 metrics on the answers).
+        engine = reopened.engine()
+        results = engine.serve([queries])
+        print("metrics:", evaluate(jnp.asarray(data.Y_test),
+                                   jnp.asarray(results[0].labels)))
+
+        # 6. Same weights, different serving plan: override just ServeSpec.
+        dense = reopened.engine(ServeSpec(backend="dense", k=5))
+        agree = float((dense.serve([queries])[0].labels
+                       == results[0].labels).mean())
+        print(f"dense backend top-5 agreement: {agree:.4f}")
+
+        # 7. Warm start: re-train with a sharper capacity control from the
+        #    converged weights instead of zeros (the spec delta changes,
+        #    the session maps the old shards back to label ranges as W0).
+        sharper = spec.replace(solver=spec.solver.replace(delta=0.02))
+        handle2 = fit(X, Y, sharper, f"{root}/model-d02", init_from=ckpt)
+        model2, _ = handle2.model()
+        print(f"warm-started delta=0.02 refit: block density "
+              f"{model2.density:.3f} (was {model.density:.3f})")
 
 
 if __name__ == "__main__":

@@ -1,12 +1,13 @@
-"""Serving example: a thin client of the XMC serving subsystem.
+"""Serving example: a thin client of the spec-driven serving session.
 
 Streams a small DiSMEC model into the sparse multi-shard checkpoint (the
 paper's offline model files, written by the label-batch training pipeline),
-then serves the same ragged request stream through each predict backend of
-`repro.serve.XMCEngine` (dense / BSR-Pallas / mesh-sharded) and reports
-latency percentiles, accuracy of served answers, and cross-backend
-agreement. Also runs the LM serving path to show both engines share one
-subsystem.
+re-opens it as a `CheckpointHandle` (the spec rides in the manifest), then
+serves the same ragged request stream through each registered predict
+backend by overriding just the handle's `ServeSpec` — dense / BSR-Pallas /
+mesh-sharded share one set of weights — and reports latency percentiles,
+accuracy of served answers, and cross-backend agreement. Also runs the LM
+serving path to show both engines share one subsystem.
 
 Run: PYTHONPATH=src python examples/serve_xmc.py
 """
@@ -18,11 +19,12 @@ import numpy as np
 
 import jax.numpy as jnp
 
-from repro.checkpoint.io import load_block_sparse
 from repro.core.prediction import evaluate
 from repro.kernels.bsr_predict import ops as bsr_ops
-from repro.serve import BACKENDS, XMCEngine
+from repro.serve import BACKENDS
+from repro.specs import ServeSpec
 from repro.train.xmc import train_demo_checkpoint
+from repro.xmc_api import CheckpointHandle
 
 
 def serve_xmc():
@@ -33,9 +35,11 @@ def serve_xmc():
         data, _ = train_demo_checkpoint(ckpt, n_train=1000, n_test=512,
                                         n_features=4096, n_labels=256,
                                         label_batch=128, seed=0)
-        bsr, _ = load_block_sparse(ckpt)
+        handle = CheckpointHandle.open(ckpt)       # spec from manifest alone
+        bsr, _ = handle.model()
         print(f"model: {(data.n_labels, data.n_features)}, "
-              f"block density {bsr.density:.3f}")
+              f"block density {bsr.density:.3f}, "
+              f"spec delta={handle.spec.solver.delta}")
 
         # A ragged request stream over the test pool.
         rng = np.random.default_rng(0)
@@ -50,7 +54,7 @@ def serve_xmc():
 
         served = {}
         for kind in BACKENDS:
-            engine = XMCEngine.from_checkpoint(ckpt, backend=kind, k=5)
+            engine = handle.engine(ServeSpec(backend=kind, k=5))
             results = engine.serve(requests)
             stats = engine.latency_summary()
             idx = np.concatenate([r.labels for r in results], axis=0)

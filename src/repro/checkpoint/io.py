@@ -207,17 +207,9 @@ class BlockSparseWriter:
         """Densify one already-written shard back to its (n_rows, D) weight
         rows — the resume path of a materializing caller."""
         entry = self.manifest["shards"][str(int(batch))]
-        data = np.load(os.path.join(self.directory, entry["file"]))
-        bl, bd = self.manifest["block_shape"]
-        D = self.manifest["n_features"]
-        row_off = entry["row_start"] // bl
-        W = np.zeros((entry["padded_rows"],
-                      -(-D // bd) * bd), np.float32)
-        for k in range(data["blocks"].shape[0]):
-            r = int(data["block_rows"][k]) - row_off
-            c = int(data["block_cols"][k])
-            W[r * bl:(r + 1) * bl, c * bd:(c + 1) * bd] = data["blocks"][k]
-        return W[:entry["n_rows"], :D]
+        return _densify_shard(self.directory, entry,
+                              self.manifest["block_shape"],
+                              self.manifest["n_features"])
 
     def finalize(self) -> dict:
         """Mark the checkpoint servable (all batches present)."""
@@ -228,6 +220,78 @@ class BlockSparseWriter:
         self.manifest["complete"] = True
         self._flush()
         return self.manifest
+
+
+def _densify_shard(directory: str, entry: dict, block_shape,
+                   n_features: int) -> np.ndarray:
+    """Unpack one stream shard's BSR blocks into its (n_rows, D) rows."""
+    data = np.load(os.path.join(directory, entry["file"]))
+    bl, bd = block_shape
+    row_off = entry["row_start"] // bl
+    W = np.zeros((entry["padded_rows"], -(-n_features // bd) * bd),
+                 np.float32)
+    for k in range(data["blocks"].shape[0]):
+        r = int(data["block_rows"][k]) - row_off
+        c = int(data["block_cols"][k])
+        W[r * bl:(r + 1) * bl, c * bd:(c + 1) * bd] = data["blocks"][k]
+    return W[:entry["n_rows"], :n_features]
+
+
+def label_range_reader(directory: str):
+    """A `read(start, stop) -> (stop - start, D) float32` view of a
+    block-sparse checkpoint's label rows.
+
+    The warm-start read path (repro.xmc_api.fit(init_from=...)): a prior
+    checkpoint's shards are mapped back to label ranges one training batch
+    at a time. For the streamed multi-shard layout each call densifies
+    only the shards overlapping the range, so the full (L, D) matrix is
+    never materialized; the one-shot single-shard layout (one monolithic
+    block array, no per-range structure) is densified ONCE here and
+    served as cached slices — build the reader once per run, not per
+    batch. Rows past the prior model's label count come back as zeros
+    (a grown label space cold-starts its new labels).
+    """
+    index = load_block_sparse_meta(directory)
+    L, D = index["orig_shape"]
+
+    if index.get("layout") == "stream":
+        manifest = index["manifest"]
+
+        def read(start: int, stop: int) -> np.ndarray:
+            if stop <= start:
+                raise ValueError(f"empty label range [{start}, {stop})")
+            out = np.zeros((stop - start, D), np.float32)
+            for b in sorted(manifest["shards"], key=int):
+                entry = manifest["shards"][b]
+                r0 = entry["row_start"]
+                lo, hi = max(start, r0), min(stop, r0 + entry["n_rows"])
+                if lo >= hi:
+                    continue
+                rows = _densify_shard(directory, entry,
+                                      manifest["block_shape"], D)
+                out[lo - start:hi - start] = rows[lo - r0:hi - r0]
+            return out
+        return read
+
+    model, _ = load_block_sparse(directory)
+    W_full = np.asarray(model.to_dense())
+
+    def read(start: int, stop: int) -> np.ndarray:
+        if stop <= start:
+            raise ValueError(f"empty label range [{start}, {stop})")
+        out = np.zeros((stop - start, D), np.float32)
+        hi = min(stop, L)
+        if hi > start:
+            out[:hi - start] = W_full[start:hi, :D]
+        return out
+    return read
+
+
+def load_label_range_dense(directory: str, start: int,
+                           stop: int) -> np.ndarray:
+    """One-shot convenience over `label_range_reader` (which see); for
+    repeated ranges build the reader once instead."""
+    return label_range_reader(directory)(start, stop)
 
 
 def has_block_sparse_checkpoint(directory: str) -> bool:

@@ -1,8 +1,10 @@
 """DiSMEC core: distributed sparse one-vs-rest machines (the paper's contribution)."""
 
-from repro.core.dismec import (DiSMECConfig, DiSMECModel, make_batch_solver,
-                               signs_from_labels, train, train_label_batch,
-                               train_sharded)
+from repro.core.dismec import (DiSMECConfig, DiSMECModel,
+                               available_solver_ops, make_batch_solver,
+                               register_solver_ops, signs_from_labels, train,
+                               train_label_batch, train_sharded,
+                               unregister_solver_ops)
 from repro.core.pruning import (ambiguous_fraction, concat_block_sparse, nnz,
                                 prune, sparsity, to_block_sparse,
                                 weight_histogram, BlockSparseModel)
@@ -13,7 +15,9 @@ from repro.core import head, losses, tron
 
 __all__ = [
     "DiSMECConfig", "DiSMECModel", "signs_from_labels", "train",
-    "train_label_batch", "train_sharded", "make_batch_solver", "prune",
+    "train_label_batch", "train_sharded", "make_batch_solver",
+    "register_solver_ops", "unregister_solver_ops", "available_solver_ops",
+    "prune",
     "nnz", "sparsity", "ambiguous_fraction", "weight_histogram",
     "to_block_sparse", "concat_block_sparse",
     "BlockSparseModel", "predict_scores", "predict_topk",

@@ -17,9 +17,13 @@ Hessian-vector products with `psum` — the collective-based Newton-CG the
 paper could not express on a CPU cluster.
 
 Layer 1's sequential batch loop itself lives in train/xmc.py
-(`XMCTrainJob`): `train` and `train_sharded` here are thin wrappers over
-that one scheduler, and this module contributes the layer-2 engine
-(`make_batch_solver`) every path shares.
+(`XMCTrainJob`) under the declarative session API (repro.xmc_api.fit):
+`train` and `train_sharded` here are thin adapters over that one spec
+path, and this module contributes the layer-2 engine (`make_batch_solver`,
+warm-startable via a per-batch W0) every path shares. The obj-grad/Hv
+implementations live in a solver-ops registry (`register_solver_ops`):
+"jnp" and "pallas" are built in, and `SolverSpec(ops=...)` /
+`DiSMECConfig(ops=...)` select plugins without touching the optimizer.
 
 All three injection sites — the jnp losses path, the Pallas-kernel path
 (`use_pallas=True`, interpret/compiled auto-selected per backend via
@@ -33,7 +37,7 @@ the (L, D) x (D, N) score matmul just to rebuild the active set.
 from __future__ import annotations
 
 import dataclasses
-from typing import Optional
+from typing import Callable, Optional
 
 import jax
 import jax.numpy as jnp
@@ -62,6 +66,66 @@ class DiSMECConfig:
     # on TPU, interpreter elsewhere — compat.default_pallas_interpret);
     # True/False force it. Only consulted when use_pallas=True.
     pallas_interpret: Optional[bool] = None
+    # Solver-ops registry kind (see `register_solver_ops`). None derives the
+    # kind from `use_pallas` ("pallas"/"jnp"); a registered plugin name
+    # routes obj/grad + Hv through that factory instead.
+    ops: Optional[str] = None
+
+    def ops_kind(self) -> str:
+        return self.ops or ("pallas" if self.use_pallas else "jnp")
+
+
+# ---------------------------------------------------------------------------
+# Solver-ops registry: how obj/grad + Hv are computed for a label batch.
+# ---------------------------------------------------------------------------
+
+# kind -> factory(X, S, cfg) -> (obj_grad, hvp) speaking the margin-caching
+# protocol: obj_grad(W) -> (f, grad, act_aux), hvp(V, act_aux) -> H V.
+SOLVER_OPS: dict[str, Callable] = {}
+
+
+def register_solver_ops(kind: str):
+    """Decorator: plug a new obj-grad/Hv implementation into the solver.
+
+    The factory receives (X (N, D), S (L, N), cfg: DiSMECConfig) and must
+    return the margin-caching protocol pair (see core/tron.py). Select it
+    with `DiSMECConfig(ops=kind)` / `SolverSpec(ops=kind)` — no engine or
+    scheduler code needs touching.
+    """
+    def deco(factory):
+        if kind in SOLVER_OPS:
+            raise ValueError(f"solver ops {kind!r} already registered")
+        SOLVER_OPS[kind] = factory
+        return factory
+    return deco
+
+
+def unregister_solver_ops(kind: str) -> None:
+    """Remove a registered solver-ops kind (plugin teardown / tests)."""
+    SOLVER_OPS.pop(kind, None)
+
+
+def available_solver_ops() -> tuple[str, ...]:
+    return tuple(sorted(SOLVER_OPS))
+
+
+@register_solver_ops("jnp")
+def _jnp_solver_ops(X: Array, S: Array, cfg: "DiSMECConfig"):
+    obj_grad = lambda W: losses.objective_grad_act(W, X, S, cfg.C)
+    hvp = lambda V, act: losses.hessian_vp(V, X, act, cfg.C)
+    return obj_grad, hvp
+
+
+@register_solver_ops("pallas")
+def _pallas_solver_ops(X: Array, S: Array, cfg: "DiSMECConfig"):
+    from repro.kernels.hinge import ops as hinge_ops
+    from repro.kernels.hvp import ops as hvp_ops
+    interp = cfg.pallas_interpret
+    obj_grad = lambda W: hinge_ops.objective_grad_act(
+        W, X, S, cfg.C, interpret=interp)
+    hvp = lambda V, act: hvp_ops.hessian_vp(V, X, act, cfg.C,
+                                            interpret=interp)
+    return obj_grad, hvp
 
 
 @dataclasses.dataclass
@@ -94,23 +158,18 @@ def signs_from_labels(Y: Array) -> Array:
 
 def _make_fns(X: Array, S: Array, cfg: "DiSMECConfig"):
     """The margin-caching TRON protocol pair (core/tron.py): obj_grad(W) ->
-    (f, grad, act) and hvp(V, act). The active mask is produced by the same
+    (f, grad, act) and hvp(V, act), built by the registered solver-ops
+    factory `cfg.ops_kind()` names. The active mask is produced by the same
     score pass that computes f/grad — on the Pallas path it streams out of
     the fused hinge kernel tile-by-tile, so no separate mask matmul exists
     anywhere."""
-    C = cfg.C
-    if cfg.use_pallas:
-        from repro.kernels.hinge import ops as hinge_ops
-        from repro.kernels.hvp import ops as hvp_ops
-        interp = cfg.pallas_interpret
-        obj_grad = lambda W: hinge_ops.objective_grad_act(
-            W, X, S, C, interpret=interp)
-        hvp = lambda V, act: hvp_ops.hessian_vp(V, X, act, C,
-                                                interpret=interp)
-    else:
-        obj_grad = lambda W: losses.objective_grad_act(W, X, S, C)
-        hvp = lambda V, act: losses.hessian_vp(V, X, act, C)
-    return obj_grad, hvp
+    kind = cfg.ops_kind()
+    try:
+        factory = SOLVER_OPS[kind]
+    except KeyError:
+        raise ValueError(f"unknown solver ops {kind!r}; registered kinds: "
+                         f"{available_solver_ops()}") from None
+    return factory(X, S, cfg)
 
 
 # ---------------------------------------------------------------------------
@@ -119,27 +178,40 @@ def _make_fns(X: Array, S: Array, cfg: "DiSMECConfig"):
 
 def train_label_batch(X: Array, S: Array, cfg: DiSMECConfig,
                       W0: Optional[Array] = None) -> TronResult:
-    """Solve all labels in S at once (layer-2 parallelism)."""
+    """Solve all labels in S at once (layer-2 parallelism).
+
+    A non-None W0 is treated as a warm start: the relative stopping rule
+    is anchored at the cold-start gradient ||g(0)|| (one extra obj/grad
+    evaluation), not at the warm iterate's already-small ||g(W0)|| —
+    otherwise the tolerance would tighten and drive converged labels
+    through pointless extra Newton steps.
+    """
     L, _ = S.shape
     D = X.shape[1]
+    obj_grad, hvp = _make_fns(X, S, cfg)
+    gnorm_ref = None
     if W0 is None:
         W0 = jnp.zeros((L, D), jnp.float32)
-    obj_grad, hvp = _make_fns(X, S, cfg)
+    else:
+        _, g_zero, _ = obj_grad(jnp.zeros_like(W0))
+        gnorm_ref = jnp.linalg.norm(g_zero, axis=-1)
     return tron_solve(obj_grad, hvp, W0, eps=cfg.eps,
-                      max_newton=cfg.max_newton, max_cg=cfg.max_cg)
+                      max_newton=cfg.max_newton, max_cg=cfg.max_cg,
+                      gnorm_ref=gnorm_ref)
 
 
 def train(X: Array, Y: Array, cfg: DiSMECConfig = DiSMECConfig()) -> DiSMECModel:
     """Algorithm 1 on one device: sequential label batches (layer 1),
     batched TRON per batch (layer 2), Delta-pruning per batch (step 7).
 
-    Thin wrapper over the one batch-scheduler code path (train/xmc.py,
-    `XMCTrainJob`) with the in-memory assembly step 11; pass the job an
-    output directory instead to stream the batches straight to a sparse
-    multi-shard checkpoint and never assemble W at all.
+    Thin adapter over the one spec-driven session path (repro.xmc_api):
+    the config becomes an `XMCSpec` and runs through the same scheduler
+    `fit()` drives, with the in-memory assembly step 11. Use
+    `repro.xmc_api.fit(X, Y, spec, out_dir)` instead to stream the batches
+    straight to a servable sparse checkpoint and never assemble W at all.
     """
-    from repro.train.xmc import XMCTrainJob           # deferred: no cycle
-    return XMCTrainJob(cfg=cfg).run(X, Y).model
+    from repro.xmc_api import spec_from_config, job_from_spec   # no cycle
+    return job_from_spec(spec_from_config(cfg)).run(X, Y).model
 
 
 # ---------------------------------------------------------------------------
@@ -176,12 +248,13 @@ def balance_permutation(Y: Array, n_shards: int) -> np.ndarray:
 
 def make_batch_solver(X: Array, cfg: DiSMECConfig, mesh: Optional[Mesh] = None,
                       *, label_axis: str = "model", data_axis: str = "data",
-                      shard_data: bool = False):
-    """Layer 2 of Algorithm 1 as a reusable jitted solver: S (rows, N) ->
-    Delta-pruned W (rows, D), rows a multiple of the label-shard count when
-    a mesh is given. The one code path behind `train`, `train_sharded` and
-    the streaming scheduler (train/xmc.py) — the scheduler keeps every label
-    batch the same padded shape so all batches share one executable.
+                      shard_data: bool = False, warm: bool = False):
+    """Layer 2 of Algorithm 1 as a reusable jitted solver: (S (rows, N),
+    W0 (rows, D) or None) -> Delta-pruned W (rows, D), rows a multiple of
+    the label-shard count when a mesh is given. The one code path behind
+    `train`, `train_sharded` and the streaming scheduler (train/xmc.py) —
+    the scheduler keeps every label batch the same padded shape so all
+    batches share one executable.
 
     mesh=None        : single-device batched TRON.
     shard_data=False : paper-faithful — X replicated per label-shard "node".
@@ -194,22 +267,40 @@ def make_batch_solver(X: Array, cfg: DiSMECConfig, mesh: Optional[Mesh] = None,
                        squared-hinge objective (z = 1 - s*0 = 1, active) is
                        subtracted back out after the psum, so the padded
                        objective is exactly the unpadded one.
+    warm=True        : the returned solver expects warm-start W0s (a prior
+                       checkpoint's rows) and anchors TRON's relative
+                       stopping rule at ||g(0)|| — the cold-start tolerance
+                       — via one extra obj/grad evaluation at W=0 per batch.
+                       Without the anchor a warm W0's small gradient would
+                       TIGHTEN the tolerance and un-converge every label.
     """
     X = jnp.asarray(X, jnp.float32)
     D = X.shape[1]
 
-    def solve_local(X_in: Array, S_in: Array) -> Array:
-        obj_grad, hvp = _make_fns(X_in, S_in, cfg)
-        W0 = jnp.zeros((S_in.shape[0], D), jnp.float32)
+    def run_tron(obj_grad, hvp, W0: Array) -> Array:
+        ref = None
+        if warm:
+            _, g_zero, _ = obj_grad(jnp.zeros_like(W0))
+            ref = jnp.linalg.norm(g_zero, axis=-1)
         res = tron_solve(obj_grad, hvp, W0, eps=cfg.eps,
-                         max_newton=cfg.max_newton, max_cg=cfg.max_cg)
+                         max_newton=cfg.max_newton, max_cg=cfg.max_cg,
+                         gnorm_ref=ref)
         return prune(res.W, cfg.delta)                  # step 7 on-device
+
+    def solve_local(X_in: Array, S_in: Array, W0: Array) -> Array:
+        obj_grad, hvp = _make_fns(X_in, S_in, cfg)
+        return run_tron(obj_grad, hvp, W0)
 
     if mesh is None:
         # X stays a traced argument (not a captured constant): XLA would
         # otherwise try to constant-fold whole X contractions at compile.
         jitted = jax.jit(solve_local)
-        return lambda S: jitted(X, S)
+
+        def solve_single(S: Array, W0: Optional[Array] = None) -> Array:
+            if W0 is None:
+                W0 = jnp.zeros((S.shape[0], D), jnp.float32)
+            return jitted(X, S, W0)
+        return solve_single
 
     n_pad = 0
     if not shard_data:
@@ -225,7 +316,7 @@ def make_batch_solver(X: Array, cfg: DiSMECConfig, mesh: Optional[Mesh] = None,
         s_spec = P(label_axis, data_axis)
         x_spec = P(data_axis, None)
 
-    def solve_shard(X_sh: Array, S_sh: Array) -> Array:
+    def solve_shard(X_sh: Array, S_sh: Array, W0_sh: Array) -> Array:
         if shard_data:
             # Margin-caching protocol over the data axis: the act payload is
             # the LOCAL (rows, N/n_data) mask of this shard's instance slice
@@ -248,23 +339,26 @@ def make_batch_solver(X: Array, cfg: DiSMECConfig, mesh: Optional[Mesh] = None,
                 loc = 2.0 * cfg.C * ((act * Xv) @ X_sh)
                 return 2.0 * V + jax.lax.psum(loc, data_axis)
 
-            W0 = jnp.zeros((S_sh.shape[0], D), jnp.float32)
-            res = tron_solve(obj_grad, hvp, W0, eps=cfg.eps,
-                             max_newton=cfg.max_newton, max_cg=cfg.max_cg)
-            return prune(res.W, cfg.delta)
-        return solve_local(X_sh, S_sh)
+            return run_tron(obj_grad, hvp, W0_sh)
+        return solve_local(X_sh, S_sh, W0_sh)
 
-    shmapped = shard_map(solve_shard, mesh=mesh, in_specs=(x_spec, s_spec),
+    shmapped = shard_map(solve_shard, mesh=mesh,
+                         in_specs=(x_spec, s_spec, P(label_axis, None)),
                          out_specs=P(label_axis, None), check_vma=False)
 
-    def solve(X_in: Array, S: Array) -> Array:
+    def solve(X_in: Array, S: Array, W0: Array) -> Array:
         if n_pad:
             S = jnp.concatenate(
                 [S, -jnp.ones((S.shape[0], n_pad), S.dtype)], axis=1)
-        return shmapped(X_in, S)
+        return shmapped(X_in, S, W0)
 
     jitted = jax.jit(solve)
-    return lambda S: jitted(X, S)
+
+    def solve_meshed(S: Array, W0: Optional[Array] = None) -> Array:
+        if W0 is None:
+            W0 = jnp.zeros((S.shape[0], D), jnp.float32)
+        return jitted(X, S, W0)
+    return solve_meshed
 
 
 def train_sharded(X: Array, Y: Array, cfg: DiSMECConfig, mesh: Mesh,
@@ -286,8 +380,7 @@ def train_sharded(X: Array, Y: Array, cfg: DiSMECConfig, mesh: Mesh,
                        (equalizes per-shard TRON wall time; solution is
                        identical, labels are permuted and un-permuted).
     """
-    from repro.train.xmc import XMCTrainJob           # deferred: no cycle
-    job = XMCTrainJob(cfg=cfg, mesh=mesh, label_axis=label_axis,
-                      data_axis=data_axis, shard_data=shard_data,
-                      balance=balance)
-    return job.run(X, Y).model
+    from repro.xmc_api import spec_from_config, job_from_spec   # no cycle
+    spec = spec_from_config(cfg, label_axis=label_axis, data_axis=data_axis,
+                            shard_data=shard_data, balance=balance)
+    return job_from_spec(spec, mesh=mesh).run(X, Y).model

@@ -138,7 +138,8 @@ def tron_solve(obj_grad_fn: Callable[[Array], tuple[Array, Array, Array]],
                *,
                eps: float = 0.01,
                max_newton: int = 50,
-               max_cg: int = 40) -> TronResult:
+               max_cg: int = 40,
+               gnorm_ref: Array | None = None) -> TronResult:
     """Solve min_w f_l(w_l) for all labels l at once.
 
     obj_grad_fn(W) -> (f, grad, act_aux): objective, gradient, and the
@@ -147,12 +148,18 @@ def tron_solve(obj_grad_fn: Callable[[Array], tuple[Array, Array, Array]],
         Hessian product at the same iterate — see module docstring.
     hvp_fn(V, act_aux) -> H V using the cached active set.
     eps: relative gradient-norm tolerance, ||g|| <= eps * ||g_0|| (liblinear).
+    gnorm_ref: optional (L,) anchor for the relative tolerance in place of
+        ||g(W0)||. A warm-started solve (W0 from a prior checkpoint) must
+        keep the COLD-start stopping rule — eps * ||g(0)|| — or the
+        shrunken warm gradient would tighten the tolerance and drive every
+        already-converged label through extra Newton steps.
     """
     L = W0.shape[0]
     f0, g0, act0 = obj_grad_fn(W0)
     gnorm0 = jnp.linalg.norm(g0, axis=-1)
     delta0 = gnorm0                           # liblinear: Delta_0 = ||g_0||
-    tol = eps * gnorm0
+    gref = gnorm0 if gnorm_ref is None else gnorm_ref
+    tol = eps * gref
 
     def cond(state):
         _, _, _, _, gnorm, _, live, _, _, k = state
@@ -161,7 +168,7 @@ def tron_solve(obj_grad_fn: Callable[[Array], tuple[Array, Array, Array]],
 
     def body(state):
         W, act, f, g, gnorm, delta, live, n_newton, n_cg, k = state
-        cg_tol = jnp.minimum(0.1, jnp.sqrt(gnorm / (gnorm0 + 1e-38))) * gnorm
+        cg_tol = jnp.minimum(0.1, jnp.sqrt(gnorm / (gref + 1e-38))) * gnorm
         d, cg_iters = _steihaug_cg(lambda V: hvp_fn(V, act),
                                    g, delta, cg_tol, max_cg, live)
 

@@ -6,7 +6,9 @@ LM mode (batched decode against a smoke model):
       --steps 16 --batch 4
 
 XMC mode (the paper's distributed prediction as a service; trains and
-checkpoints a small sparse model first if --ckpt does not exist yet):
+checkpoints a small sparse model first if --ckpt does not exist yet, then
+opens it as a CheckpointHandle — the spec rides in the manifest — and
+overrides just its ServeSpec with the CLI flags):
 
   PYTHONPATH=src python -m repro.launch.serve --xmc --backend bsr \
       --ckpt /tmp/xmc_ckpt --requests 64 --k 5
@@ -24,12 +26,13 @@ from repro.configs.registry import ARCH_IDS, get_config
 
 
 def serve_xmc(args) -> None:
-    from repro.serve import XMCEngine
+    from repro.specs import ServeSpec
     from repro.train.xmc import train_demo_checkpoint
+    from repro.xmc_api import CheckpointHandle
 
     # Shared demo setup (also used by examples/serve_xmc.py and
     # benchmarks/serve_latency.py): dataset + streamed sparse checkpoint
-    # through the label-batch training pipeline, reused if already on disk.
+    # through the spec-driven session, reused if already on disk.
     d, index = train_demo_checkpoint(
         args.ckpt, n_train=600, n_test=max(args.requests * 4, 64),
         n_features=args.features, n_labels=args.labels,
@@ -45,8 +48,11 @@ def serve_xmc(args) -> None:
             f"{ckpt_features} or point --ckpt elsewhere")
 
     t0 = time.time()
-    engine = XMCEngine.from_checkpoint(args.ckpt, backend=args.backend,
-                                       k=args.k)
+    # The manifest carries the full spec; CLI flags override just the
+    # serving half of it for this session.
+    handle = CheckpointHandle.open(args.ckpt)
+    engine = handle.engine(
+        handle.spec.serve.replace(backend=args.backend, k=args.k))
     print(f"[xmc] backend={args.backend} loaded+warmed in "
           f"{time.time() - t0:.1f}s "
           f"(L={engine.backend.n_labels}, k={engine.backend.k})")
@@ -103,9 +109,10 @@ def main() -> None:
     ap.add_argument("--smoke", action="store_true")
     ap.add_argument("--steps", type=int, default=16)
     ap.add_argument("--batch", type=int, default=4)
+    from repro.serve.xmc import available_backends
     ap.add_argument("--backend", default="dense",
-                    choices=("dense", "bsr", "sharded"),
-                    help="XMC mode: predict backend")
+                    choices=available_backends(),
+                    help="XMC mode: predict backend (registry kinds)")
     ap.add_argument("--ckpt", default="/tmp/repro_xmc_ckpt",
                     help="XMC mode: sparse checkpoint directory")
     ap.add_argument("--k", type=int, default=5)

@@ -6,10 +6,14 @@ LM mode:
   PYTHONPATH=src python -m repro.launch.train --arch xlstm-125m --smoke \
       --mesh 1x1 --head softmax
 
-XMC mode (dataset -> streaming label-batch pipeline -> servable sparse
-checkpoint; re-running with the same --out resumes a killed job):
+XMC mode (flags -> XMCSpec -> repro.xmc_api.fit: streaming label-batch
+pipeline -> servable sparse checkpoint with the spec in its manifest;
+re-running with the same --out resumes a killed job, --init-from warm
+starts from a prior checkpoint's weights):
   PYTHONPATH=src python -m repro.launch.train --xmc --labels 512 \
       --label-batch 128 --out /tmp/xmc_ckpt
+  PYTHONPATH=src python -m repro.launch.train --xmc --labels 512 \
+      --delta 0.02 --out /tmp/xmc_d02 --init-from /tmp/xmc_ckpt
   PYTHONPATH=src python -m repro.launch.serve --xmc --ckpt /tmp/xmc_ckpt
 """
 
@@ -31,41 +35,46 @@ from repro.train.trainer import train_loop
 
 
 def train_xmc(args) -> None:
-    """--xmc: train a DiSMEC model through the streaming pipeline."""
-    from repro.checkpoint.io import load_block_sparse
-    from repro.core.dismec import DiSMECConfig
+    """--xmc: one declarative session — args become an XMCSpec, `fit()`
+    streams the checkpoint, the handle quick-evals it."""
     from repro.core.prediction import evaluate, predict_topk
     from repro.data.xmc import make_xmc_dataset
-    from repro.train.xmc import XMCTrainJob
+    from repro.specs import ScheduleSpec, SolverSpec
+    from repro.xmc_api import XMCSpec, fit
 
     if args.out is None:
         args.out = "/tmp/repro_xmc_train_ckpt"
     mesh = None
     if args.mesh:
         d, m = (int(x) for x in args.mesh.split("x"))
-        mesh = jax.make_mesh((d, m), ("data", "model"))
+        mesh = (d, m)
 
     data = make_xmc_dataset(n_train=args.train_n, n_test=args.test_n,
                             n_features=args.features, n_labels=args.labels,
                             seed=args.seed)
-    cfg = DiSMECConfig(C=args.C, delta=args.delta,
-                       label_batch=args.label_batch)
-    # Largest MXU-friendly block height that still divides the label batch
-    # (streamed shards must be row-block-aligned).
-    import math
-    bl = math.gcd(args.label_batch, 128)
-    job = XMCTrainJob(cfg=cfg, mesh=mesh, shard_data=args.shard_data,
-                      balance=args.balance, block_shape=(bl, 128))
+    # fit() normalizes the spec: a label batch that is not a multiple of the
+    # BSR block height is rounded up with a warning (the old CLI shrank the
+    # block to gcd(label_batch, 128) instead, which could degrade streamed
+    # blocks all the way to 1-row tiles).
+    spec = XMCSpec(
+        solver=SolverSpec(C=args.C, delta=args.delta),
+        schedule=ScheduleSpec(label_batch=args.label_batch, mesh=mesh,
+                              shard_data=args.shard_data,
+                              balance=args.balance))
 
     t0 = time.time()
-    res = job.run(jnp.asarray(data.X_train), jnp.asarray(data.Y_train),
-                  args.out, resume=not args.fresh,
-                  on_batch=lambda b, n: print(
-                      f"[xmc] batch {b + 1}/{n} done "
-                      f"({time.time() - t0:.1f}s)"))
+    handle = fit(jnp.asarray(data.X_train), jnp.asarray(data.Y_train),
+                 spec, args.out, resume=not args.fresh,
+                 init_from=args.init_from,
+                 on_batch=lambda b, n: print(
+                     f"[xmc] batch {b + 1}/{n} done "
+                     f"({time.time() - t0:.1f}s)"))
     wall = time.time() - t0
+    res = handle.result
     print(f"[xmc] {len(res.solved)} batches solved, {len(res.skipped)} "
-          f"resumed from manifest in {wall:.1f}s -> {args.out}")
+          f"resumed from manifest in {wall:.1f}s -> {args.out}"
+          + (f" (warm-started from {args.init_from})"
+             if args.init_from else ""))
 
     nnz = sum(s["nnz"] for s in res.manifest["shards"].values())
     total = args.labels * args.features
@@ -75,7 +84,7 @@ def train_xmc(args) -> None:
     # Quick-eval only at smoke scale: to_dense() would rebuild the full
     # (L, D) matrix the streaming pipeline just avoided materializing.
     if args.labels * args.features <= 50_000_000:
-        model, _ = load_block_sparse(args.out)
+        model, _ = handle.model()
         W = model.to_dense()[:args.labels, :args.features]
         _, idx = predict_topk(jnp.asarray(data.X_test), W, 5)
         ev = evaluate(jnp.asarray(data.Y_test), idx)
@@ -117,6 +126,9 @@ def main() -> None:
                     help="also shard instances over the mesh data axis")
     ap.add_argument("--fresh", action="store_true",
                     help="ignore any existing manifest (no resume)")
+    ap.add_argument("--init-from", default=None,
+                    help="warm start: prior sparse checkpoint whose rows "
+                         "seed each batch's TRON as W0")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args()
 

@@ -1,8 +1,10 @@
 """Serving subsystem: two engines over one shared batching layer.
 
   engine   — LM decode serving (prefill + decode_step loops).
-  xmc      — XMC top-k label serving over pluggable predict backends
-             (dense / BSR-Pallas / mesh-sharded).
+  xmc      — XMC top-k label serving over a registry of pluggable predict
+             backends (dense / BSR-Pallas / mesh-sharded built in;
+             `register_backend` adds more). The spec-driven way to build
+             an engine is `repro.xmc_api.CheckpointHandle.engine()`.
   batching — request-side machinery both engines share: ragged padding,
              size-bucketed micro-batch queue, latency accounting.
 """
@@ -10,8 +12,10 @@
 from repro.serve.engine import generate, serve_batch
 from repro.serve.xmc import (BACKENDS, BsrBackend, DenseBackend,
                              PredictBackend, ShardedBackend, XMCEngine,
-                             XMCResult, make_backend)
+                             XMCResult, available_backends, make_backend,
+                             register_backend, unregister_backend)
 
 __all__ = ["generate", "serve_batch", "XMCEngine", "XMCResult",
            "PredictBackend", "DenseBackend", "BsrBackend", "ShardedBackend",
-           "make_backend", "BACKENDS"]
+           "make_backend", "BACKENDS", "register_backend",
+           "unregister_backend", "available_backends"]

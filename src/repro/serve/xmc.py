@@ -1,8 +1,22 @@
 """XMC serving engine: top-k label queries over a pruned DiSMEC model.
 
 This is the paper's distributed prediction (§2.2.1) as a serving subsystem
-rather than an example script. One engine, three interchangeable backends
-behind the `PredictBackend` protocol:
+rather than an example script. In the declarative session API it is the
+back half of the one experiment object: a `ServeSpec` (backend kind, k,
+buckets, Pallas mode) rides inside every checkpoint manifest, and
+
+    from repro.xmc_api import CheckpointHandle
+    engine = CheckpointHandle.open(ckpt_dir).engine()
+
+builds this engine exactly as the spec describes (pass
+`engine(serve_override=ServeSpec(...))` to serve the same weights
+differently). Backends live in a decorator registry —
+`@register_backend("kind")` plugs a new scoring implementation (quantized,
+multi-model, ...) into the engine, `make_backend` is a thin lookup, and
+`ServeSpec(backend="kind")` selects it without touching engine code.
+
+One engine, three built-in interchangeable backends behind the
+`PredictBackend` protocol:
 
   dense    — jitted X @ W.T + lax.top_k on the densified model. Baseline
              and reference semantics.
@@ -45,6 +59,7 @@ from repro.serve.batching import (DEFAULT_BUCKETS, LatencyStats,
 
 Array = jax.Array
 
+#: Built-in backend kinds (the registry below may grow beyond these).
 BACKENDS = ("dense", "bsr", "sharded")
 
 
@@ -121,30 +136,90 @@ class ShardedBackend:
         return self._fn(x)
 
 
+# ---------------------------------------------------------------------------
+# Backend registry: kind -> factory(bsr, k, *, n_labels, mesh, label_axis,
+# interpret) -> PredictBackend. New backends plug in via the decorator; the
+# engine, the CLIs, and ServeSpec all resolve kinds through this one table.
+# ---------------------------------------------------------------------------
+
+_BACKEND_REGISTRY: dict[str, "object"] = {}
+
+
+def register_backend(kind: str):
+    """Decorator: plug a new predict backend into the serving registry.
+
+    The factory receives the canonical model artifact and must return a
+    `PredictBackend`::
+
+        @register_backend("quantized")
+        def _make_quantized(bsr, k, *, n_labels, mesh, label_axis,
+                            interpret):
+            return QuantizedBackend(bsr, k, n_labels=n_labels)
+
+    After registration, `ServeSpec(backend="quantized")`,
+    `XMCEngine.from_checkpoint(..., backend="quantized")` and the serving
+    CLI all reach it — no engine code changes.
+    """
+    def deco(factory):
+        if kind in _BACKEND_REGISTRY:
+            raise ValueError(f"backend {kind!r} already registered")
+        _BACKEND_REGISTRY[kind] = factory
+        return factory
+    return deco
+
+
+def unregister_backend(kind: str) -> None:
+    """Remove a registered backend kind (plugin teardown / tests)."""
+    _BACKEND_REGISTRY.pop(kind, None)
+
+
+def available_backends() -> tuple[str, ...]:
+    """Every registered backend kind (built-ins + plugins), sorted."""
+    return tuple(sorted(_BACKEND_REGISTRY))
+
+
+@register_backend("dense")
+def _make_dense_backend(bsr: BlockSparseModel, k: int, *, n_labels: int,
+                        mesh, label_axis: str, interpret: bool):
+    return DenseBackend(bsr.to_dense()[:n_labels, :bsr.n_features], k,
+                        n_labels=n_labels)
+
+
+@register_backend("bsr")
+def _make_bsr_backend(bsr: BlockSparseModel, k: int, *, n_labels: int,
+                      mesh, label_axis: str, interpret: bool):
+    return BsrBackend(bsr, k, n_labels=n_labels, interpret=interpret)
+
+
+@register_backend("sharded")
+def _make_sharded_backend(bsr: BlockSparseModel, k: int, *, n_labels: int,
+                          mesh, label_axis: str, interpret: bool):
+    if mesh is None:
+        from repro.launch.mesh import make_host_mesh
+        mesh = make_host_mesh(1, jax.device_count())
+    return ShardedBackend(bsr.to_dense()[:n_labels, :bsr.n_features], k,
+                          mesh, label_axis=label_axis, n_labels=n_labels)
+
+
 def make_backend(kind: str, bsr: BlockSparseModel, k: int, *,
                  n_labels: int | None = None, mesh=None,
                  label_axis: str = "model",
                  interpret: bool = True) -> PredictBackend:
-    """Build any backend from the one canonical model artifact (packed BSR).
+    """Build any registered backend from the one canonical model artifact
+    (packed BSR) — a thin lookup over the registry.
 
     dense/sharded densify in memory, sliced back to the true (L, D) so
     block padding never surfaces; bsr serves the packed form directly (its
     kernel pads x internally and its top-k masks padding labels).
     """
+    try:
+        factory = _BACKEND_REGISTRY[kind]
+    except KeyError:
+        raise ValueError(f"unknown backend {kind!r}; expected one of "
+                         f"{available_backends()}") from None
     n_labels = int(n_labels if n_labels is not None else bsr.n_labels)
-    n_features = bsr.n_features
-    if kind == "dense":
-        return DenseBackend(bsr.to_dense()[:n_labels, :n_features], k,
-                            n_labels=n_labels)
-    if kind == "bsr":
-        return BsrBackend(bsr, k, n_labels=n_labels, interpret=interpret)
-    if kind == "sharded":
-        if mesh is None:
-            from repro.launch.mesh import make_host_mesh
-            mesh = make_host_mesh(1, jax.device_count())
-        return ShardedBackend(bsr.to_dense()[:n_labels, :n_features], k,
-                              mesh, label_axis=label_axis, n_labels=n_labels)
-    raise ValueError(f"unknown backend {kind!r}; expected one of {BACKENDS}")
+    return factory(bsr, k, n_labels=n_labels, mesh=mesh,
+                   label_axis=label_axis, interpret=interpret)
 
 
 @dataclasses.dataclass

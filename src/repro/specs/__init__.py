@@ -1,0 +1,18 @@
+"""Sub-specs of the declarative XMC experiment description.
+
+`SolverSpec` (what is solved), `ScheduleSpec` (how the label space is
+walked and sharded), and `ServeSpec` (how the checkpoint is served)
+compose into `repro.xmc_api.XMCSpec` — the one frozen,
+JSON-round-trippable object that drives `fit()` and rides inside every
+BSR checkpoint manifest. This package is a deliberate leaf: importable
+without jax.
+"""
+
+from repro.specs.base import Spec
+from repro.specs.schedule import ScheduleSpec
+from repro.specs.serve import DEFAULT_BUCKETS, ServeSpec
+from repro.specs.solver import (SOLVER_OPS_JNP, SOLVER_OPS_PALLAS,
+                                SolverSpec)
+
+__all__ = ["Spec", "SolverSpec", "ScheduleSpec", "ServeSpec",
+           "DEFAULT_BUCKETS", "SOLVER_OPS_JNP", "SOLVER_OPS_PALLAS"]

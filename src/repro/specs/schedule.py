@@ -1,0 +1,126 @@
+"""ScheduleSpec: how the label space is walked and laid out on hardware.
+
+Layer 1 of Algorithm 1 as data: the label-batch size the streaming
+scheduler loops over, the mesh shape the per-batch solve shards onto,
+frequency balancing, and the double-buffering knobs. None of this changes
+*what* is solved (that is `SolverSpec`), only where and in what order —
+which is why `fingerprint()` drops the knobs that are proven
+solution-neutral (`overlap`, `max_inflight`: checkpoints are
+byte-identical either way) while keeping the ones that change reduction
+order (mesh topology, `shard_data`, `balance`).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import warnings
+from typing import Optional
+
+from repro.specs.base import Spec
+
+
+@dataclasses.dataclass(frozen=True)
+class ScheduleSpec(Spec):
+    """Label-batch scheduling + mesh layout of one training run.
+
+    label_batch  : paper's per-node batch size (layer 1); `normalized()`
+                   rounds it up to a multiple of the BSR block height.
+    block_shape  : (bl, bd) BSR tile of the streamed checkpoint.
+    mesh         : None for single-device, else (data_size, model_size)
+                   axis extents; axes are named by data_axis/label_axis.
+    shard_data   : also shard instances over the data axis (psum'd Newton).
+    balance      : frequency-balanced label->shard dealing per batch.
+    overlap      : double-buffer the scheduler (dispatch batch b+1 before
+                   batch b's result leaves the device).
+    max_inflight : bound on un-drained device results when overlapping.
+    """
+    # The paper's per-node batch is ~1000; the default is rounded to the
+    # BSR block grid so the no-argument spec is already normalized (a
+    # misaligned value would warn and round up on every fit()).
+    label_batch: int = 1024
+    block_shape: tuple[int, int] = (128, 128)
+    mesh: Optional[tuple[int, int]] = None
+    label_axis: str = "model"
+    data_axis: str = "data"
+    shard_data: bool = False
+    balance: bool = False
+    overlap: bool = True
+    max_inflight: int = 2
+
+    def validate(self) -> "ScheduleSpec":
+        if self.label_batch < 1:
+            raise ValueError(f"label_batch must be >= 1, got "
+                             f"{self.label_batch}")
+        if any(b < 1 for b in self.block_shape):
+            raise ValueError(f"block_shape must be positive, got "
+                             f"{self.block_shape}")
+        if self.mesh is not None and any(int(s) < 1 for s in self.mesh):
+            raise ValueError(f"mesh axis sizes must be >= 1, got {self.mesh}")
+        if self.max_inflight < 1:
+            raise ValueError(f"max_inflight must be >= 1, got "
+                             f"{self.max_inflight}")
+        return self
+
+    def normalized(self) -> "ScheduleSpec":
+        """Round `label_batch` up to a multiple of the BSR block height
+        (with a warning) instead of letting the streaming writer raise:
+        streamed shards must be row-block-aligned to append without
+        re-tiling, and a slightly larger batch is always a valid way to
+        satisfy that."""
+        self.validate()
+        bl = self.block_shape[0]
+        if self.label_batch % bl == 0:
+            return self
+        rounded = -(-self.label_batch // bl) * bl
+        warnings.warn(
+            f"label_batch={self.label_batch} is not a multiple of the BSR "
+            f"block height {bl}; rounding up to {rounded} so streamed "
+            "shards stay block-aligned", UserWarning, stacklevel=2)
+        return dataclasses.replace(self, label_batch=rounded)
+
+    def make_mesh(self):
+        """Build the device mesh this spec names (None when unsharded)."""
+        if self.mesh is None:
+            return None
+        from repro.compat import make_mesh            # deferred: no jax here
+        d, m = (int(s) for s in self.mesh)
+        return make_mesh((d, m), (self.data_axis, self.label_axis))
+
+    @classmethod
+    def from_job(cls, job) -> "ScheduleSpec":
+        """Duck-typed: derive the spec from an `XMCTrainJob`'s fields (the
+        adapter the legacy entry points use to write spec-shaped
+        manifests)."""
+        mesh = None
+        if job.mesh is not None:
+            mesh = (int(job.mesh.shape.get(job.data_axis, 1)),
+                    int(job.mesh.shape.get(job.label_axis, 1)))
+        return cls(label_batch=job.cfg.label_batch,
+                   block_shape=tuple(job.block_shape), mesh=mesh,
+                   label_axis=job.label_axis, data_axis=job.data_axis,
+                   shard_data=job.shard_data, balance=job.balance,
+                   overlap=job.overlap, max_inflight=job.max_inflight)
+
+    # Runtime tuning knobs that never change the solved checkpoint (the
+    # double-buffered scheduler is proven byte-identical to the sequential
+    # one): excluded from the resume fingerprint and canonicalized away in
+    # manifest-stored specs, so flipping them never blocks a resume and
+    # never perturbs checkpoint bytes.
+    RUNTIME_FIELDS = ("overlap", "max_inflight")
+
+    def canonical(self) -> "ScheduleSpec":
+        """This schedule with the runtime knobs reset to their defaults —
+        the form that is embedded in checkpoint manifests (checkpoint
+        identity must not depend on how the host loop was buffered)."""
+        defaults = {f.name: f.default for f in dataclasses.fields(self)}
+        return dataclasses.replace(
+            self, **{k: defaults[k] for k in self.RUNTIME_FIELDS})
+
+    def fingerprint(self) -> dict:
+        """Resume-identity subset: everything that can change the solved
+        weights or the shard layout (see RUNTIME_FIELDS for what is
+        excluded, and why)."""
+        d = self.to_dict()
+        for k in self.RUNTIME_FIELDS:
+            d.pop(k)
+        return d

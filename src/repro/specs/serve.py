@@ -1,0 +1,57 @@
+"""ServeSpec: how a trained checkpoint is turned into a serving engine.
+
+The serving half of the one experiment object: which predict backend
+(an entry in `repro.serve.xmc.register_backend`'s registry), top-k depth,
+micro-batch buckets, and Pallas execution mode. Serving choices never
+affect the solved weights, so `ServeSpec` rides in the checkpoint
+manifest's *meta* (recoverable, but changing it never blocks a resume)
+and can be overridden per-session via
+`CheckpointHandle.engine(serve_override=...)`.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+from repro.specs.base import Spec
+
+# Mirrors repro.serve.batching.DEFAULT_BUCKETS — duplicated so the specs
+# package stays importable without jax (tested equal in tests/test_xmc_api).
+DEFAULT_BUCKETS = (1, 2, 4, 8, 16, 32, 64, 128, 256)
+
+
+@dataclasses.dataclass(frozen=True)
+class ServeSpec(Spec):
+    """One serving configuration over a sparse checkpoint.
+
+    backend   : predict-backend registry kind ("dense" / "bsr" / "sharded"
+                built in; plugins register more).
+    k         : top-k labels returned per instance.
+    buckets   : micro-batch bucket sizes (one XLA compile each).
+    interpret : Pallas execution mode for kernel backends — None
+                auto-selects per hardware (compiled Mosaic on TPU,
+                interpreter elsewhere), True/False force it.
+    warmup    : pre-compile every bucket at engine construction.
+    """
+    backend: str = "bsr"
+    k: int = 5
+    buckets: tuple[int, ...] = DEFAULT_BUCKETS
+    interpret: Optional[bool] = None
+    warmup: bool = True
+
+    def validate(self) -> "ServeSpec":
+        if self.k < 1:
+            raise ValueError(f"k must be >= 1, got {self.k}")
+        if not self.buckets or any(b < 1 for b in self.buckets):
+            raise ValueError(f"buckets must be non-empty positive sizes, "
+                             f"got {self.buckets}")
+        if list(self.buckets) != sorted(self.buckets):
+            raise ValueError(f"buckets must be ascending, got {self.buckets}")
+        return self
+
+    def resolved_interpret(self) -> bool:
+        """The Pallas mode that will actually run (None -> hardware
+        default)."""
+        from repro.compat import resolve_interpret    # deferred: no jax here
+        return resolve_interpret(self.interpret)

@@ -1,0 +1,87 @@
+"""SolverSpec: everything that determines the per-label TRON solution.
+
+This is the spec-level face of `repro.core.dismec.DiSMECConfig` — the
+same hyper-parameters, minus the scheduling knob (`label_batch` lives in
+`ScheduleSpec`, where the rest of the layer-1 scheduling sits). `ops`
+names an entry in the solver-ops registry
+(`repro.core.dismec.register_solver_ops`): the factory that builds the
+`obj_grad`/`hvp` pair the TRON loop drives, so alternative kernel stacks
+plug in as new registry entries rather than new config booleans.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+from repro.specs.base import Spec
+
+#: Built-in solver-ops kinds (the registry may grow beyond these).
+SOLVER_OPS_JNP = "jnp"
+SOLVER_OPS_PALLAS = "pallas"
+
+
+@dataclasses.dataclass(frozen=True)
+class SolverSpec(Spec):
+    """Hyper-parameters of one per-label binary solve (paper Eq. 2.2).
+
+    C / delta / eps / max_newton / max_cg are Algorithm 1's knobs;
+    `ops` picks the obj-grad/Hv implementation from the solver-ops
+    registry ("jnp" decomposed lax ops, "pallas" the fused hinge + HVP
+    kernels); `pallas_interpret` forces interpreter (True) or compiled
+    Mosaic (False) for the Pallas ops, None auto-selecting per backend.
+    """
+    C: float = 1.0
+    delta: float = 0.01
+    eps: float = 0.01
+    max_newton: int = 50
+    max_cg: int = 40
+    ops: str = SOLVER_OPS_JNP
+    pallas_interpret: Optional[bool] = None
+
+    def validate(self) -> "SolverSpec":
+        if self.C <= 0.0:
+            raise ValueError(f"C must be positive, got {self.C}")
+        if self.delta < 0.0:
+            raise ValueError(f"delta must be >= 0, got {self.delta}")
+        if self.eps <= 0.0:
+            raise ValueError(f"eps must be positive, got {self.eps}")
+        if self.max_newton < 1 or self.max_cg < 1:
+            raise ValueError("max_newton and max_cg must be >= 1")
+        return self
+
+    # -- adapters to/from the core config --------------------------------
+
+    @classmethod
+    def from_config(cls, cfg) -> "SolverSpec":
+        """Duck-typed: reads the `DiSMECConfig` attribute names."""
+        ops = getattr(cfg, "ops", None) or (
+            SOLVER_OPS_PALLAS if cfg.use_pallas else SOLVER_OPS_JNP)
+        return cls(C=cfg.C, delta=cfg.delta, eps=cfg.eps,
+                   max_newton=cfg.max_newton, max_cg=cfg.max_cg,
+                   ops=ops, pallas_interpret=cfg.pallas_interpret)
+
+    def to_config(self, *, label_batch: int):
+        """Build the `DiSMECConfig` this spec describes (deferred import:
+        specs stay importable without jax)."""
+        from repro.core.dismec import DiSMECConfig
+        return DiSMECConfig(
+            C=self.C, delta=self.delta, eps=self.eps,
+            max_newton=self.max_newton, max_cg=self.max_cg,
+            label_batch=label_batch,
+            use_pallas=self.ops == SOLVER_OPS_PALLAS,
+            pallas_interpret=self.pallas_interpret,
+            ops=self.ops)
+
+    def fingerprint(self) -> dict:
+        """The manifest-resume identity of this solver: `to_dict` with
+        `pallas_interpret` resolved to the mode that actually runs, so
+        shards solved under interpret and compiled Mosaic (different fp
+        accumulation) can never be stitched into one checkpoint."""
+        d = self.to_dict()
+        if self.ops == SOLVER_OPS_JNP:
+            d["pallas_interpret"] = None
+        else:
+            from repro.compat import resolve_interpret
+            d["pallas_interpret"] = resolve_interpret(self.pallas_interpret)
+        return d

@@ -1,4 +1,19 @@
-"""Streaming label-batch training pipeline for DiSMEC (Algorithm 1 at scale).
+"""Streaming label-batch training engine for DiSMEC (Algorithm 1 at scale).
+
+This module is the *engine* under the declarative session API: the public
+way to train is
+
+    from repro.xmc_api import XMCSpec, fit
+    handle = fit(X, Y, XMCSpec(...), out_dir)        # -> CheckpointHandle
+    engine = handle.engine()                          # -> serving XMCEngine
+
+`fit()` builds an `XMCTrainJob` from the spec's `SolverSpec`/`ScheduleSpec`
+and runs it here; the spec is embedded in the checkpoint manifest (both as
+the resume fingerprint and as recoverable metadata), so the checkpoint
+alone reproduces the experiment. `init_from=` warm-starts every batch's
+TRON from a prior checkpoint's rows mapped back to label ranges.
+`train_streaming` below is the deprecated pre-spec shim over the same
+engine; `core.dismec.train/train_sharded` are the in-memory adapters.
 
 The paper's model never exists dense — 870 GB of OvR weights become 3 GB of
 (value, index) pairs via Delta-pruning (§2.2) — and this pipeline makes the
@@ -63,14 +78,33 @@ import jax.numpy as jnp
 import numpy as np
 from jax.sharding import Mesh
 
-from repro.checkpoint.io import (BlockSparseWriter, has_block_sparse_checkpoint,
-                                 load_block_sparse_meta)
-from repro.compat import resolve_interpret
+from repro.checkpoint.io import (BSR_ARRAYS, BlockSparseWriter,
+                                 has_block_sparse_checkpoint,
+                                 label_range_reader, load_block_sparse_meta)
 from repro.core.dismec import (DiSMECConfig, DiSMECModel, balance_permutation,
                                make_batch_solver)
 from repro.core.pruning import to_block_sparse
+from repro.specs import ScheduleSpec, ServeSpec, SolverSpec
 
 Array = jax.Array
+
+
+def _init_fingerprint(init_from: str) -> dict:
+    """Content identity of a warm-start source. The solved weights depend
+    on W0 (truncated Newton stops early), so a resumed warm run must not
+    stitch shards seeded from a *different* prior model. A streamed source
+    carries its own solver+data fingerprint in its manifest; a one-shot
+    artifact has none, so its packed values are digested directly."""
+    import os
+    index = load_block_sparse_meta(init_from)
+    if index.get("layout") == "stream":
+        return {"solver": index["manifest"].get("solver"),
+                "n_blocks": index["n_blocks"]}
+    blocks = np.load(os.path.join(init_from, BSR_ARRAYS))["blocks"]
+    return {"shape": list(index["shape"]), "n_blocks": index["n_blocks"],
+            "nnz": int(np.count_nonzero(blocks)),
+            "sum": float(blocks.sum()),
+            "abs_sum": float(np.abs(blocks).sum())}
 
 
 @dataclasses.dataclass
@@ -118,10 +152,17 @@ class XMCTrainJob:
         lb = min(self.cfg.label_batch, n_labels)
         return [(s, min(s + lb, n_labels)) for s in range(0, n_labels, lb)]
 
+    def specs(self) -> tuple[SolverSpec, ScheduleSpec]:
+        """This job as (SolverSpec, ScheduleSpec) — the adapter that lets
+        every entry point (spec-driven or legacy) write one manifest
+        format."""
+        return SolverSpec.from_config(self.cfg), ScheduleSpec.from_job(self)
+
     def run(self, X: Array, Y: Array, out_dir: Optional[str] = None, *,
             resume: bool = True, materialize: Optional[bool] = None,
             max_batches: Optional[int] = None, meta: Optional[dict] = None,
             on_batch: Optional[Callable[[int, int], None]] = None,
+            init_from: Optional[str] = None,
             ) -> XMCTrainResult:
         """Train X (N, D), Y (N, L) into `out_dir` (streamed multi-shard
         checkpoint) and/or an in-memory model.
@@ -139,6 +180,13 @@ class XMCTrainJob:
                        thread, still in batch order and still after that
                        batch's shard write; an exception it raises aborts
                        the run like a write failure would.
+        init_from    : warm start — a prior block-sparse checkpoint whose
+                       rows seed each batch's TRON as W0 (label ranges are
+                       read shard-by-shard, never the full matrix; labels
+                       past the prior model's L cold-start at zero). The
+                       stopping tolerance stays anchored at the cold-start
+                       gradient, so a converged same-spec source is a fixed
+                       point: the solver accepts it unchanged.
         """
         Yn = np.asarray(Y)
         N, L = Yn.shape
@@ -152,7 +200,20 @@ class XMCTrainJob:
         bl, bd = self.block_shape
         if materialize is None:
             materialize = out_dir is None
+        init_read = None
+        if init_from is not None:
+            init_index = load_block_sparse_meta(init_from)
+            init_D = init_index["orig_shape"][1]
+            if init_D != D:
+                raise ValueError(
+                    f"init_from checkpoint has feature dim {init_D}, "
+                    f"dataset has {D}; warm start needs matching features")
+            # Built once: a one-shot source is densified a single time and
+            # sliced per batch; a streamed source reads only the shards
+            # each batch's range overlaps.
+            init_read = label_range_reader(init_from)
 
+        solver_spec, schedule_spec = self.specs()
         writer = None
         done: set[int] = set()
         if out_dir is not None:
@@ -160,48 +221,42 @@ class XMCTrainJob:
                 raise ValueError(
                     f"label_batch={lb} must be a multiple of the BSR block "
                     f"height {bl} to stream batches without re-tiling "
-                    "(round label_batch up, or shrink block_shape)")
-            # The solved weights depend on every solver hyperparameter and on
-            # the dataset: record them so a resumed run cannot silently mix
-            # shards trained under different settings into one checkpoint.
-            solver_id = {"C": self.cfg.C, "delta": self.cfg.delta,
-                         "eps": self.cfg.eps,
-                         "max_newton": self.cfg.max_newton,
-                         "max_cg": self.cfg.max_cg,
-                         "use_pallas": self.cfg.use_pallas,
-                         # Interpret vs compiled Mosaic may differ in fp
-                         # accumulation details, so shards from the two
-                         # modes must not be stitched together. Resolved
-                         # (None -> backend default) so the fingerprint is
-                         # the mode that actually ran.
-                         "pallas_interpret": (
-                             resolve_interpret(self.cfg.pallas_interpret)
-                             if self.cfg.use_pallas else None),
-                         # Mesh topology and sharding mode change reduction
-                         # order (psum vs local), so shards from different
-                         # layouts must not mix either.
-                         "mesh": (None if self.mesh is None else
-                                  {a: int(s) for a, s in
-                                   zip(self.mesh.axis_names,
-                                       self.mesh.devices.shape)}),
-                         "shard_data": self.shard_data,
-                         "balance": self.balance,
-                         "data": [int(N), int(D),
-                                  float(np.asarray(X).sum()),
-                                  int(Yn.sum())]}
+                    "(round label_batch up, or shrink block_shape — the "
+                    "spec path, repro.xmc_api.fit, normalizes this "
+                    "automatically)")
+            # The solved weights depend on the full solver/schedule spec,
+            # the dataset, and any warm-start source: record them so a
+            # resumed run cannot silently mix shards trained under
+            # different settings into one checkpoint.
+            solver_id = {
+                "spec": {"solver": solver_spec.fingerprint(),
+                         "schedule": schedule_spec.fingerprint()},
+                "init": (None if init_from is None
+                         else _init_fingerprint(init_from)),
+                "data": [int(N), int(D), float(np.asarray(X).sum()),
+                         int(Yn.sum())]}
+            # Full recoverable experiment description (adds the knobs the
+            # fingerprint deliberately drops); fit() overrides this with
+            # the user's spec, serve section included.
+            meta_full = {"n_labels": L, "n_features": D,
+                         "delta": self.cfg.delta, **(meta or {})}
+            meta_full.setdefault("xmc_spec", {
+                "solver": solver_spec.to_dict(),
+                "schedule": schedule_spec.canonical().to_dict(),
+                "serve": ServeSpec().to_dict()})
             writer = BlockSparseWriter(
                 out_dir, n_labels=L, n_features=D,
                 block_shape=self.block_shape, label_batch=lb,
                 n_batches=len(batches), resume=resume, solver=solver_id,
-                meta={"n_labels": L, "n_features": D,
-                      "delta": self.cfg.delta, **(meta or {})})
+                meta=meta_full)
             done = writer.done_batches
 
         X_dev = jnp.asarray(X, jnp.float32)
         solver = make_batch_solver(X_dev, self.cfg, self.mesh,
                                    label_axis=self.label_axis,
                                    data_axis=self.data_axis,
-                                   shard_data=self.shard_data)
+                                   shard_data=self.shard_data,
+                                   warm=init_from is not None)
 
         host_blocks: dict[int, np.ndarray] = {}
         solved: list[int] = []
@@ -215,10 +270,19 @@ class XMCTrainJob:
             if self.balance and self.mesh is not None and rows > n_shards:
                 perm = balance_permutation(Yn[:, start:stop], n_shards)
                 signs = signs[perm]
+            W0 = None
+            if init_read is not None:
+                W0r = init_read(start, stop)
+                if perm is not None:       # W0 rows follow the shard dealing
+                    W0r = W0r[perm]
+                if rows < lb_solve:
+                    W0r = np.concatenate(
+                        [W0r, np.zeros((lb_solve - rows, D), np.float32)])
+                W0 = jnp.asarray(W0r)
             if rows < lb_solve:                           # shape-constant pad
                 signs = np.concatenate(
                     [signs, -np.ones((lb_solve - rows, N), np.float32)])
-            return b, start, rows, perm, solver(jnp.asarray(signs))[:rows]
+            return b, start, rows, perm, solver(jnp.asarray(signs), W0)[:rows]
 
         def drain(item) -> None:
             """Device->host transfer + BSR pack + shard write of one solved
@@ -310,10 +374,25 @@ class XMCTrainJob:
 
 def train_streaming(X: Array, Y: Array, cfg: DiSMECConfig, out_dir: str,
                     **job_kwargs) -> XMCTrainResult:
-    """Convenience: stream-train into a servable multi-shard checkpoint."""
+    """DEPRECATED shim: stream-train into a servable multi-shard checkpoint.
+
+    Use the declarative session API instead::
+
+        from repro.xmc_api import XMCSpec, fit
+        handle = fit(X, Y, XMCSpec(...), out_dir)
+
+    This shim drives the exact same engine (`XMCTrainJob.run`), so the
+    checkpoints it writes are bit-identical to `fit()`'s for an equivalent
+    spec (tested in tests/test_xmc_api.py).
+    """
+    import warnings
+    warnings.warn(
+        "train_streaming is deprecated; build an XMCSpec and call "
+        "repro.xmc_api.fit(X, Y, spec, out_dir) instead",
+        DeprecationWarning, stacklevel=2)
     run_kwargs = {k: job_kwargs.pop(k)
                   for k in ("resume", "materialize", "max_batches", "meta",
-                            "on_batch") if k in job_kwargs}
+                            "on_batch", "init_from") if k in job_kwargs}
     return XMCTrainJob(cfg=cfg, **job_kwargs).run(X, Y, out_dir, **run_kwargs)
 
 
@@ -340,9 +419,11 @@ def train_demo_checkpoint(ckpt_dir: str, *, n_train: int = 800,
         if verbose:
             print(f"[xmc] no servable checkpoint at {ckpt_dir}; streaming a "
                   f"{n_labels}-label model in batches of {label_batch}...")
-        cfg = DiSMECConfig(C=C, delta=delta, label_batch=label_batch)
-        XMCTrainJob(cfg=cfg).run(
-            jnp.asarray(data.X_train), jnp.asarray(data.Y_train), ckpt_dir)
+        from repro.xmc_api import XMCSpec, fit            # deferred: no cycle
+        spec = XMCSpec(solver=SolverSpec(C=C, delta=delta),
+                       schedule=ScheduleSpec(label_batch=label_batch))
+        fit(jnp.asarray(data.X_train), jnp.asarray(data.Y_train), spec,
+            ckpt_dir)
         if verbose:
             index = load_block_sparse_meta(ckpt_dir)
             print(f"[xmc] saved sparse checkpoint: {index['n_blocks']} "

@@ -1,0 +1,242 @@
+"""One declarative XMC API: spec-driven fit -> checkpoint -> serve sessions.
+
+DiSMEC's pipeline is one conceptual object — double-parallel OvR training
+with capacity control, a sparse model artifact, and fast sparse prediction
+— and this module gives it one public surface:
+
+    from repro.specs import ScheduleSpec, ServeSpec, SolverSpec
+    from repro.xmc_api import XMCSpec, CheckpointHandle, fit
+
+    spec = XMCSpec(solver=SolverSpec(C=1.0, delta=0.01),
+                   schedule=ScheduleSpec(label_batch=256),
+                   serve=ServeSpec(backend="bsr", k=5))
+    handle = fit(X, Y, spec, "/ckpts/wiki31k")     # train -> sparse ckpt
+    engine = handle.engine()                       # serve as the spec says
+    results = engine.serve(requests)
+
+`XMCSpec` is frozen and JSON-round-trippable; `fit` embeds it in the BSR
+checkpoint manifest (the solver/schedule halves as the resume fingerprint,
+the whole spec as recoverable metadata), so
+
+    handle = CheckpointHandle.open("/ckpts/wiki31k")
+    assert handle.spec == spec                     # the manifest IS the spec
+
+re-opens a checkpoint with its full experiment description — no side
+channel. Warm starting is a spec-level operation too::
+
+    fit(X, Y, spec.replace(solver=spec.solver.replace(delta=0.02)),
+        "/ckpts/wiki31k-d02", init_from="/ckpts/wiki31k")
+
+seeds every label batch's TRON from the prior checkpoint's rows (shards
+mapped back to label ranges, never the full matrix). Solver-ops and
+predict backends resolve through decorator registries
+(`repro.core.dismec.register_solver_ops`,
+`repro.serve.xmc.register_backend`), so new kernel stacks and new serving
+backends plug in without touching this module.
+
+`core.dismec.train/train_sharded`, `train.xmc.train_streaming`, both CLIs
+(`launch/train.py --xmc`, `launch/serve.py --xmc`) and the benchmarks are
+thin adapters over this one session path.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Optional
+
+import jax
+
+from repro.specs import ScheduleSpec, ServeSpec, SolverSpec
+from repro.specs.base import Spec
+
+Array = jax.Array
+
+
+@dataclasses.dataclass(frozen=True)
+class XMCSpec(Spec):
+    """The whole experiment as one frozen, serializable value.
+
+    solver   — what is solved per label (C, Delta, eps, ops kind).
+    schedule — how the label space is walked and sharded (label_batch,
+               mesh, balancing, double-buffering).
+    serve    — how the resulting checkpoint is served (backend kind, k,
+               buckets, Pallas mode).
+    """
+    solver: SolverSpec = SolverSpec()
+    schedule: ScheduleSpec = ScheduleSpec()
+    serve: ServeSpec = ServeSpec()
+
+    def validate(self) -> "XMCSpec":
+        self.solver.validate()
+        self.schedule.validate()
+        self.serve.validate()
+        return self
+
+    def normalized(self) -> "XMCSpec":
+        """Validated spec with the schedule's label_batch rounded up to a
+        BSR-block multiple (warns when it changes)."""
+        self.validate()
+        schedule = self.schedule.normalized()
+        return self if schedule is self.schedule else dataclasses.replace(
+            self, schedule=schedule)
+
+    def canonical(self) -> "XMCSpec":
+        """The manifest-stored form: runtime scheduling knobs (overlap /
+        max_inflight) reset to defaults, so checkpoint bytes never depend
+        on host-loop buffering. `CheckpointHandle.open` recovers this
+        form."""
+        return dataclasses.replace(self, schedule=self.schedule.canonical())
+
+
+def spec_from_config(cfg, *, label_axis: str = "model",
+                     data_axis: str = "data", shard_data: bool = False,
+                     balance: bool = False,
+                     serve: Optional[ServeSpec] = None) -> XMCSpec:
+    """Adapter: a legacy `DiSMECConfig` (+ sharding kwargs) as an XMCSpec."""
+    return XMCSpec(
+        solver=SolverSpec.from_config(cfg),
+        schedule=ScheduleSpec(label_batch=cfg.label_batch,
+                              label_axis=label_axis, data_axis=data_axis,
+                              shard_data=shard_data, balance=balance),
+        serve=serve or ServeSpec())
+
+
+def job_from_spec(spec: XMCSpec, *, mesh=None):
+    """Build the streaming training engine (`XMCTrainJob`) a spec names.
+
+    `mesh` overrides the schedule's declarative mesh with an existing
+    device mesh (the legacy `train_sharded` path); otherwise the mesh is
+    constructed from `spec.schedule.mesh`.
+    """
+    from repro.train.xmc import XMCTrainJob           # deferred: no cycle
+    sch = spec.schedule
+    return XMCTrainJob(
+        cfg=spec.solver.to_config(label_batch=sch.label_batch),
+        mesh=mesh if mesh is not None else sch.make_mesh(),
+        label_axis=sch.label_axis, data_axis=sch.data_axis,
+        shard_data=sch.shard_data, balance=sch.balance,
+        block_shape=tuple(sch.block_shape), overlap=sch.overlap,
+        max_inflight=sch.max_inflight)
+
+
+def fit(X: Array, Y: Array, spec: XMCSpec, out_dir: str, *,
+        init_from: Optional[str] = None, resume: bool = True,
+        max_batches: Optional[int] = None, meta: Optional[dict] = None,
+        on_batch: Optional[Callable[[int, int], None]] = None,
+        ) -> "CheckpointHandle":
+    """Train X (N, D), Y (N, L) under `spec` into a servable sparse
+    checkpoint at `out_dir`; returns the handle to serve or re-open it.
+
+    The spec is normalized first (label_batch rounded up to a BSR-block
+    multiple with a warning — never a hard failure), embedded in the
+    manifest, and enforced on resume: a second `fit` into the same
+    directory with a different solver/schedule spec or different data
+    raises instead of stitching incompatible shards.
+
+    init_from : prior checkpoint directory — warm-start every label
+                batch's TRON from its rows (the ROADMAP warm-start: e.g.
+                re-train with a new Delta or C from existing weights).
+                A converged checkpoint of the same spec is a fixed point:
+                the warm fit reproduces it bit-identically.
+    resume    : skip batches already in out_dir's manifest (False starts
+                the checkpoint fresh).
+    max_batches / on_batch : preemption bound and per-batch callback,
+                passed through to the engine (`XMCTrainJob.run`).
+    """
+    spec = spec.normalized()
+    job = job_from_spec(spec)
+    res = job.run(X, Y, out_dir, resume=resume, init_from=init_from,
+                  max_batches=max_batches, on_batch=on_batch,
+                  meta={**(meta or {}),
+                        "xmc_spec": spec.canonical().to_dict()})
+    return CheckpointHandle(directory=out_dir, spec=spec, result=res)
+
+
+def _spec_from_index(index: dict) -> XMCSpec:
+    """Recover the spec from a checkpoint's index/manifest: the embedded
+    `xmc_spec` when present, else a best-effort rebuild from the legacy
+    fingerprint keys (pre-spec checkpoints), else defaults."""
+    meta = index.get("meta", {})
+    if "xmc_spec" in meta:
+        return XMCSpec.from_dict(meta["xmc_spec"])
+    manifest = index.get("manifest")
+    solver = dict(manifest.get("solver", {})) if manifest else {}
+    if "spec" in solver:                     # spec fingerprint, no meta copy
+        return XMCSpec(
+            solver=SolverSpec.from_dict(solver["spec"]["solver"]),
+            schedule=ScheduleSpec.from_dict(solver["spec"]["schedule"]))
+    solver_kw = {k: solver[k] for k in
+                 ("C", "delta", "eps", "max_newton", "max_cg")
+                 if k in solver}
+    if solver.get("use_pallas"):
+        solver_kw["ops"] = "pallas"
+        solver_kw["pallas_interpret"] = solver.get("pallas_interpret")
+    mesh = solver.get("mesh")
+    schedule_kw: dict = {}
+    if manifest is not None:
+        schedule_kw["label_batch"] = manifest["label_batch"]
+        schedule_kw["block_shape"] = tuple(manifest["block_shape"])
+    if mesh:
+        schedule_kw["mesh"] = (int(mesh.get("data", 1)),
+                               int(mesh.get("model", 1)))
+    for k in ("shard_data", "balance"):
+        if k in solver:
+            schedule_kw[k] = solver[k]
+    return XMCSpec(solver=SolverSpec(**solver_kw),
+                   schedule=ScheduleSpec(**schedule_kw))
+
+
+@dataclasses.dataclass
+class CheckpointHandle:
+    """A servable sparse checkpoint plus the spec that produced it.
+
+    Returned by `fit`; re-created from disk alone with `open` (the spec
+    travels inside the manifest). `engine()` turns it into a serving
+    `XMCEngine` exactly as `spec.serve` describes; `model()` loads the
+    packed BSR artifact for direct use.
+    """
+    directory: str
+    spec: XMCSpec
+    result: Optional[object] = None          # XMCTrainResult when from fit()
+
+    @classmethod
+    def open(cls, directory: str) -> "CheckpointHandle":
+        """Re-open a checkpoint, recovering its spec from the manifest."""
+        from repro.checkpoint.io import load_block_sparse_meta
+        return cls(directory=directory,
+                   spec=_spec_from_index(load_block_sparse_meta(directory)))
+
+    # -- introspection ----------------------------------------------------
+
+    @property
+    def complete(self) -> bool:
+        from repro.checkpoint.io import has_block_sparse_checkpoint
+        return has_block_sparse_checkpoint(self.directory)
+
+    def index(self) -> dict:
+        """Pre-flight metadata (shapes, block counts, user meta) without
+        touching the arrays."""
+        from repro.checkpoint.io import load_block_sparse_meta
+        return load_block_sparse_meta(self.directory)
+
+    def model(self):
+        """Load the packed `BlockSparseModel` (+ meta dict)."""
+        from repro.checkpoint.io import load_block_sparse
+        return load_block_sparse(self.directory)
+
+    # -- serving ----------------------------------------------------------
+
+    def engine(self, serve_override: Optional[ServeSpec] = None, *,
+               mesh=None):
+        """Build the serving engine this checkpoint's spec describes.
+
+        serve_override replaces the whole `ServeSpec` for this session
+        (the weights are shared; only the serving plan changes); `mesh`
+        supplies a device mesh to mesh-sharded backends.
+        """
+        from repro.serve.xmc import XMCEngine
+        serve = (serve_override or self.spec.serve).validate()
+        return XMCEngine.from_checkpoint(
+            self.directory, backend=serve.backend, k=serve.k,
+            mesh=mesh, interpret=serve.resolved_interpret(),
+            buckets=tuple(serve.buckets), warmup=serve.warmup)

@@ -1,0 +1,343 @@
+"""The declarative XMC API (repro.xmc_api + repro.specs): spec round-trips,
+the fit -> checkpoint -> serve session, manifest-embedded spec recovery,
+warm-start semantics, and the solver-ops / backend registries."""
+
+import json
+import os
+
+import numpy as np
+import pytest
+
+import jax.numpy as jnp
+
+from repro.checkpoint.io import (BSR_MANIFEST, load_block_sparse,
+                                 load_label_range_dense)
+from repro.core.dismec import (DiSMECConfig, available_solver_ops,
+                               register_solver_ops, unregister_solver_ops)
+from repro.core import losses
+from repro.serve import XMCEngine
+from repro.serve.xmc import (available_backends, make_backend,
+                             register_backend, unregister_backend)
+from repro.specs import (DEFAULT_BUCKETS, ScheduleSpec, ServeSpec,
+                         SolverSpec)
+from repro.specs.serve import DEFAULT_BUCKETS as SPEC_BUCKETS
+from repro.train.xmc import train_streaming
+from repro.xmc_api import CheckpointHandle, XMCSpec, fit
+
+L, D = 48, 512
+CFG_EPS = 1e-2
+SPEC = XMCSpec(solver=SolverSpec(eps=CFG_EPS),
+               schedule=ScheduleSpec(label_batch=16, block_shape=(16, 16)))
+
+
+@pytest.fixture(scope="module")
+def xmc_data():
+    from repro.data.xmc import make_xmc_dataset
+    d = make_xmc_dataset(n_train=150, n_test=40, n_features=D, n_labels=L,
+                         seed=0)
+    return (jnp.asarray(d.X_train), jnp.asarray(d.Y_train),
+            np.asarray(d.X_test, np.float32))
+
+
+@pytest.fixture(scope="module")
+def cold_ckpt(xmc_data, tmp_path_factory):
+    """One spec-fit checkpoint shared by the read-only tests."""
+    X, Y, _ = xmc_data
+    out = str(tmp_path_factory.mktemp("xmc_api_cold"))
+    handle = fit(X, Y, SPEC, out)
+    assert handle.result.complete
+    return out, handle
+
+
+# -- spec serialization ------------------------------------------------------
+
+def test_spec_json_roundtrip_exact():
+    spec = XMCSpec(
+        solver=SolverSpec(C=4.0, delta=0.002, eps=1e-3, max_newton=7,
+                          max_cg=9, ops="pallas", pallas_interpret=True),
+        schedule=ScheduleSpec(label_batch=96, block_shape=(32, 64),
+                              mesh=(2, 4), label_axis="m", data_axis="d",
+                              shard_data=True, balance=True, overlap=False,
+                              max_inflight=5),
+        serve=ServeSpec(backend="sharded", k=7, buckets=(2, 8, 32),
+                        interpret=False, warmup=False))
+    again = XMCSpec.from_json(spec.to_json())
+    assert again == spec
+    # Tuples must come back as tuples (frozen hash/eq correctness).
+    assert isinstance(again.schedule.block_shape, tuple)
+    assert isinstance(again.schedule.mesh, tuple)
+    assert isinstance(again.serve.buckets, tuple)
+    # Sub-specs round-trip standalone too.
+    assert SolverSpec.from_json(spec.solver.to_json()) == spec.solver
+    assert ScheduleSpec.from_dict(spec.schedule.to_dict()) == spec.schedule
+    assert ServeSpec.from_dict(spec.serve.to_dict()) == spec.serve
+
+
+def test_spec_rejects_unknown_fields():
+    with pytest.raises(ValueError, match="does not know field"):
+        SolverSpec.from_dict({"C": 1.0, "capacity": 3})
+    with pytest.raises(ValueError, match="does not know field"):
+        XMCSpec.from_dict({"solver": {}, "sched": {}})
+
+
+def test_spec_validation():
+    with pytest.raises(ValueError, match="C must be positive"):
+        SolverSpec(C=-1.0).validate()
+    with pytest.raises(ValueError, match="label_batch"):
+        ScheduleSpec(label_batch=0).validate()
+    with pytest.raises(ValueError, match="ascending"):
+        ServeSpec(buckets=(8, 4)).validate()
+    with pytest.raises(ValueError, match="k must be"):
+        ServeSpec(k=0).validate()
+
+
+def test_spec_buckets_mirror_serving_defaults():
+    from repro.serve.batching import DEFAULT_BUCKETS as REAL
+    assert tuple(SPEC_BUCKETS) == tuple(REAL) == tuple(DEFAULT_BUCKETS)
+
+
+def test_schedule_normalization_rounds_up_with_warning():
+    sch = ScheduleSpec(label_batch=20, block_shape=(16, 16))
+    with pytest.warns(UserWarning, match="rounding up to 32"):
+        n = sch.normalized()
+    assert n.label_batch == 32 and n.block_shape == (16, 16)
+    aligned = ScheduleSpec(label_batch=32, block_shape=(16, 16))
+    assert aligned.normalized() is aligned               # no-op when aligned
+
+
+# -- the session path --------------------------------------------------------
+
+def test_fit_equivalent_to_legacy_stream(xmc_data, cold_ckpt, tmp_path):
+    """Acceptance: fit() + CheckpointHandle.engine() produce a checkpoint
+    and served top-k bit-identical to the train_streaming +
+    XMCEngine.from_checkpoint flow (which is kept as a deprecation shim)."""
+    X, Y, Xte = xmc_data
+    cold_dir, handle = cold_ckpt
+    legacy_dir = str(tmp_path / "legacy")
+    with pytest.deprecated_call():
+        res = train_streaming(X, Y, DiSMECConfig(label_batch=16, eps=CFG_EPS),
+                              legacy_dir, block_shape=(16, 16))
+    assert res.complete
+    with open(os.path.join(cold_dir, BSR_MANIFEST)) as f:
+        m_fit = json.load(f)
+    with open(os.path.join(legacy_dir, BSR_MANIFEST)) as f:
+        m_legacy = json.load(f)
+    assert m_fit == m_legacy                     # spec fingerprint and all
+    np.testing.assert_array_equal(
+        np.asarray(load_block_sparse(cold_dir)[0].to_dense()),
+        np.asarray(load_block_sparse(legacy_dir)[0].to_dense()))
+
+    eng_spec = handle.engine(ServeSpec(backend="bsr", k=5, warmup=False))
+    eng_legacy = XMCEngine.from_checkpoint(legacy_dir, backend="bsr", k=5,
+                                           warmup=False)
+    r_spec = eng_spec.serve([Xte[:24]])[0]
+    r_legacy = eng_legacy.serve([Xte[:24]])[0]
+    np.testing.assert_array_equal(r_spec.labels, r_legacy.labels)
+    np.testing.assert_array_equal(r_spec.scores, r_legacy.scores)
+
+
+def test_spec_recovered_from_manifest_alone(xmc_data, tmp_path):
+    """The full spec (serve section included) must be recoverable from the
+    checkpoint directory with no side channel."""
+    X, Y, _ = xmc_data
+    spec = XMCSpec(
+        solver=SolverSpec(C=2.0, delta=0.02, eps=CFG_EPS, max_newton=30),
+        schedule=ScheduleSpec(label_batch=16, block_shape=(16, 16),
+                              balance=False, overlap=False),
+        serve=ServeSpec(backend="dense", k=3, buckets=(4, 16),
+                        warmup=False))
+    out = str(tmp_path / "ck")
+    fit(X, Y, spec, out)
+    reopened = CheckpointHandle.open(out)
+    # Recovery returns the canonical form: runtime buffering knobs
+    # (overlap/max_inflight) are not checkpoint identity and reset to
+    # defaults; everything else round-trips exactly.
+    assert reopened.spec == spec.canonical()
+    assert reopened.spec.solver == spec.solver
+    assert reopened.spec.serve == spec.serve
+    assert reopened.spec.schedule.overlap is True        # canonicalized
+    assert reopened.complete
+    assert reopened.index()["meta"]["xmc_spec"] == spec.canonical().to_dict()
+    # And the recovered serve plan actually drives the engine.
+    eng = reopened.engine()
+    assert eng.backend.name == "dense" and eng.backend.k == 3
+    assert tuple(eng.queue.buckets) == (4, 16)
+
+
+def test_fit_resume_and_mismatch(xmc_data, tmp_path):
+    X, Y, _ = xmc_data
+    out = str(tmp_path / "ck")
+    h1 = fit(X, Y, SPEC, out, max_batches=1)
+    assert not h1.result.complete and h1.result.solved == [0]
+    h2 = fit(X, Y, SPEC, out)                        # resume the rest
+    assert h2.result.complete and h2.result.skipped == [0]
+    other = SPEC.replace(solver=SPEC.solver.replace(C=5.0))
+    with pytest.raises(ValueError, match="manifest disagrees"):
+        fit(X, Y, other, out)
+    # Flipping the solution-neutral double-buffering knobs must NOT block.
+    h3 = fit(X, Y, SPEC.replace(
+        schedule=SPEC.schedule.replace(overlap=False, max_inflight=1)), out)
+    assert h3.result.complete and len(h3.result.skipped) == 3
+
+
+def test_fit_normalizes_misaligned_label_batch(xmc_data, tmp_path):
+    """Satellite: fit() rounds a misaligned label_batch up with a warning
+    where XMCTrainJob.run (the raw engine) still raises."""
+    X, Y, _ = xmc_data
+    spec = XMCSpec(solver=SolverSpec(eps=CFG_EPS),
+                   schedule=ScheduleSpec(label_batch=20,
+                                         block_shape=(16, 16)))
+    out = str(tmp_path / "ck")
+    with pytest.warns(UserWarning, match="rounding up to 32"):
+        handle = fit(X, Y, spec, out)
+    assert handle.result.complete
+    assert handle.spec.schedule.label_batch == 32
+    with open(os.path.join(out, BSR_MANIFEST)) as f:
+        assert json.load(f)["label_batch"] == 32
+    assert CheckpointHandle.open(out).spec.schedule.label_batch == 32
+
+
+# -- warm start --------------------------------------------------------------
+
+def test_load_label_range_dense_matches_full(cold_ckpt):
+    ckpt, _ = cold_ckpt
+    full = np.asarray(load_block_sparse(ckpt)[0].to_dense())[:L, :D]
+    np.testing.assert_array_equal(load_label_range_dense(ckpt, 0, L), full)
+    np.testing.assert_array_equal(load_label_range_dense(ckpt, 10, 37),
+                                  full[10:37])
+    # Rows past the prior label count cold-start at zero.
+    grown = load_label_range_dense(ckpt, L - 4, L + 4)
+    np.testing.assert_array_equal(grown[:4], full[L - 4:])
+    assert not grown[4:].any()
+
+
+def test_warm_start_fixed_point_bit_identical(xmc_data, cold_ckpt, tmp_path):
+    """Acceptance: warm-start fit is bit-identical to the cold fit when
+    init_from points at a converged checkpoint of the same spec — the
+    solver recognizes the fixed point (cold-anchored tolerance) and
+    accepts every batch's W0 unchanged."""
+    X, Y, _ = xmc_data
+    cold_dir, _ = cold_ckpt
+    warm_dir = str(tmp_path / "warm")
+    fit(X, Y, SPEC, warm_dir, init_from=cold_dir)
+    np.testing.assert_array_equal(
+        np.asarray(load_block_sparse(warm_dir)[0].to_dense()),
+        np.asarray(load_block_sparse(cold_dir)[0].to_dense()))
+    # The manifest records the warm-start provenance in the fingerprint...
+    with open(os.path.join(warm_dir, BSR_MANIFEST)) as f:
+        m = json.load(f)
+    assert m["solver"]["init"] is not None
+    # ...so a resume seeded from a different source must refuse.
+    with pytest.raises(ValueError, match="manifest disagrees"):
+        fit(X, Y, SPEC, warm_dir, max_batches=1)
+
+
+def test_warm_start_respun_spec(xmc_data, cold_ckpt, tmp_path):
+    """The ROADMAP warm-start story: re-train under a CHANGED spec (new
+    Delta) seeded from the converged weights; the session completes, the
+    new spec rides the new manifest, and pruning actually tightened."""
+    X, Y, _ = xmc_data
+    cold_dir, cold_handle = cold_ckpt
+    sharper = SPEC.replace(solver=SPEC.solver.replace(delta=0.05))
+    out = str(tmp_path / "warm2")
+    handle = fit(X, Y, sharper, out, init_from=cold_dir)
+    assert handle.result.complete
+    assert CheckpointHandle.open(out).spec == sharper
+    W_cold = np.asarray(load_block_sparse(cold_dir)[0].to_dense())
+    W_warm = np.asarray(load_block_sparse(out)[0].to_dense())
+    assert np.count_nonzero(W_warm) < np.count_nonzero(W_cold)
+    assert (np.abs(W_warm[W_warm != 0]) >= 0.05).all()
+
+
+def test_warm_start_from_single_shard_source(xmc_data, cold_ckpt, tmp_path):
+    """init_from also accepts the one-shot single-shard artifact
+    (BlockSparseModel.save): the reader densifies it once and the
+    fingerprint digests its packed values (no manifest to lean on)."""
+    X, Y, _ = xmc_data
+    cold_dir, _ = cold_ckpt
+    model, _ = load_block_sparse(cold_dir)
+    single = str(tmp_path / "single")
+    model.save(single, meta={"n_labels": L, "n_features": D})
+    warm_dir = str(tmp_path / "warm")
+    handle = fit(X, Y, SPEC, warm_dir, init_from=single)
+    assert handle.result.complete
+    np.testing.assert_array_equal(
+        np.asarray(load_block_sparse(warm_dir)[0].to_dense()),
+        np.asarray(load_block_sparse(cold_dir)[0].to_dense()))
+    with open(os.path.join(warm_dir, BSR_MANIFEST)) as f:
+        init_fp = json.load(f)["solver"]["init"]
+    assert init_fp["nnz"] > 0 and "abs_sum" in init_fp
+    # A different prior model produces a different fingerprint, so a
+    # resume cannot silently swap warm-start sources.
+    other = str(tmp_path / "other")
+    from repro.core.pruning import BlockSparseModel
+    import dataclasses as dc
+    dc.replace(model, blocks=model.blocks * 2.0).save(
+        other, meta={"n_labels": L, "n_features": D})
+    with pytest.raises(ValueError, match="manifest disagrees"):
+        fit(X, Y, SPEC, warm_dir, init_from=other, max_batches=1)
+
+
+def test_warm_start_feature_mismatch_raises(xmc_data, cold_ckpt, tmp_path):
+    X, Y, _ = xmc_data
+    cold_dir, _ = cold_ckpt
+    X_wrong = jnp.concatenate(
+        [X, jnp.zeros((X.shape[0], 32), X.dtype)], axis=1)
+    with pytest.raises(ValueError, match="feature dim"):
+        fit(X_wrong, Y, SPEC, str(tmp_path / "ck"), init_from=cold_dir)
+
+
+# -- registries --------------------------------------------------------------
+
+def test_backend_registry_plugin(xmc_data, cold_ckpt):
+    """A plugin backend registered via the decorator is reachable through
+    ServeSpec / the engine with no engine changes, and serves identically
+    to the built-in it wraps."""
+    _, _, Xte = xmc_data
+    _, handle = cold_ckpt
+
+    @register_backend("dense_copy")
+    def _make_copy(bsr, k, *, n_labels, mesh, label_axis, interpret):
+        return make_backend("dense", bsr, k, n_labels=n_labels)
+
+    try:
+        assert "dense_copy" in available_backends()
+        with pytest.raises(ValueError, match="already registered"):
+            register_backend("dense_copy")(lambda *a, **kw: None)
+        eng = handle.engine(ServeSpec(backend="dense_copy", k=4,
+                                      warmup=False))
+        ref = handle.engine(ServeSpec(backend="dense", k=4, warmup=False))
+        np.testing.assert_array_equal(eng.serve([Xte[:16]])[0].labels,
+                                      ref.serve([Xte[:16]])[0].labels)
+    finally:
+        unregister_backend("dense_copy")
+    assert "dense_copy" not in available_backends()
+    with pytest.raises(ValueError, match="unknown backend 'dense_copy'"):
+        handle.engine(ServeSpec(backend="dense_copy", warmup=False))
+
+
+def test_solver_ops_registry_plugin(xmc_data):
+    """A plugin solver-ops factory selected by SolverSpec(ops=...) solves
+    through the same session path, bit-identical to the built-in it
+    wraps."""
+    X, Y, _ = xmc_data
+    assert {"jnp", "pallas"} <= set(available_solver_ops())
+
+    @register_solver_ops("jnp_copy")
+    def _copy_ops(Xa, S, cfg):
+        return (lambda W: losses.objective_grad_act(W, Xa, S, cfg.C),
+                lambda V, act: losses.hessian_vp(V, Xa, act, cfg.C))
+
+    try:
+        from repro.xmc_api import job_from_spec
+        base = XMCSpec(solver=SolverSpec(eps=CFG_EPS, max_newton=10),
+                       schedule=ScheduleSpec(label_batch=L))
+        plugin = base.replace(solver=base.solver.replace(ops="jnp_copy"))
+        W_base = job_from_spec(base).run(X, Y).model.W
+        W_plugin = job_from_spec(plugin).run(X, Y).model.W
+        np.testing.assert_array_equal(np.asarray(W_base),
+                                      np.asarray(W_plugin))
+    finally:
+        unregister_solver_ops("jnp_copy")
+    with pytest.raises(ValueError, match="unknown solver ops"):
+        job_from_spec(plugin).run(X, Y)

@@ -1,0 +1,26 @@
+#!/usr/bin/env bash
+# Repo verification gate: tier-1 tests + benchmark-entrypoint smoke.
+#
+#   tools/verify.sh            # full tier-1 pytest + benchmark smoke
+#   tools/verify.sh --fast     # tier-1 pytest only
+#
+# The smoke leg runs `benchmarks.run --smoke` (train_pipeline +
+# tron_hotpath + serve_latency on tiny shapes) so the benchmark
+# entrypoints cannot silently rot: they import, run end-to-end, and keep
+# their bit-identity assertions live on every change.
+
+set -euo pipefail
+cd "$(dirname "$0")/.."
+export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
+
+echo "== tier-1 pytest =="
+python -m pytest -x -q
+
+if [[ "${1:-}" != "--fast" ]]; then
+    echo
+    echo "== benchmark smoke (train_pipeline + tron_hotpath + serve_latency) =="
+    python -m benchmarks.run --smoke
+fi
+
+echo
+echo "verify.sh: OK"
