@@ -13,8 +13,11 @@ plus the warm-start session: re-fit under a changed spec with
 `init_from=` seeding every label batch's TRON from the prior checkpoint.
 
 Run: PYTHONPATH=src python examples/quickstart.py
+     PYTHONPATH=src python examples/quickstart.py --smoke   # tiny shapes
+                                                  # (the verify.sh docs gate)
 """
 
+import argparse
 import tempfile
 
 import numpy as np
@@ -26,11 +29,16 @@ from repro.data.xmc import make_xmc_dataset
 from repro.specs import ScheduleSpec, ServeSpec, SolverSpec
 from repro.xmc_api import CheckpointHandle, XMCSpec, fit
 
+DIMS = dict(n_train=1500, n_test=500, n_features=4096, n_labels=512)
+# --smoke (tools/verify.sh): same session end-to-end on tiny shapes.
+SMOKE_DIMS = dict(n_train=300, n_test=100, n_features=1024, n_labels=128)
 
-def main():
+
+def main(smoke: bool = False):
+    dims = SMOKE_DIMS if smoke else DIMS
+
     # 1. Power-law XMC data (Eq. 1.1: N_r = N_1 r^-beta).
-    data = make_xmc_dataset(n_train=1500, n_test=500, n_features=4096,
-                            n_labels=512, beta=1.0, seed=0)
+    data = make_xmc_dataset(beta=1.0, seed=0, **dims)
     print("dataset:", data.stats())
     X, Y = jnp.asarray(data.X_train), jnp.asarray(data.Y_train)
     queries = np.asarray(data.X_test, np.float32)
@@ -80,4 +88,7 @@ def main():
 
 
 if __name__ == "__main__":
-    main()
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="tiny shapes (CI docs gate)")
+    main(smoke=ap.parse_args().smoke)

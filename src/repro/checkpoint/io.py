@@ -21,17 +21,37 @@ Two on-disk layouts share one loader:
                  `load_block_sparse` stitches the shards back into one
                  `BlockSparseModel` (pure row_ptr bookkeeping, no re-tiling)
                  so the serving engine never sees the difference.
+
+Manifest version 2 adds a **batch-lease table** (`leases`) to the stream
+manifest: the paper's layer-1 dispatch of label batches across nodes,
+done as cooperative claiming over a shared filesystem. N independent
+trainer processes pointed at the same directory each atomically claim the
+next unleased (or expired) batch under an `flock`'d manifest lock, solve
+it, and release the lease when the shard's manifest commit lands — so the
+batch queue drains across hosts into ONE checkpoint, and a worker that
+dies mid-batch is recovered by lease expiry (its batch becomes claimable
+again after `ttl` seconds). Version-1 manifests (no `leases` key) are
+still read and are upgraded in place on the next resume; complete
+checkpoints always carry an empty lease table, so the final artifact is
+bit-identical to a single-worker run.
 """
 
 from __future__ import annotations
 
 import json
 import os
-from typing import Any
+import time
+from contextlib import contextmanager
+from typing import Any, Optional
 
 import jax
 import jax.numpy as jnp
 import numpy as np
+
+try:                         # POSIX advisory locks; released on process death
+    import fcntl
+except ImportError:          # pragma: no cover - non-POSIX fallback
+    fcntl = None
 
 
 def _flatten(tree) -> dict[str, np.ndarray]:
@@ -96,6 +116,37 @@ def save_block_sparse(model, directory: str, *, meta: dict | None = None):
 
 
 BSR_MANIFEST = "bsr_manifest.json"
+BSR_MANIFEST_LOCK = "bsr_manifest.lock"
+
+#: Stream-manifest schema version. 1 = shards only (pre-lease); 2 adds the
+#: `leases` batch-lease table. Readers accept both; writers emit 2 and
+#: upgrade a resumed v1 manifest in place.
+MANIFEST_VERSION = 2
+
+
+@contextmanager
+def manifest_lock(directory: str):
+    """Exclusive cross-process lock over a stream checkpoint's manifest.
+
+    An `flock` on a sidecar lock file (never on the manifest itself — the
+    manifest is replaced atomically, which would orphan a lock held on the
+    old inode). The kernel drops the lock when the holder dies, so a
+    crashed worker can never wedge the queue; without fcntl (non-POSIX)
+    this degrades to no inter-process exclusion, which is only correct
+    for single-worker use.
+    """
+    fd = os.open(os.path.join(directory, BSR_MANIFEST_LOCK),
+                 os.O_CREAT | os.O_RDWR, 0o644)
+    try:
+        if fcntl is not None:
+            fcntl.flock(fd, fcntl.LOCK_EX)
+        yield
+    finally:
+        try:
+            if fcntl is not None:
+                fcntl.flock(fd, fcntl.LOCK_UN)
+        finally:
+            os.close(fd)
 
 
 class BlockSparseWriter:
@@ -108,6 +159,18 @@ class BlockSparseWriter:
     that the next run simply re-solves and overwrites, so the manifest is
     always the ground truth for what is done. `done_batches` is what a
     resumed `XMCTrainJob` skips.
+
+    Multi-host layer 1: the manifest also carries a batch-lease table.
+    `claim_next_batch(worker, ttl=...)` atomically hands out the lowest
+    batch that is neither written nor under a live lease;
+    `heartbeat(worker, batches)` keeps long solves alive; the lease is
+    released by the `write_batch` manifest commit (or explicitly by
+    `release_leases` on the error path). Every lease operation — and every
+    manifest mutation — runs as reload-mutate-flush under `manifest_lock`,
+    so N writer processes sharing one directory see one consistent queue.
+    Batches are solved deterministically from the spec + data (which the
+    `solver` fingerprint pins), so the rare double-solve after a lease
+    expires mid-flight just rewrites an identical shard.
     """
 
     def __init__(self, directory: str, *, n_labels: int, n_features: int,
@@ -144,30 +207,49 @@ class BlockSparseWriter:
             "label_batch": int(label_batch), "n_batches": int(n_batches),
             "solver": dict(solver or {}),
         }
-        existing = None
-        if os.path.exists(self._path):
-            with open(self._path) as f:
-                existing = json.load(f)
-        if existing is not None and resume:
-            mismatch = {k: (existing.get(k), v) for k, v in header.items()
-                        if existing.get(k) != v}
-            if mismatch:
-                raise ValueError(
-                    f"cannot resume into {directory}: manifest disagrees on "
-                    f"{mismatch}; pass resume=False to start fresh")
-            self.manifest = existing
-        else:
-            if existing is not None:                 # fresh start: drop shards
-                for s in existing.get("shards", {}).values():
-                    try:
-                        os.remove(os.path.join(directory, s["file"]))
-                    except OSError:
-                        pass
-            self.manifest = {**header, "complete": False, "shards": {},
-                             "meta": dict(meta or {})}
-            self._flush()
-        if meta:
-            self.manifest["meta"].update(meta)
+        # Creation/validation runs under the manifest lock: co-workers
+        # launched simultaneously must not both observe "no manifest yet"
+        # and race to create it (one creates, the rest resume into it).
+        with manifest_lock(directory):
+            existing = None
+            if os.path.exists(self._path):
+                with open(self._path) as f:
+                    existing = json.load(f)
+            if existing is not None and resume:
+                # `manifest_version` is deliberately not part of the
+                # identity check: a v1 (pre-lease) manifest resumes fine
+                # and is upgraded in place on the next flush.
+                mismatch = {k: (existing.get(k), v) for k, v in header.items()
+                            if existing.get(k) != v}
+                if mismatch:
+                    raise ValueError(
+                        f"cannot resume into {directory}: manifest disagrees "
+                        f"on {mismatch}; pass resume=False to start fresh")
+                self.manifest = existing
+                self.manifest.setdefault("leases", {})
+                self.manifest["manifest_version"] = MANIFEST_VERSION
+                # Meta is creator-wins: a joiner only contributes keys the
+                # manifest does not have yet, and the merge is flushed here
+                # (inside the init lock) so the meta on disk is settled
+                # before any lease/shard flush — co-workers admitted with a
+                # divergent serve section (serving is deliberately not
+                # fingerprinted) can never make meta.xmc_spec depend on
+                # which worker's flush landed last.
+                for k, v in (meta or {}).items():
+                    self.manifest["meta"].setdefault(k, v)
+                self._flush()
+            else:
+                if existing is not None:             # fresh start: drop shards
+                    for s in existing.get("shards", {}).values():
+                        try:
+                            os.remove(os.path.join(directory, s["file"]))
+                        except OSError:
+                            pass
+                self.manifest = {**header,
+                                 "manifest_version": MANIFEST_VERSION,
+                                 "complete": False, "shards": {},
+                                 "leases": {}, "meta": dict(meta or {})}
+                self._flush()
 
     @property
     def complete(self) -> bool:
@@ -183,25 +265,63 @@ class BlockSparseWriter:
             json.dump(self.manifest, f, indent=1, sort_keys=True)
         os.replace(tmp, self._path)
 
+    def _reload(self) -> None:
+        """Adopt the shared mutable state (shards / leases / complete /
+        meta) from disk; the header stays local (identity-checked at
+        construction). Meta comes from disk because it was settled at init
+        time (creator-wins merge) — adopting it keeps later flushes from
+        re-imposing one worker's local view."""
+        if not os.path.exists(self._path):
+            return
+        with open(self._path) as f:
+            disk = json.load(f)
+        self.manifest["shards"] = disk.get("shards", {})
+        self.manifest["leases"] = disk.get("leases", {})
+        self.manifest["complete"] = disk.get("complete", False)
+        self.manifest["meta"] = disk.get("meta", self.manifest.get("meta",
+                                                                   {}))
+
+    @contextmanager
+    def _locked(self, write: bool = True):
+        """One atomic reload-[mutate-flush] cycle under the manifest lock —
+        the unit every manifest operation runs as, so concurrent writer
+        processes never lose each other's updates. `write=False` is the
+        read-only form: backoff polls must not rewrite the manifest on the
+        shared filesystem once per second per idle worker."""
+        with manifest_lock(self.directory):
+            self._reload()
+            yield
+            if write:
+                self._flush()
+
     def write_batch(self, batch: int, part, *, row_start: int,
                     n_rows: int) -> None:
         """Append one solved label batch (append-form `BlockSparseModel`,
-        see `core.pruning.to_block_sparse(row_block_offset=...)`)."""
+        see `core.pruning.to_block_sparse(row_block_offset=...)`) and
+        release this batch's lease (if any) in the same manifest commit."""
         blocks = np.asarray(part.blocks)
         fname = f"shard-{batch:05d}.npz"
+        path = os.path.join(self.directory, fname)
+        # tmp + rename: a shard re-solved by a second worker (expired
+        # lease) must replace the file atomically, never interleave with a
+        # concurrent reader. The tmp name keeps the .npz suffix so
+        # np.savez does not append another one.
+        tmp = path + ".tmp.npz"
         np.savez_compressed(
-            os.path.join(self.directory, fname),
+            tmp,
             blocks=blocks,
             block_rows=np.asarray(part.block_rows),
             block_cols=np.asarray(part.block_cols),
             row_ptr=np.asarray(part.row_ptr))
-        self.manifest["shards"][str(int(batch))] = {
-            "file": fname, "row_start": int(row_start),
-            "n_rows": int(n_rows), "padded_rows": int(part.shape[0]),
-            "n_blocks": int(blocks.shape[0]),
-            "nnz": int(np.count_nonzero(blocks)),
-        }
-        self._flush()
+        os.replace(tmp, path)
+        with self._locked():
+            self.manifest["shards"][str(int(batch))] = {
+                "file": fname, "row_start": int(row_start),
+                "n_rows": int(n_rows), "padded_rows": int(part.shape[0]),
+                "n_blocks": int(blocks.shape[0]),
+                "nnz": int(np.count_nonzero(blocks)),
+            }
+            self.manifest["leases"].pop(str(int(batch)), None)
 
     def read_batch_dense(self, batch: int) -> np.ndarray:
         """Densify one already-written shard back to its (n_rows, D) weight
@@ -211,15 +331,124 @@ class BlockSparseWriter:
                               self.manifest["block_shape"],
                               self.manifest["n_features"])
 
+    # -- batch leases (multi-host layer 1) --------------------------------
+
+    def claim_next_batch(self, worker: str, *, ttl: float,
+                         exclude=()) -> Optional[int]:
+        """Atomically claim the lowest batch that is neither written nor
+        under another worker's live lease; None when nothing is claimable
+        right now (queue drained, or every remaining batch is leased by a
+        live co-worker — see `claim_wait_seconds`). A worker's own lease is
+        reclaimed immediately UNLESS the batch is in `exclude` — callers
+        pass the batches they are solving right now, so a restart under
+        the same worker id recovers its stale leases without a claimer
+        being handed a batch it already holds.
+        """
+        if fcntl is None:
+            raise RuntimeError(
+                "multi-worker lease coordination needs POSIX flock "
+                "(fcntl) for atomic manifest claims; this platform has "
+                "none, so cooperative workers would silently corrupt the "
+                "queue — run with workers=1 and no explicit worker id")
+        exclude = {int(b) for b in exclude}
+        with manifest_lock(self.directory):
+            self._reload()
+            now = time.time()
+            shards, leases = self.manifest["shards"], self.manifest["leases"]
+            for b in range(self.manifest["n_batches"]):
+                s = str(b)
+                if b in exclude or s in shards:
+                    continue
+                lease = leases.get(s)
+                if (lease is not None and lease["worker"] != worker
+                        and now < lease["ts"] + lease["ttl"]):
+                    continue
+                leases[s] = {"worker": worker, "ts": now, "ttl": float(ttl)}
+                self._flush()                    # flush only on a claim
+                return b
+            return None
+
+    def heartbeat(self, worker: str, batches) -> None:
+        """Refresh `worker`'s leases on `batches` (a solve outliving its
+        TTL must not get its batch re-dealt under it)."""
+        batches = [int(b) for b in batches]
+        if not batches:
+            return
+        with manifest_lock(self.directory):
+            self._reload()
+            now = time.time()
+            touched = False
+            for b in batches:
+                lease = self.manifest["leases"].get(str(b))
+                if lease is not None and lease["worker"] == worker:
+                    lease["ts"] = now
+                    touched = True
+            if touched:
+                self._flush()
+
+    def release_leases(self, worker: str, batches) -> None:
+        """Drop `worker`'s leases on `batches` without writing shards — the
+        error/preemption path, so co-workers reclaim immediately instead of
+        waiting out the TTL."""
+        batches = [int(b) for b in batches]
+        if not batches:
+            return
+        with manifest_lock(self.directory):
+            self._reload()
+            dropped = False
+            for b in batches:
+                lease = self.manifest["leases"].get(str(b))
+                if lease is not None and lease["worker"] == worker:
+                    del self.manifest["leases"][str(b)]
+                    dropped = True
+            if dropped:
+                self._flush()
+
+    def claim_wait_seconds(self) -> Optional[float]:
+        """Seconds until some unwritten batch becomes claimable (0.0 when
+        one already is), or None when every batch is written — the backoff
+        a worker sleeps when `claim_next_batch` returns None but the
+        checkpoint is not finished (a co-worker may yet die mid-batch)."""
+        with self._locked(write=False):
+            now = time.time()
+            shards, leases = self.manifest["shards"], self.manifest["leases"]
+            waits = []
+            for b in range(self.manifest["n_batches"]):
+                s = str(b)
+                if s in shards:
+                    continue
+                lease = leases.get(s)
+                waits.append(0.0 if lease is None else
+                             max(0.0, lease["ts"] + lease["ttl"] - now))
+            return min(waits) if waits else None
+
+    # -- completion -------------------------------------------------------
+
+    def try_finalize(self) -> Optional[dict]:
+        """Mark the checkpoint servable if every batch is present (clearing
+        the lease table); None while batches are still missing. Idempotent
+        — with cooperative workers, whichever one drains the last batch
+        finalizes, and a second call is a no-op."""
+        with manifest_lock(self.directory):
+            self._reload()
+            missing = (set(range(self.manifest["n_batches"]))
+                       - self.done_batches)
+            if missing:                          # read-only: nothing to flush
+                return None
+            self.manifest["complete"] = True
+            self.manifest["leases"] = {}
+            self._flush()
+            return self.manifest
+
     def finalize(self) -> dict:
         """Mark the checkpoint servable (all batches present)."""
-        missing = set(range(self.manifest["n_batches"])) - self.done_batches
-        if missing:
+        manifest = self.try_finalize()
+        if manifest is None:
+            missing = (set(range(self.manifest["n_batches"]))
+                       - self.done_batches)
             raise ValueError(f"cannot finalize: batches {sorted(missing)} "
                              "missing from manifest")
-        self.manifest["complete"] = True
-        self._flush()
-        return self.manifest
+        return manifest
 
 
 def _densify_shard(directory: str, entry: dict, block_shape,

@@ -15,6 +15,16 @@ starts from a prior checkpoint's weights):
   PYTHONPATH=src python -m repro.launch.train --xmc --labels 512 \
       --delta 0.02 --out /tmp/xmc_d02 --init-from /tmp/xmc_ckpt
   PYTHONPATH=src python -m repro.launch.serve --xmc --ckpt /tmp/xmc_ckpt
+
+Multi-host XMC (paper layer 1 over real nodes): launch the SAME command on
+N hosts/processes sharing --out — each worker claims label batches through
+the manifest's lease table and they drain one queue into one checkpoint
+(bit-identical to a single-worker run; a worker killed mid-batch is
+recovered by lease expiry):
+  PYTHONPATH=src python -m repro.launch.train --xmc --labels 512 \
+      --out /shared/xmc_ckpt --workers 2 --worker-id node0 &
+  PYTHONPATH=src python -m repro.launch.train --xmc --labels 512 \
+      --out /shared/xmc_ckpt --workers 2 --worker-id node1 &
 """
 
 from __future__ import annotations
@@ -60,12 +70,13 @@ def train_xmc(args) -> None:
         solver=SolverSpec(C=args.C, delta=args.delta),
         schedule=ScheduleSpec(label_batch=args.label_batch, mesh=mesh,
                               shard_data=args.shard_data,
-                              balance=args.balance))
+                              balance=args.balance, workers=args.workers,
+                              lease_ttl=args.lease_ttl))
 
     t0 = time.time()
     handle = fit(jnp.asarray(data.X_train), jnp.asarray(data.Y_train),
                  spec, args.out, resume=not args.fresh,
-                 init_from=args.init_from,
+                 init_from=args.init_from, worker=args.worker_id,
                  on_batch=lambda b, n: print(
                      f"[xmc] batch {b + 1}/{n} done "
                      f"({time.time() - t0:.1f}s)"))
@@ -75,6 +86,14 @@ def train_xmc(args) -> None:
           f"resumed from manifest in {wall:.1f}s -> {args.out}"
           + (f" (warm-started from {args.init_from})"
              if args.init_from else ""))
+
+    if not res.complete:
+        # Defensive: a normal run (cooperative or not) returns complete —
+        # workers wait out co-worker leases. Reaching here means the run
+        # was cut short; re-running the same command resumes it.
+        print(f"[xmc] checkpoint not complete ({len(res.solved)} batches "
+              f"by this worker); re-run this command to finish {args.out}")
+        return
 
     nnz = sum(s["nnz"] for s in res.manifest["shards"].values())
     total = args.labels * args.features
@@ -129,6 +148,17 @@ def main() -> None:
     ap.add_argument("--init-from", default=None,
                     help="warm start: prior sparse checkpoint whose rows "
                          "seed each batch's TRON as W0")
+    ap.add_argument("--workers", type=int, default=1,
+                    help="cooperative worker count: >1 claims label batches "
+                         "via the manifest lease table, so N processes "
+                         "sharing --out drain one queue into one checkpoint")
+    ap.add_argument("--worker-id", default=None,
+                    help="stable identity of this worker in a multi-host "
+                         "drain (default: hostname-pid); implies lease-"
+                         "based claiming even with --workers 1")
+    ap.add_argument("--lease-ttl", type=float, default=300.0,
+                    help="seconds before an unrefreshed batch lease expires "
+                         "and the batch is re-dealt (crash recovery)")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args()
 

@@ -33,6 +33,15 @@ class ScheduleSpec(Spec):
     overlap      : double-buffer the scheduler (dispatch batch b+1 before
                    batch b's result leaves the device).
     max_inflight : bound on un-drained device results when overlapping.
+    workers      : declared size of the cooperative multi-host drain; > 1
+                   switches the scheduler to lease-based batch claiming
+                   over the shared manifest (N `fit()` processes on one
+                   `out_dir` -> one checkpoint). Like overlap, this never
+                   changes the solved weights — any worker count writes a
+                   bit-identical checkpoint.
+    lease_ttl    : seconds before an unrefreshed batch lease expires and
+                   the batch is re-dealt (crash recovery latency; solves
+                   are heartbeat-refreshed well inside it).
     """
     # The paper's per-node batch is ~1000; the default is rounded to the
     # BSR block grid so the no-argument spec is already normalized (a
@@ -46,6 +55,8 @@ class ScheduleSpec(Spec):
     balance: bool = False
     overlap: bool = True
     max_inflight: int = 2
+    workers: int = 1
+    lease_ttl: float = 300.0
 
     def validate(self) -> "ScheduleSpec":
         if self.label_batch < 1:
@@ -59,6 +70,11 @@ class ScheduleSpec(Spec):
         if self.max_inflight < 1:
             raise ValueError(f"max_inflight must be >= 1, got "
                              f"{self.max_inflight}")
+        if self.workers < 1:
+            raise ValueError(f"workers must be >= 1, got {self.workers}")
+        if self.lease_ttl <= 0.0:
+            raise ValueError(f"lease_ttl must be positive, got "
+                             f"{self.lease_ttl}")
         return self
 
     def normalized(self) -> "ScheduleSpec":
@@ -99,14 +115,18 @@ class ScheduleSpec(Spec):
                    block_shape=tuple(job.block_shape), mesh=mesh,
                    label_axis=job.label_axis, data_axis=job.data_axis,
                    shard_data=job.shard_data, balance=job.balance,
-                   overlap=job.overlap, max_inflight=job.max_inflight)
+                   overlap=job.overlap, max_inflight=job.max_inflight,
+                   workers=job.workers, lease_ttl=job.lease_ttl)
 
     # Runtime tuning knobs that never change the solved checkpoint (the
     # double-buffered scheduler is proven byte-identical to the sequential
-    # one): excluded from the resume fingerprint and canonicalized away in
-    # manifest-stored specs, so flipping them never blocks a resume and
-    # never perturbs checkpoint bytes.
-    RUNTIME_FIELDS = ("overlap", "max_inflight")
+    # one, and so is any cooperative worker count — each batch's solve is
+    # deterministic regardless of which worker claims it): excluded from
+    # the resume fingerprint and canonicalized away in manifest-stored
+    # specs, so flipping them never blocks a resume and never perturbs
+    # checkpoint bytes. In particular, co-workers joining the same drain
+    # may disagree on workers/lease_ttl without tripping the spec guard.
+    RUNTIME_FIELDS = ("overlap", "max_inflight", "workers", "lease_ttl")
 
     def canonical(self) -> "ScheduleSpec":
         """This schedule with the runtime knobs reset to their defaults —

@@ -64,14 +64,26 @@ writer; the mapping to the algorithm's steps 3-11:
 Resume: the manifest lists finished batches; a restarted job skips them and
 solves only the rest. A crash between a shard write and its manifest update
 orphans one shard file, which the next run simply re-solves and overwrites.
+
+Multi-host layer 1: with `ScheduleSpec(workers=N)` (or an explicit
+`worker=` id), step 3's loop claims batches through the manifest's lease
+table instead of walking them statically — N independent `fit()` processes
+pointed at one `out_dir` cooperatively drain the label-batch queue into a
+single checkpoint, exactly the paper's dispatch of batches to nodes. The
+manifest's solver/schedule/data fingerprint gates every joiner, so
+co-workers running a different spec (or different data) are rejected; a
+worker that dies mid-batch is recovered by lease expiry (`lease_ttl`).
 """
 
 from __future__ import annotations
 
 import dataclasses
+import os
 import queue
+import socket
 import threading
-from typing import Callable, Optional
+import time
+from typing import Callable, Iterable, Optional
 
 import jax
 import jax.numpy as jnp
@@ -89,13 +101,20 @@ from repro.specs import ScheduleSpec, ServeSpec, SolverSpec
 Array = jax.Array
 
 
+def default_worker_id() -> str:
+    """Identity of this trainer process in a cooperative multi-worker
+    drain: unique per (host, process), stable for the process lifetime —
+    what a batch lease records as its holder when the user does not pass
+    an explicit `--worker-id`."""
+    return f"{socket.gethostname()}-{os.getpid()}"
+
+
 def _init_fingerprint(init_from: str) -> dict:
     """Content identity of a warm-start source. The solved weights depend
     on W0 (truncated Newton stops early), so a resumed warm run must not
     stitch shards seeded from a *different* prior model. A streamed source
     carries its own solver+data fingerprint in its manifest; a one-shot
     artifact has none, so its packed values are digested directly."""
-    import os
     index = load_block_sparse_meta(init_from)
     if index.get("layout") == "stream":
         return {"solver": index["manifest"].get("solver"),
@@ -136,6 +155,19 @@ class XMCTrainJob:
     device results at `max_inflight` (see the module docstring). The
     produced checkpoint is byte-identical to a sequential
     (`overlap=False`) run.
+
+    `workers > 1` (or an explicit `worker=` id to `run`) turns the static
+    skip-finished loop into a lease-aware iterator over the shared
+    manifest: each batch is atomically claimed before dispatch
+    (`BlockSparseWriter.claim_next_batch`), held alive by a heartbeat
+    thread while it solves, and released by its shard's manifest commit —
+    so N independent processes pointed at the same `out_dir` drain one
+    queue into one checkpoint (the paper's layer 1 over real nodes). A
+    worker killed mid-batch is recovered when its lease outlives
+    `lease_ttl`; a worker that exits cleanly (error, `max_batches`)
+    releases its leases so co-workers reclaim immediately. Per-batch
+    solves are deterministic, so the cooperative checkpoint is
+    bit-identical to a single-worker one.
     """
     cfg: DiSMECConfig
     mesh: Optional[Mesh] = None
@@ -146,6 +178,8 @@ class XMCTrainJob:
     block_shape: tuple[int, int] = (128, 128)
     overlap: bool = True
     max_inflight: int = 2
+    workers: int = 1
+    lease_ttl: float = 300.0
 
     def label_batches(self, n_labels: int) -> list[tuple[int, int]]:
         """Contiguous [start, stop) label ranges of the scheduler loop."""
@@ -162,7 +196,7 @@ class XMCTrainJob:
             resume: bool = True, materialize: Optional[bool] = None,
             max_batches: Optional[int] = None, meta: Optional[dict] = None,
             on_batch: Optional[Callable[[int, int], None]] = None,
-            init_from: Optional[str] = None,
+            init_from: Optional[str] = None, worker: Optional[str] = None,
             ) -> XMCTrainResult:
         """Train X (N, D), Y (N, L) into `out_dir` (streamed multi-shard
         checkpoint) and/or an in-memory model.
@@ -187,6 +221,23 @@ class XMCTrainJob:
                        stopping tolerance stays anchored at the cold-start
                        gradient, so a converged same-spec source is a fixed
                        point: the solver accepts it unchanged.
+        worker       : this process's identity in a cooperative multi-worker
+                       drain (defaults to host-pid via `default_worker_id`).
+                       Passing it — or setting `workers > 1` on the job —
+                       switches the scheduler to lease-based batch claiming
+                       over the shared manifest; `solved`/`on_batch` then
+                       cover only the batches THIS worker claimed. A worker
+                       with nothing left to claim sees the job through: it
+                       polls (bounded ~1 s sleeps) until co-workers commit
+                       their leases — or reclaims them when they expire, so
+                       a dead co-worker's batches recover with no manual
+                       step. `complete` is therefore True on every normal
+                       cooperative return; False only when `max_batches`
+                       cut this worker short or an error aborted the run.
+                       Liveness caveat: a co-worker that is stuck alive
+                       (still heartbeating, never committing) blocks
+                       completion until an operator kills it and its lease
+                       expires.
         """
         Yn = np.asarray(Y)
         N, L = Yn.shape
@@ -262,6 +313,21 @@ class XMCTrainJob:
         solved: list[int] = []
         skipped: list[int] = []
 
+        # Multi-host layer 1: with a worker identity (explicit, or implied
+        # by workers > 1) batches are claimed from the shared manifest's
+        # lease table instead of walked statically.
+        coordinate = writer is not None and (self.workers > 1
+                                             or worker is not None)
+        worker_id = worker or default_worker_id()
+        held: set[int] = set()               # leases this worker holds now
+        held_lock = threading.Lock()
+        # First failure from the background drain worker (overlap mode).
+        # Shared with leased_batches: the claim-wait loop must abort on it,
+        # or a failed batch's still-held (and heartbeated) lease would keep
+        # the loop waiting forever — wedging this worker AND every
+        # co-worker behind the never-released lease.
+        failed: list[BaseException] = []
+
         def dispatch(b: int, start: int, stop: int):
             """Host-side prep + asynchronous device dispatch of one batch."""
             rows = stop - start
@@ -299,68 +365,151 @@ class XMCTrainJob:
                 part = to_block_sparse(W_b, self.block_shape,
                                        row_block_offset=start // bl,
                                        sentinel_if_empty=False, device=False)
+                # The manifest commit inside write_batch also releases
+                # this batch's lease.
                 writer.write_batch(b, part, row_start=start, n_rows=rows)
+            with held_lock:
+                held.discard(b)
             if materialize:
                 host_blocks[b] = W_b
             solved.append(b)
             if on_batch is not None:
                 on_batch(b, len(batches))
 
-        to_solve: list[tuple[int, int, int]] = []
-        for b, (start, stop) in enumerate(batches):       # paper's step 3
-            if b in done:
-                skipped.append(b)
-                if materialize:
-                    host_blocks[b] = writer.read_batch_dense(b)
-                continue
-            if max_batches is not None and len(to_solve) >= max_batches:
-                break
-            to_solve.append((b, start, stop))
-
-        if not self.overlap:
-            for b, start, stop in to_solve:
-                drain(dispatch(b, start, stop))
-        elif to_solve:
-            # Double-buffered: the main thread keeps dispatching solves; a
-            # single background worker drains results in dispatch order.
-            # A slot must be acquired BEFORE a batch is dispatched and is
-            # released only once its result is fully drained, so at most
-            # max_inflight un-drained device results exist at any moment.
-            failed: list[BaseException] = []
-            slots = threading.Semaphore(max(1, self.max_inflight))
-            inflight: queue.Queue = queue.Queue()
-
-            def worker():
-                while True:
-                    item = inflight.get()
-                    if item is None:
+        def leased_batches() -> Iterable[tuple[int, int, int]]:
+            """Lease-aware layer-1 iterator: claim the next unleased (or
+            expired) batch from the shared manifest right before
+            dispatching it; when everything left is leased by live
+            co-workers, back off until the earliest lease could expire —
+            normally its commit lands first and the queue reads drained,
+            but a dead worker's batch is reclaimed here with no manual
+            cleanup."""
+            n_claimed = 0
+            while max_batches is None or n_claimed < max_batches:
+                if failed:                      # drain died: stop claiming
+                    return
+                with held_lock:
+                    in_flight = set(held)
+                b = writer.claim_next_batch(worker_id, ttl=self.lease_ttl,
+                                            exclude=in_flight)
+                if b is None:
+                    wait = writer.claim_wait_seconds()
+                    if wait is None:            # every batch is written
                         return
+                    time.sleep(min(max(wait, 0.05), 1.0))
+                    continue
+                with held_lock:
+                    held.add(b)
+                n_claimed += 1
+                yield (b, *batches[b])
+
+        if coordinate:
+            skipped.extend(sorted(done))                  # done before we ran
+            if materialize:
+                for b in skipped:
+                    host_blocks[b] = writer.read_batch_dense(b)
+            work_iter: Iterable[tuple[int, int, int]] = leased_batches()
+        else:
+            to_solve: list[tuple[int, int, int]] = []
+            for b, (start, stop) in enumerate(batches):   # paper's step 3
+                if b in done:
+                    skipped.append(b)
+                    if materialize:
+                        host_blocks[b] = writer.read_batch_dense(b)
+                    continue
+                if max_batches is not None and len(to_solve) >= max_batches:
+                    break
+                to_solve.append((b, start, stop))
+            work_iter = to_solve
+
+        hb_stop = threading.Event()
+        hb_thread = None
+        if coordinate:
+            # Leases must outlive arbitrarily long solves: refresh every
+            # currently-held one well inside the TTL.
+            def _heartbeat():
+                interval = max(0.05, self.lease_ttl / 4.0)
+                while not hb_stop.wait(interval):
+                    with held_lock:
+                        current = sorted(held)
                     try:
-                        if not failed:
-                            drain(item)
-                    except BaseException as e:   # propagate to the main loop
-                        failed.append(e)
-                    finally:
-                        slots.release()
+                        writer.heartbeat(worker_id, current)
+                    except OSError:       # transient fs hiccup: next tick
+                        pass
+            hb_thread = threading.Thread(target=_heartbeat, daemon=True,
+                                         name="xmc-lease-heartbeat")
+            hb_thread.start()
 
-            t = threading.Thread(target=worker, daemon=True,
-                                 name="xmc-checkpoint-writer")
-            t.start()
-            try:
-                for b, start, stop in to_solve:
-                    slots.acquire()
-                    if failed:
-                        slots.release()
-                        break
-                    inflight.put(dispatch(b, start, stop))
-            finally:
-                inflight.put(None)
-                t.join()
-            if failed:
-                raise failed[0]
+        try:
+            if not self.overlap:
+                for item in work_iter:
+                    drain(dispatch(*item))
+            else:
+                # Double-buffered: the main thread keeps dispatching solves;
+                # a single background worker drains results in dispatch
+                # order. A slot must be acquired BEFORE a batch is claimed
+                # and dispatched, and is released only once its result is
+                # fully drained, so at most max_inflight un-drained device
+                # results (and held leases) exist at any moment.
+                slots = threading.Semaphore(max(1, self.max_inflight))
+                inflight: queue.Queue = queue.Queue()
 
-        complete = len(solved) + len(skipped) == len(batches)
-        manifest = writer.finalize() if (writer and complete) else None
+                def _drain_loop():
+                    while True:
+                        item = inflight.get()
+                        if item is None:
+                            return
+                        try:
+                            if not failed:
+                                drain(item)
+                        except BaseException as e:   # propagate to main loop
+                            failed.append(e)
+                        finally:
+                            slots.release()
+
+                it = iter(work_iter)
+                t = threading.Thread(target=_drain_loop, daemon=True,
+                                     name="xmc-checkpoint-writer")
+                t.start()
+                try:
+                    while True:
+                        slots.acquire()
+                        if failed:
+                            slots.release()
+                            break
+                        item = next(it, None)
+                        if item is None:
+                            slots.release()
+                            break
+                        inflight.put(dispatch(*item))
+                finally:
+                    inflight.put(None)
+                    t.join()
+                if failed:
+                    raise failed[0]
+        finally:
+            if coordinate:
+                hb_stop.set()
+                hb_thread.join()
+                # Exit (clean or not) releases whatever is still held, so
+                # co-workers reclaim now instead of waiting out the TTL.
+                with held_lock:
+                    leftover = sorted(held)
+                writer.release_leases(worker_id, leftover)
+
+        if coordinate:
+            # Cooperative completion is a property of the shared manifest,
+            # not of this worker's batches: whoever drains the last batch
+            # finalizes (try_finalize is idempotent under the lock).
+            manifest = writer.try_finalize()
+            complete = manifest is not None
+            if materialize and complete:
+                for b in range(len(batches)):     # co-workers' batches
+                    if b not in host_blocks:
+                        host_blocks[b] = writer.read_batch_dense(b)
+        else:
+            complete = len(solved) + len(skipped) == len(batches)
+            manifest = writer.finalize() if (writer and complete) else None
         model = None
         if materialize and complete:
             W = np.concatenate([host_blocks[b] for b in range(len(batches))])

@@ -28,7 +28,12 @@ channel. Warm starting is a spec-level operation too::
         "/ckpts/wiki31k-d02", init_from="/ckpts/wiki31k")
 
 seeds every label batch's TRON from the prior checkpoint's rows (shards
-mapped back to label ranges, never the full matrix). Solver-ops and
+mapped back to label ranges, never the full matrix). The paper's layer-1
+distribution over nodes is a session-level operation as well: launch the
+same `fit(X, Y, spec, out_dir, worker=...)` in N plain processes (any
+hosts that share the filesystem) and they cooperatively drain the
+label-batch queue through the manifest's lease table into one checkpoint
+— see `ScheduleSpec.workers` / `lease_ttl`. Solver-ops and
 predict backends resolve through decorator registries
 (`repro.core.dismec.register_solver_ops`,
 `repro.serve.xmc.register_backend`), so new kernel stacks and new serving
@@ -116,13 +121,15 @@ def job_from_spec(spec: XMCSpec, *, mesh=None):
         label_axis=sch.label_axis, data_axis=sch.data_axis,
         shard_data=sch.shard_data, balance=sch.balance,
         block_shape=tuple(sch.block_shape), overlap=sch.overlap,
-        max_inflight=sch.max_inflight)
+        max_inflight=sch.max_inflight, workers=sch.workers,
+        lease_ttl=sch.lease_ttl)
 
 
 def fit(X: Array, Y: Array, spec: XMCSpec, out_dir: str, *,
         init_from: Optional[str] = None, resume: bool = True,
         max_batches: Optional[int] = None, meta: Optional[dict] = None,
         on_batch: Optional[Callable[[int, int], None]] = None,
+        worker: Optional[str] = None,
         ) -> "CheckpointHandle":
     """Train X (N, D), Y (N, L) under `spec` into a servable sparse
     checkpoint at `out_dir`; returns the handle to serve or re-open it.
@@ -142,11 +149,24 @@ def fit(X: Array, Y: Array, spec: XMCSpec, out_dir: str, *,
                 the checkpoint fresh).
     max_batches / on_batch : preemption bound and per-batch callback,
                 passed through to the engine (`XMCTrainJob.run`).
+    worker    : identity of this process in a cooperative multi-host
+                drain (paper layer 1 over real nodes): N `fit()` calls on
+                the same `out_dir` — same canonical spec, same data, any
+                mix of hosts — claim label batches through the manifest's
+                lease table and write ONE checkpoint, bit-identical to a
+                single-worker run. Defaults to host-pid when
+                `spec.schedule.workers > 1`; the manifest fingerprint
+                rejects a co-worker whose spec or data disagrees. Each
+                worker sees the job through: with nothing left to claim it
+                waits for co-workers' commits (reclaiming their batches if
+                their leases expire — dead workers recover automatically),
+                so on a normal return `result.complete` is True; it is
+                False only when `max_batches` stopped this worker early.
     """
     spec = spec.normalized()
     job = job_from_spec(spec)
     res = job.run(X, Y, out_dir, resume=resume, init_from=init_from,
-                  max_batches=max_batches, on_batch=on_batch,
+                  max_batches=max_batches, on_batch=on_batch, worker=worker,
                   meta={**(meta or {}),
                         "xmc_spec": spec.canonical().to_dict()})
     return CheckpointHandle(directory=out_dir, spec=spec, result=res)

@@ -1,0 +1,336 @@
+"""Multi-host layer-1 dispatch (manifest batch leases): cooperative
+two-worker drains must be bit-identical to single-worker runs, dead
+workers must be recovered by lease expiry with no manual cleanup, and the
+spec fingerprint must keep mismatched co-workers out of the checkpoint.
+
+Workers here are threads, not processes: each `fit()` builds its own
+`BlockSparseWriter`, and the lease protocol (flock + reload-mutate-flush)
+is identical whether the contending writers live in one process or on N
+hosts — threads just keep the suite fast. The real multi-process path is
+exercised by `benchmarks/train_pipeline.py --smoke` (multiworker mode)
+and `examples/distributed_dismec.py`.
+"""
+
+import json
+import os
+import threading
+import time
+
+import numpy as np
+import pytest
+
+import jax.numpy as jnp
+
+from repro.checkpoint.io import (BSR_MANIFEST, MANIFEST_VERSION,
+                                 BlockSparseWriter, load_block_sparse)
+from repro.specs import ScheduleSpec, SolverSpec
+from repro.xmc_api import XMCSpec, fit
+
+L, D = 64, 512
+LABEL_BATCH = 16                      # 4 batches: a queue worth dealing
+BLOCK = (16, 16)
+
+
+def make_spec(**schedule_kw):
+    schedule_kw.setdefault("label_batch", LABEL_BATCH)
+    schedule_kw.setdefault("block_shape", BLOCK)
+    return XMCSpec(solver=SolverSpec(eps=1e-2),
+                   schedule=ScheduleSpec(**schedule_kw))
+
+
+@pytest.fixture(scope="module")
+def xmc_data():
+    from repro.data.xmc import make_xmc_dataset
+    d = make_xmc_dataset(n_train=150, n_test=30, n_features=D, n_labels=L,
+                         seed=1)
+    return jnp.asarray(d.X_train), jnp.asarray(d.Y_train)
+
+
+@pytest.fixture(scope="module")
+def single_ckpt(xmc_data, tmp_path_factory):
+    """The single-worker reference every cooperative run must reproduce."""
+    X, Y = xmc_data
+    out = str(tmp_path_factory.mktemp("single"))
+    res = fit(X, Y, make_spec(), out).result
+    assert res.complete and res.n_batches == 4
+    return out
+
+
+def manifest_of(directory):
+    with open(os.path.join(directory, BSR_MANIFEST)) as f:
+        return json.load(f)
+
+
+def assert_identical_checkpoint(a, b):
+    assert manifest_of(a) == manifest_of(b)
+    np.testing.assert_array_equal(
+        np.asarray(load_block_sparse(a)[0].to_dense()),
+        np.asarray(load_block_sparse(b)[0].to_dense()))
+
+
+def run_workers(X, Y, out, names, spec=None, **fit_kw):
+    """N cooperative fit() workers on threads; returns {name: result}."""
+    spec = spec or make_spec(workers=len(names), lease_ttl=30.0)
+    results, errors = {}, {}
+
+    def work(name):
+        try:
+            results[name] = fit(X, Y, spec, out, worker=name,
+                                **fit_kw).result
+        except BaseException as e:                  # surfaced by the caller
+            errors[name] = e
+
+    threads = [threading.Thread(target=work, args=(n,)) for n in names]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join()
+    if errors:
+        raise next(iter(errors.values()))
+    return results
+
+
+def test_two_worker_drain_bit_identical(xmc_data, single_ckpt, tmp_path):
+    """Acceptance criterion: two fit() workers draining one out_dir yield
+    a manifest and stitched weights identical to the single-worker run,
+    with every batch solved exactly once across the pair."""
+    X, Y = xmc_data
+    coop = str(tmp_path / "coop")
+    results = run_workers(X, Y, coop, ["a", "b"])
+    solved = sorted(b for r in results.values() for b in r.solved)
+    assert solved == [0, 1, 2, 3]                 # disjoint and exhaustive
+    assert any(r.complete for r in results.values())
+    assert_identical_checkpoint(coop, single_ckpt)
+    # Completion clears the lease table: the artifact carries no residue
+    # of how many workers built it.
+    assert manifest_of(coop)["leases"] == {}
+
+
+def test_solo_worker_coordinated_identical(xmc_data, single_ckpt, tmp_path):
+    """The lease-claiming scheduler itself (workers=1 but an explicit
+    worker id) writes the same bytes as the static skip-finished loop."""
+    X, Y = xmc_data
+    out = str(tmp_path / "solo")
+    res = fit(X, Y, make_spec(), out, worker="only").result
+    assert res.complete and res.solved == [0, 1, 2, 3]
+    assert_identical_checkpoint(out, single_ckpt)
+
+
+def test_killed_worker_releases_leases_for_instant_reclaim(
+        xmc_data, single_ckpt, tmp_path):
+    """A worker that dies by exception releases its held leases on the way
+    out, so a successor reclaims its batches immediately — no TTL wait."""
+    X, Y = xmc_data
+    out = str(tmp_path / "killed")
+
+    class Kill(RuntimeError):
+        pass
+
+    def die_after_one(b, n):
+        raise Kill(f"killed after batch {b}")
+
+    spec = make_spec(workers=2, lease_ttl=120.0)
+    with pytest.raises(Kill):
+        fit(X, Y, spec, out, worker="victim", on_batch=die_after_one)
+    m = manifest_of(out)
+    assert not m["complete"] and m["leases"] == {}
+
+    t0 = time.time()
+    res = fit(X, Y, spec, out, worker="successor").result
+    assert res.complete
+    assert time.time() - t0 < 60.0                # never waited out the TTL
+    assert_identical_checkpoint(out, single_ckpt)
+
+
+def test_drain_failure_aborts_instead_of_hanging(xmc_data, tmp_path,
+                                                 monkeypatch):
+    """A shard-write failure in the background drain thread must abort the
+    coordinated run (releasing every held lease), not leave the claim-wait
+    loop spinning behind its own perpetually-heartbeated lease.
+
+    The failure is injected on the LAST batch: by then the main thread has
+    claimed everything and sits inside the lease-wait loop (its own
+    in-flight leases are the only unwritten batches) — exactly the window
+    where a drain death used to hang the run forever, since the `failed`
+    check at the dispatch semaphore is never reached again."""
+    X, Y = xmc_data
+    real = BlockSparseWriter.write_batch
+
+    def failing(self, batch, part, **kw):
+        if batch == 3:                           # last of the 4 batches
+            time.sleep(1.0)       # let the main thread reach the wait loop
+            raise RuntimeError("disk full")
+        return real(self, batch, part, **kw)
+
+    monkeypatch.setattr(BlockSparseWriter, "write_batch", failing)
+    out = str(tmp_path / "ck")
+    caught = []
+
+    def go():
+        try:
+            fit(X, Y, make_spec(workers=2, lease_ttl=120.0), out,
+                worker="w")
+        except BaseException as e:
+            caught.append(e)
+
+    t = threading.Thread(target=go, daemon=True)
+    t.start()
+    t.join(timeout=90.0)
+    assert not t.is_alive(), "coordinated run hung after a write failure"
+    assert caught and "disk full" in str(caught[0])
+    monkeypatch.undo()
+    # Every lease was released on the way out: a co-worker (or retry)
+    # reclaims immediately and can finish the checkpoint.
+    assert manifest_of(out)["leases"] == {}
+    res = fit(X, Y, make_spec(workers=2), out, worker="retry").result
+    assert res.complete
+
+
+def test_expired_lease_reclaimed_after_dead_worker(xmc_data, single_ckpt,
+                                                   tmp_path):
+    """Acceptance criterion: a worker killed so hard it left a live lease
+    behind (SIGKILL — nothing ran on the way out) is recovered via lease
+    expiry, without manual cleanup: the survivor skips the leased batch,
+    drains the rest, waits out the TTL, then reclaims and finishes."""
+    X, Y = xmc_data
+    out = str(tmp_path / "abandoned")
+    spec = make_spec(workers=2, lease_ttl=2.0)
+    fit(X, Y, spec, out, worker="dead", max_batches=1)
+
+    # Simulate the SIGKILL crash state: batch 1 leased by "dead" moments
+    # ago, never to be heartbeat again.
+    path = os.path.join(out, BSR_MANIFEST)
+    with open(path) as f:
+        m = json.load(f)
+    assert m["leases"] == {}                     # clean exit released all
+    m["leases"]["1"] = {"worker": "dead", "ts": time.time(), "ttl": 2.0}
+    with open(path, "w") as f:
+        json.dump(m, f)
+
+    t0 = time.time()
+    res = fit(X, Y, spec, out, worker="survivor").result
+    elapsed = time.time() - t0
+    assert res.complete and 1 in res.solved
+    assert elapsed >= 1.0                        # actually waited for expiry
+    assert_identical_checkpoint(out, single_ckpt)
+
+
+def test_coworker_spec_mismatch_raises(xmc_data, tmp_path):
+    """Co-workers must share the canonical spec (and data): a joiner with
+    a different solver is rejected by the manifest fingerprint instead of
+    stitching incompatible shards — but runtime-only knob differences
+    (workers / lease_ttl / overlap) are admitted."""
+    X, Y = xmc_data
+    out = str(tmp_path / "guarded")
+    fit(X, Y, make_spec(workers=2, lease_ttl=30.0), out, worker="a",
+        max_batches=1)
+    bad = XMCSpec(solver=SolverSpec(C=10.0, eps=1e-2),
+                  schedule=ScheduleSpec(label_batch=LABEL_BATCH,
+                                        block_shape=BLOCK, workers=2))
+    with pytest.raises(ValueError, match="manifest disagrees"):
+        fit(X, Y, bad, out, worker="b")
+    with pytest.raises(ValueError, match="manifest disagrees"):
+        fit(X * 2.0, Y, make_spec(workers=2), out, worker="c")
+    # Different runtime knobs are solution-neutral: this joiner finishes
+    # the job.
+    res = fit(X, Y, make_spec(workers=3, lease_ttl=9.0, overlap=False),
+              out, worker="d").result
+    assert res.complete
+
+
+def test_divergent_serve_spec_meta_is_creator_wins(xmc_data, tmp_path):
+    """Serving is deliberately not fingerprinted, so a co-worker with a
+    different ServeSpec is admitted — but the manifest's meta.xmc_spec
+    must stay the creator's (settled at init, not last-flush-wins), so
+    the finished checkpoint is deterministic regardless of claim timing."""
+    from repro.specs import ServeSpec
+    from repro.xmc_api import CheckpointHandle
+    X, Y = xmc_data
+    out = str(tmp_path / "serve_meta")
+    base = make_spec(workers=2, lease_ttl=30.0)
+    creator = base.replace(serve=ServeSpec(backend="bsr", k=5))
+    joiner = base.replace(serve=ServeSpec(backend="dense", k=9))
+    fit(X, Y, creator, out, worker="first", max_batches=1)
+    res = fit(X, Y, joiner, out, worker="second").result
+    assert res.complete
+    recovered = CheckpointHandle.open(out).spec
+    assert recovered.serve == creator.serve
+
+
+def test_claim_requires_flock(tmp_path, monkeypatch):
+    """Without POSIX flock the lease protocol has no atomicity: claiming
+    must refuse loudly instead of silently corrupting the shared queue."""
+    import repro.checkpoint.io as io_mod
+    w = BlockSparseWriter(str(tmp_path / "ck"), n_labels=L, n_features=D,
+                          block_shape=BLOCK, label_batch=LABEL_BATCH,
+                          n_batches=2)
+    monkeypatch.setattr(io_mod, "fcntl", None)
+    with pytest.raises(RuntimeError, match="flock"):
+        w.claim_next_batch("a", ttl=30.0)
+
+
+def test_worker_knobs_are_runtime_fields():
+    """workers/lease_ttl never reach checkpoint identity: fingerprints and
+    canonical specs are invariant in them (any worker count must write
+    bit-identical checkpoints)."""
+    base = ScheduleSpec(label_batch=LABEL_BATCH)
+    tuned = ScheduleSpec(label_batch=LABEL_BATCH, workers=8, lease_ttl=7.0)
+    assert tuned.fingerprint() == base.fingerprint()
+    assert tuned.canonical() == base.canonical()
+    assert "workers" not in tuned.fingerprint()
+    with pytest.raises(ValueError, match="workers"):
+        ScheduleSpec(workers=0).validate()
+    with pytest.raises(ValueError, match="lease_ttl"):
+        ScheduleSpec(lease_ttl=0.0).validate()
+
+
+def test_v1_manifest_reads_and_upgrades(xmc_data, single_ckpt, tmp_path):
+    """Backward compatibility: a pre-lease (v1) manifest — no
+    manifest_version, no leases — still loads, and resuming into it
+    upgrades it to v2 in place without disturbing the shards."""
+    import shutil
+    X, Y = xmc_data
+    out = str(tmp_path / "v1")
+    shutil.copytree(single_ckpt, out)
+    path = os.path.join(out, BSR_MANIFEST)
+    with open(path) as f:
+        m = json.load(f)
+    del m["manifest_version"], m["leases"]
+    with open(path, "w") as f:
+        json.dump(m, f)
+
+    model, meta = load_block_sparse(out)          # v1 read path intact
+    np.testing.assert_array_equal(
+        np.asarray(model.to_dense()),
+        np.asarray(load_block_sparse(single_ckpt)[0].to_dense()))
+
+    res = fit(X, Y, make_spec(), out).result      # resume: nothing to solve
+    assert res.complete and res.solved == []
+    m2 = manifest_of(out)
+    assert m2["manifest_version"] == MANIFEST_VERSION
+    assert m2["leases"] == {}
+
+
+def test_claim_ordering_and_exclusion(tmp_path):
+    """Writer-level lease semantics: lowest-first claiming, live leases of
+    other workers are skipped, a worker's own stale lease is reclaimed
+    unless the batch is excluded (still in flight), and commit releases."""
+    w = BlockSparseWriter(str(tmp_path / "ck"), n_labels=L, n_features=D,
+                          block_shape=BLOCK, label_batch=LABEL_BATCH,
+                          n_batches=3)
+    assert w.claim_next_batch("a", ttl=30.0) == 0
+    assert w.claim_next_batch("b", ttl=30.0) == 1      # 0 is leased by a
+    # a's own lease on 0 is excluded while in flight -> next free is 2.
+    assert w.claim_next_batch("a", ttl=30.0, exclude=[0]) == 2
+    # Everything leased: nothing claimable, and the wait is bounded by the
+    # earliest expiry.
+    assert w.claim_next_batch("c", ttl=30.0) is None
+    assert 0.0 < w.claim_wait_seconds() <= 30.0
+    # Crash-restart under the same id (no exclusion): reclaims its own
+    # lease immediately.
+    assert w.claim_next_batch("a", ttl=30.0) == 0
+    # Expiry: an abandoned short lease becomes claimable for anyone.
+    w.release_leases("b", [1])
+    assert w.claim_next_batch("c", ttl=0.01) == 1
+    time.sleep(0.05)
+    assert w.claim_next_batch("d", ttl=30.0) == 1

@@ -1,0 +1,75 @@
+#!/usr/bin/env python3
+"""Docs gate: fail on broken intra-repo links in README.md and docs/*.md.
+
+Checks every markdown link/image target that is not an external URL or a
+pure in-page anchor: the referenced path (resolved relative to the file
+that links it, with any #fragment stripped) must exist in the repo.
+External links are deliberately NOT fetched — this gate must work
+offline and never flake on the network.
+
+Usage: python tools/check_docs.py        (run by tools/verify.sh)
+"""
+
+from __future__ import annotations
+
+import glob
+import os
+import re
+import sys
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+# [text](target) and ![alt](target); target ends at the first unescaped
+# ')' — markdown titles ("... )" syntax) are not used in this repo.
+LINK = re.compile(r"!?\[[^\]]*\]\(([^)\s]+)(?:\s+\"[^\"]*\")?\)")
+EXTERNAL = ("http://", "https://", "mailto:")
+
+
+def doc_files() -> list[str]:
+    return [os.path.join(REPO, "README.md")] + sorted(
+        glob.glob(os.path.join(REPO, "docs", "*.md")))
+
+
+def strip_code(text: str) -> str:
+    """Drop fenced code blocks and inline code spans: example snippets are
+    not link promises."""
+    text = re.sub(r"```.*?```", "", text, flags=re.S)
+    return re.sub(r"`[^`]*`", "", text)
+
+
+def check(path: str) -> list[str]:
+    with open(path) as f:
+        text = strip_code(f.read())
+    errors = []
+    for target in LINK.findall(text):
+        if target.startswith(EXTERNAL) or target.startswith("#"):
+            continue
+        rel = target.split("#", 1)[0]
+        resolved = os.path.normpath(os.path.join(os.path.dirname(path), rel))
+        if not os.path.exists(resolved):
+            errors.append(f"{os.path.relpath(path, REPO)}: broken link "
+                          f"'{target}' -> {os.path.relpath(resolved, REPO)}")
+    return errors
+
+
+def main() -> int:
+    files = doc_files()
+    missing_docs = [f for f in (os.path.join(REPO, "README.md"),)
+                    if not os.path.exists(f)]
+    if missing_docs or not any("docs" in f for f in files):
+        print("check_docs: README.md and docs/*.md must exist")
+        return 1
+    errors = [e for f in files for e in check(f)]
+    for e in errors:
+        print(f"check_docs: {e}")
+    if errors:
+        return 1
+    n_links = sum(
+        1 for f in files for t in LINK.findall(strip_code(open(f).read()))
+        if not t.startswith(EXTERNAL) and not t.startswith("#"))
+    print(f"check_docs: OK ({len(files)} files, {n_links} intra-repo links)")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

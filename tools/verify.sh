@@ -1,13 +1,19 @@
 #!/usr/bin/env bash
-# Repo verification gate: tier-1 tests + benchmark-entrypoint smoke.
+# Repo verification gate: tier-1 tests + benchmark-entrypoint smoke + docs.
 #
-#   tools/verify.sh            # full tier-1 pytest + benchmark smoke
+#   tools/verify.sh            # tier-1 pytest + benchmark smoke + docs gate
 #   tools/verify.sh --fast     # tier-1 pytest only
 #
 # The smoke leg runs `benchmarks.run --smoke` (train_pipeline +
 # tron_hotpath + serve_latency on tiny shapes) so the benchmark
 # entrypoints cannot silently rot: they import, run end-to-end, and keep
 # their bit-identity assertions live on every change.
+#
+# The docs gate keeps the documentation surface honest: every intra-repo
+# link in README.md and docs/*.md must resolve (tools/check_docs.py), and
+# the README's quickstart path must actually run (examples/quickstart.py
+# --smoke exercises spec -> fit -> reopen -> serve -> warm-start
+# end-to-end on tiny shapes).
 
 set -euo pipefail
 cd "$(dirname "$0")/.."
@@ -20,6 +26,11 @@ if [[ "${1:-}" != "--fast" ]]; then
     echo
     echo "== benchmark smoke (train_pipeline + tron_hotpath + serve_latency) =="
     python -m benchmarks.run --smoke
+
+    echo
+    echo "== docs gate (link check + quickstart smoke) =="
+    python tools/check_docs.py
+    python examples/quickstart.py --smoke
 fi
 
 echo
