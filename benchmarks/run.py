@@ -15,8 +15,12 @@ Modules (deliverable d):
   table_prediction_speed SS4.3 (prediction latency + BSR flops ratio)
   c_validation_sweep     SS3.3 (C tuned on validation) + shard balance
   train_pipeline         streaming label-batch training: throughput/mem/resume
+                         (+ per-device peak-memory counters)
   tron_hotpath           CG matmul accounting + scheduler-overlap wall clock
-  serve_latency          serving-engine p50/p99 per predict backend
+  serve_latency          serving-engine p50/p99 per predict backend, plus the
+                         shortlist-vs-exhaustive sub-linear gate (candidate
+                         fraction < 25% at recall@5 >= 0.95) — live in
+                         --smoke, so tools/verify.sh gates it
   roofline               deliverable (g): 3-term roofline from the dry-run
 """
 

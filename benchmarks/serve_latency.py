@@ -1,11 +1,26 @@
-"""Serving latency benchmark: p50/p99 per predict backend.
+"""Serving latency benchmark: p50/p99 per predict backend, plus the
+shortlist-vs-exhaustive sub-linear serving gate.
 
-Drives the same ragged request stream through each `repro.serve.XMCEngine`
-backend (dense / bsr / sharded) from one shared sparse checkpoint, and
-emits a `BENCH_serve.json` line per backend with latency percentiles,
-throughput, and the model's block density. This is the serving-side
-companion of table_prediction_speed (which measures raw predict calls
-without the queue/bucketing layer).
+Part 1 drives the same ragged request stream through each
+`repro.serve.XMCEngine` backend (dense / bsr / sharded / shortlist) from
+one shared sparse checkpoint and emits a `BENCH_serve.json` line per
+backend. Requests run CLOSED LOOP — one submit + step per request — so
+every request contributes its own latency sample and the percentiles are
+real order statistics over n_requests samples, not one batched-drain
+timestamp smeared across every request (the old scheme made
+p50 == p90 == p99 by construction).
+
+Part 2 is the sub-linear serving gate: a second, finer-row-block demo
+checkpoint (enough row blocks for a meaningful candidate stage) is served
+by the shortlist backend against exhaustive BSR on identical requests, and
+the emitted row records recall@k vs exhaustive, the candidate fraction
+B / n_row_blocks, and the measured fine-stage FLOP fraction (gathered
+blocks vs all packed blocks). The run asserts candidate fraction < 25%
+at recall@k >= 0.95 — the acceptance criterion of the shortlist PR, live
+in --smoke so tools/verify.sh gates it.
+
+This is the serving-side companion of table_prediction_speed (which
+measures raw predict calls without the queue/bucketing layer).
 """
 
 from __future__ import annotations
@@ -24,17 +39,73 @@ from repro.xmc_api import CheckpointHandle
 OUT_JSON = "BENCH_serve.json"
 
 N_REQUESTS = 64
+N_REQUESTS_SMOKE = 32                  # enough samples for distinct p50/p90
 MAX_ROWS = 8
 K = 5
 
+# Part 2's finer-block demo model: the default serving checkpoint tiles
+# labels into 128-row blocks, which leaves the smoke model (64 labels) ONE
+# row block — nothing to shortlist. These dims give R = 16 row blocks in
+# both profiles, so a B-of-R candidate stage is measurable. The data knobs
+# make the label space cluster-ordered (overlapping adjacent signature
+# pools, co-occurring labels adjacent) — the regime real XMC candidate
+# stages serve, where label orderings come from trees/clusters. With fully
+# independent labels a query's top-k tail is unstructured noise that NO
+# candidate stage can cover.
+CLUSTER_DATA = dict(pool_stride=2, label_locality=0.9, multi_label_p=0.9)
+SHORTLIST_DEMO = dict(n_train=800, n_test=512, n_features=4096,
+                      n_labels=512, label_batch=128, block_shape=(32, 128),
+                      data_kwargs=CLUSTER_DATA)
+SHORTLIST_DEMO_SMOKE = dict(n_train=240, n_test=64, n_features=1024,
+                            n_labels=128, label_batch=64,
+                            block_shape=(8, 128), data_kwargs=CLUSTER_DATA)
+SHORTLIST_B = 3                        # candidate blocks: 3/16 = 18.75% < 25%
+RECALL_GATE = 0.95
+FRACTION_GATE = 0.25
+
+
+def make_requests(X: np.ndarray, n_requests: int, seed: int = 0,
+                  max_rows: int = MAX_ROWS):
+    rng = np.random.default_rng(seed)
+    requests = []
+    for _ in range(n_requests):
+        n_i = int(rng.integers(1, max_rows + 1))
+        requests.append(X[rng.integers(0, X.shape[0], size=n_i)])
+    return requests
+
+
+def serve_closed_loop(engine, requests):
+    """One submit + drain per request: each request is dispatched alone and
+    lands one latency sample, so percentiles are per-request order
+    statistics. Returns (results, wall_seconds)."""
+    results = []
+    t0 = time.time()
+    for x in requests:
+        engine.submit(x)
+        results.extend(engine.step())
+    return results, time.time() - t0
+
+
+def recall_at_k(reference, candidate) -> float:
+    """Mean fraction of the reference engine's top-k label set the
+    candidate engine recovered, per instance."""
+    hits, total = 0, 0
+    for ref, got in zip(reference, candidate):
+        for row_ref, row_got in zip(ref.labels, got.labels):
+            hits += len(set(row_ref.tolist()) & set(row_got.tolist()))
+            total += len(row_ref)
+    return hits / total
+
 
 def main(smoke: bool = False):
-    n_requests = 8 if smoke else N_REQUESTS
+    n_requests = N_REQUESTS_SMOKE if smoke else N_REQUESTS
     demo = (dict(n_train=200, n_test=64, n_features=512, n_labels=64,
                  label_batch=32) if smoke else
             dict(n_train=800, n_test=512, n_features=4096, n_labels=256,
                  label_batch=128))
     rows_out = []
+
+    # -- part 1: latency per backend on the shared demo checkpoint --------
     with tempfile.TemporaryDirectory() as ckpt:
         # Shared demo pipeline (spec-driven fit) — the same setup behind
         # launch/serve.py --xmc and examples/serve_xmc.py. The handle
@@ -43,24 +114,18 @@ def main(smoke: bool = False):
         handle = CheckpointHandle.open(ckpt)
         bsr, _ = handle.model()
 
-        rng = np.random.default_rng(0)
-        X = np.asarray(data.X_test, np.float32)
-        requests = []
-        for _ in range(n_requests):
-            n_i = int(rng.integers(1, MAX_ROWS + 1))
-            rows = rng.integers(0, X.shape[0], size=n_i)
-            requests.append(X[rows])
+        requests = make_requests(np.asarray(data.X_test, np.float32),
+                                 n_requests)
         n_inst = sum(r.shape[0] for r in requests)
 
         for kind in BACKENDS:
             t0 = time.time()
             engine = handle.engine(ServeSpec(backend=kind, k=K))
             t_load = time.time() - t0
-            t0 = time.time()
-            results = engine.serve(requests)
-            wall = time.time() - t0
+            results, wall = serve_closed_loop(engine, requests)
             stats = engine.latency_summary()
             assert len(results) == n_requests
+            assert stats["count"] == n_requests
             rec = {"bench": "serve_latency", "backend": kind, "smoke": smoke,
                    "n_requests": n_requests, "n_instances": n_inst,
                    "k": K, "block_density": bsr.density,
@@ -77,8 +142,87 @@ def main(smoke: bool = False):
     print_table("serving latency per backend "
                 f"({n_requests} ragged requests, {n_inst} instances, k={K})",
                 rows_out, ["backend", "p50_ms", "p99_ms", "mean_ms", "inst/s"])
+
+    # -- part 2: shortlist vs exhaustive on the finer-block checkpoint ----
+    from repro.kernels.bsr_predict import ops as bsr_ops
+
+    demo2 = SHORTLIST_DEMO_SMOKE if smoke else SHORTLIST_DEMO
+    with tempfile.TemporaryDirectory() as ckpt:
+        data, _ = train_demo_checkpoint(ckpt, seed=0, **demo2)
+        handle = CheckpointHandle.open(ckpt)
+        model, _ = handle.model()
+        # Single-instance requests: block selection is per-micro-batch, so
+        # this measures the per-QUERY candidate stage — the latency-serving
+        # regime the sub-linear gate is about. Co-batching unrelated
+        # queries shares one B-block shortlist across all of them; widen
+        # shortlist_blocks accordingly for throughput-batched serving.
+        requests = make_requests(np.asarray(data.X_test, np.float32),
+                                 n_requests, seed=1, max_rows=1)
+        n_inst = sum(r.shape[0] for r in requests)
+
+        ex_engine = handle.engine(ServeSpec(backend="bsr", k=K))
+        ex_results, ex_wall = serve_closed_loop(ex_engine, requests)
+        ex_stats = ex_engine.latency_summary()
+
+        sl_engine = handle.engine(
+            ServeSpec(backend="shortlist", k=K,
+                      shortlist_blocks=SHORTLIST_B))
+        backend = sl_engine.backend
+        assert backend.name == "shortlist", \
+            "demo checkpoint is missing its shortlist artifact"
+        sl_results, sl_wall = serve_closed_loop(sl_engine, requests)
+        sl_stats = sl_engine.latency_summary()
+
+        recall = recall_at_k(ex_results, sl_results)
+        fraction = backend.candidate_fraction
+        # Measured fine-stage work: FLOPs of the gathered blocks each
+        # request actually scored vs exhaustive scoring of every packed
+        # block — per-query compute proportional to B * block_size, not L.
+        fine = sum(bsr_ops.gather_flops(model, r.shape[0],
+                                        backend.select_blocks(r))
+                   for r in requests)
+        exhaustive = sum(bsr_ops.model_flops(model, r.shape[0])
+                         for r in requests)
+        rec = {"bench": "serve_latency", "backend": "shortlist_vs_bsr",
+               "smoke": smoke, "n_requests": n_requests,
+               "n_instances": n_inst, "k": K,
+               "n_labels": demo2["n_labels"],
+               "n_row_blocks": backend.artifact.n_row_blocks,
+               "shortlist_blocks": backend.B,
+               "candidate_fraction": fraction,
+               "recall_at_k": recall,
+               "fine_flops": fine, "exhaustive_flops": exhaustive,
+               "fine_flops_frac": fine / exhaustive,
+               "p50_ms_shortlist": sl_stats["p50_ms"],
+               "p50_ms_exhaustive": ex_stats["p50_ms"],
+               "mean_ms_shortlist": sl_stats["mean_ms"],
+               "mean_ms_exhaustive": ex_stats["mean_ms"],
+               "throughput_inst_per_s_shortlist": n_inst / sl_wall,
+               "throughput_inst_per_s_exhaustive": n_inst / ex_wall}
+        emit_json(OUT_JSON, rec)
+        print_table(
+            f"shortlist vs exhaustive (L={demo2['n_labels']}, "
+            f"R={backend.artifact.n_row_blocks} row blocks, B={backend.B})",
+            [{"scoring": "exhaustive bsr", "p50_ms": ex_stats["p50_ms"],
+              "mean_ms": ex_stats["mean_ms"], "flops_frac": 1.0,
+              "recall@k": 1.0},
+             {"scoring": "shortlist", "p50_ms": sl_stats["p50_ms"],
+              "mean_ms": sl_stats["mean_ms"],
+              "flops_frac": fine / exhaustive, "recall@k": recall}],
+            ["scoring", "p50_ms", "mean_ms", "flops_frac", "recall@k"])
+
+        # The PR's acceptance gate, live in CI (tools/verify.sh --smoke).
+        assert fraction < FRACTION_GATE, \
+            f"candidate fraction {fraction:.3f} not sub-linear (< 25%)"
+        assert recall >= RECALL_GATE, \
+            f"recall@{K} {recall:.3f} below the {RECALL_GATE} gate"
+
     print(f"\nwrote {OUT_JSON}")
 
 
 if __name__ == "__main__":
-    main()
+    import argparse
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true")
+    args = ap.parse_args()
+    main(smoke=args.smoke)

@@ -24,7 +24,12 @@ Compares three ways of training the same DiSMEC model (train/xmc.py):
 
 Device memory is sampled between batches as the total bytes of live jax
 arrays (plus the analytic TRON working set ~9 arrays of the solve shape,
-which bounds the in-solve peak). Emits one BENCH_train.json line per mode.
+which bounds the in-solve peak). Each record also carries the runtime
+allocator's true per-device peaks (`device_peak_mb`, from
+`device.memory_stats()["peak_bytes_in_use"]`) — on accelerators these see
+the transient in-solve allocations live-array sampling cannot; on CPU the
+allocator exposes no stats and the field is None per device. Emits one
+BENCH_train.json line per mode.
 
 Usage: PYTHONPATH=src python -m benchmarks.train_pipeline
 """
@@ -67,6 +72,27 @@ TRON_ARRAYS = 9
 
 def live_mb() -> float:
     return sum(b.nbytes for b in jax.live_arrays()) / 1e6
+
+
+def device_peak_mb() -> list[dict]:
+    """True per-device peak memory from the runtime allocator, one entry
+    per jax device. `live_mb` sums the bytes of currently-live arrays —
+    it cannot see transient allocations inside a jitted solve; the
+    allocator's `peak_bytes_in_use` can. The peak is cumulative over the
+    process (allocators don't rewind), so per-mode rows report the peak
+    AS OF that mode's end. Backends without allocator stats (CPU) report
+    `peak_mb: None` — the analytic `solve_working_set_mb` remains the
+    bound there."""
+    out = []
+    for d in jax.devices():
+        try:
+            stats = d.memory_stats()
+        except Exception:                 # backend without allocator stats
+            stats = None
+        peak = (stats or {}).get("peak_bytes_in_use")
+        out.append({"device": str(d),
+                    "peak_mb": None if peak is None else peak / 1e6})
+    return out
 
 
 def solve_peak_mb(rows: int, d: int) -> float:
@@ -125,7 +151,8 @@ def main(smoke: bool = False):
                "labels_per_s": labels_solved / wall,
                "peak_live_mb": peak_sampled,
                "solve_working_set_mb": solve_peak_mb(rows_solve, n_features),
-               "baseline_live_mb": base_mb}
+               "baseline_live_mb": base_mb,
+               "device_peak_mb": device_peak_mb()}
         rec.update(extra or {})
         emit_json(OUT_JSON, rec)
         rows_out.append({"mode": mode, "wall_s": wall,

@@ -53,8 +53,14 @@ def serve_xmc():
             i += n_i
 
         served = {}
+        n_rb = int(np.asarray(bsr.row_ptr).shape[0]) - 1
         for kind in BACKENDS:
-            engine = handle.engine(ServeSpec(backend=kind, k=5))
+            # Full-width shortlist (B = all row blocks) is bit-exact vs
+            # exhaustive BSR, so it joins the agreement check; the
+            # sub-linear B-of-R trade is gated in benchmarks/serve_latency.
+            spec = (ServeSpec(backend=kind, k=5, shortlist_blocks=n_rb)
+                    if kind == "shortlist" else ServeSpec(backend=kind, k=5))
+            engine = handle.engine(spec)
             results = engine.serve(requests)
             stats = engine.latency_summary()
             idx = np.concatenate([r.labels for r in results], axis=0)

@@ -90,11 +90,47 @@ def save_pytree(tree, directory: str, *, sparse_threshold: float = 0.5):
 
 BSR_ARRAYS = "bsr_arrays.npz"
 BSR_INDEX = "bsr_index.json"
+SHORTLIST_FILE = "shortlist.npz"
+
+
+def save_shortlist(directory: str, artifact) -> dict:
+    """Persist a `serve.shortlist.ShortlistArtifact` next to the BSR arrays
+    (tmp + atomic rename — cooperative finalizers may race, and both write
+    identical bytes). Returns the entry the index/manifest references."""
+    path = os.path.join(directory, SHORTLIST_FILE)
+    tmp = path + ".tmp.npz"
+    np.savez_compressed(
+        tmp,
+        centroids=np.asarray(artifact.centroids, np.float32),
+        block_rows=np.int32(artifact.block_rows),
+        n_labels=np.int32(artifact.n_labels),
+        stat=np.str_(artifact.stat))
+    os.replace(tmp, path)
+    return {"file": SHORTLIST_FILE,
+            "n_row_blocks": artifact.n_row_blocks,
+            "block_rows": int(artifact.block_rows),
+            "stat": artifact.stat}
+
+
+def load_shortlist(directory: str):
+    """The shortlist artifact of a checkpoint, or None when the checkpoint
+    predates two-stage scoring (legacy checkpoints serve exhaustively)."""
+    path = os.path.join(directory, SHORTLIST_FILE)
+    if not os.path.exists(path):
+        return None
+    from repro.serve.shortlist import ShortlistArtifact  # deferred: no cycle
+    data = np.load(path, allow_pickle=False)
+    return ShortlistArtifact(centroids=np.asarray(data["centroids"]),
+                             block_rows=int(data["block_rows"]),
+                             n_labels=int(data["n_labels"]),
+                             stat=str(data["stat"]))
 
 
 def save_block_sparse(model, directory: str, *, meta: dict | None = None):
     """Write a `BlockSparseModel` (+ optional serving metadata such as
-    n_labels / delta) as one .npz + JSON index under `directory`."""
+    n_labels / delta) as one .npz + JSON index under `directory`, plus the
+    shortlist artifact for two-stage serving."""
+    from repro.serve.shortlist import build_shortlist    # deferred: no cycle
     os.makedirs(directory, exist_ok=True)
     np.savez_compressed(
         os.path.join(directory, BSR_ARRAYS),
@@ -110,6 +146,7 @@ def save_block_sparse(model, directory: str, *, meta: dict | None = None):
         "n_blocks": model.n_blocks,
         "dtype": str(np.asarray(model.blocks).dtype),
         "meta": dict(meta or {}),
+        "shortlist": save_shortlist(directory, build_shortlist(model)),
     }
     with open(os.path.join(directory, BSR_INDEX), "w") as f:
         json.dump(index, f, indent=1)
@@ -280,6 +317,8 @@ class BlockSparseWriter:
         self.manifest["complete"] = disk.get("complete", False)
         self.manifest["meta"] = disk.get("meta", self.manifest.get("meta",
                                                                    {}))
+        if "shortlist" in disk:          # built by whichever worker finalized
+            self.manifest["shortlist"] = disk["shortlist"]
 
     @contextmanager
     def _locked(self, write: bool = True):
@@ -428,7 +467,15 @@ class BlockSparseWriter:
         """Mark the checkpoint servable if every batch is present (clearing
         the lease table); None while batches are still missing. Idempotent
         — with cooperative workers, whichever one drains the last batch
-        finalizes, and a second call is a no-op."""
+        finalizes, and a second call is a no-op.
+
+        Finalizing also builds the serving shortlist artifact
+        (serve/shortlist.py) from the stitched shards and references it in
+        the manifest — the coarse stage of two-stage scoring, computed once
+        offline like the paper's model files. Deterministic in the shards,
+        so cooperative finalizers (or a re-finalize after a crash between
+        the two flushes) write identical bytes.
+        """
         with manifest_lock(self.directory):
             self._reload()
             missing = (set(range(self.manifest["n_batches"]))
@@ -438,6 +485,15 @@ class BlockSparseWriter:
             self.manifest["complete"] = True
             self.manifest["leases"] = {}
             self._flush()
+            if "shortlist" not in self.manifest:
+                # Stitch via the normal loader (reads the just-flushed
+                # complete manifest from disk) and persist the artifact
+                # before the manifest entry that references it lands.
+                from repro.serve.shortlist import build_shortlist
+                model, _ = load_block_sparse(self.directory)
+                self.manifest["shortlist"] = save_shortlist(
+                    self.directory, build_shortlist(model))
+                self._flush()
             return self.manifest
 
     def finalize(self) -> dict:

@@ -66,9 +66,10 @@ def power_law_sizes(L: int, n1: int, beta: float) -> np.ndarray:
 def make_xmc_dataset(*, n_train: int = 2000, n_test: int = 500,
                      n_features: int = 4096, n_labels: int = 256,
                      beta: float = 1.0, n1: int | None = None,
-                     pool_size: int = 6, sig_per_label: int = 3,
+                     pool_size: int = 6, pool_stride: int | None = None,
+                     sig_per_label: int = 3,
                      bg_per_doc: int = 10, label_noise: float = 0.05,
-                     multi_label_p: float = 0.3,
+                     multi_label_p: float = 0.3, label_locality: float = 0.0,
                      seed: int = 0, name: str = "synthetic") -> XMCDataset:
     """Generate a power-law XMC problem by a topic-model-like process.
 
@@ -77,16 +78,31 @@ def make_xmc_dataset(*, n_train: int = 2000, n_test: int = 500,
     and `bg_per_doc` Zipf-distributed background features. With probability
     `label_noise` a signature feature is swapped for a random one (makes tail
     labels imperfectly separable, as in real data).
+
+    `pool_stride` spaces consecutive labels' signature pools. The default
+    (pool_size) keeps pools disjoint: every label is independent. A stride
+    below pool_size overlaps neighboring pools, so adjacent label ids score
+    similarly on the same instances — a cluster-ordered label space like the
+    tree/cluster orderings real XMC pipelines serve, which is the regime a
+    contiguous-row-block candidate stage (serve/shortlist.py) targets.
+
+    `label_locality` is the probability that each EXTRA label of a
+    multi-label instance is drawn adjacent (within +-2) to the instance's
+    first label instead of independently. 0 (default) keeps co-occurring
+    labels independent; near 1 makes them cluster-adjacent, which is how
+    co-occurring labels land in a cluster-ordered label space.
     """
     rng = np.random.default_rng(seed)
     N = n_train + n_test
     D, L = n_features, n_labels
 
-    # Feature space: the first L*pool_size ids are signature features
-    # (disjoint pools), the rest are background vocabulary.
-    assert D > L * pool_size + 32, "need room for background vocabulary"
-    pools = np.arange(L * pool_size).reshape(L, pool_size)
-    bg_lo = L * pool_size
+    # Feature space: the first bg_lo ids are signature features (pools laid
+    # out `stride` apart), the rest are background vocabulary.
+    stride = pool_size if pool_stride is None else int(pool_stride)
+    assert 1 <= stride <= pool_size, "pool_stride must be in [1, pool_size]"
+    bg_lo = (L - 1) * stride + pool_size
+    assert D > bg_lo + 32, "need room for background vocabulary"
+    pools = np.arange(L)[:, None] * stride + np.arange(pool_size)[None, :]
     n_bg = D - bg_lo
 
     # Power-law label sampling weights (Eq. 1.1), random rank assignment.
@@ -99,9 +115,21 @@ def make_xmc_dataset(*, n_train: int = 2000, n_test: int = 500,
     Y = np.zeros((N, L), np.int8)
     zipf_bg = (rng.zipf(1.4, size=(N, bg_per_doc)) - 1) % n_bg + bg_lo
 
+    offsets = np.array([-2, -1, 1, 2])
     for i in range(N):
         k = 1 + rng.binomial(2, multi_label_p)
-        labs = rng.choice(L, size=k, replace=False, p=p_label)
+        if label_locality > 0.0 and k > 1:
+            base = int(rng.choice(L, p=p_label))
+            chosen = {base}
+            while len(chosen) < k:
+                if rng.random() < label_locality:
+                    chosen.add(int(np.clip(base + rng.choice(offsets),
+                                           0, L - 1)))
+                else:
+                    chosen.add(int(rng.choice(L, p=p_label)))
+            labs = np.array(sorted(chosen))
+        else:
+            labs = rng.choice(L, size=k, replace=False, p=p_label)
         Y[i, labs] = 1
         for l in labs:
             sig = rng.choice(pools[l], size=sig_per_label, replace=False)

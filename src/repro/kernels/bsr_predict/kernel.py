@@ -65,3 +65,73 @@ def bsr_predict_pallas(x: jax.Array, blocks: jax.Array, block_rows: jax.Array,
         out_shape=jax.ShapeDtypeStruct((n, n_row_blocks * bl), jnp.float32),
         interpret=interpret,
     )(block_rows, block_cols, x, blocks)
+
+
+def _bsr_gather_kernel(sel_ref, rptr_ref, cols_ref, x_ref, blk_ref, o_ref):
+    """Grid step (i, j): j-th packed block of selected row block sel[i].
+
+    o[:, i-th tile] += x[:, cols[ptr]] @ blocks[ptr]^T  for
+    ptr = row_ptr[sel[i]] + j, gated on j < blocks-in-row — padding steps
+    (rows shorter than the grid's max) fetch a clamped tile and add nothing.
+    The output tile is zero-initialized at j == 0 unconditionally, so a
+    selected row block with NO surviving blocks yields exact-zero scores —
+    the same pruned-label convention as the exhaustive path.
+    """
+    del cols_ref
+    i, j = pl.program_id(0), pl.program_id(1)
+    r = sel_ref[i]
+
+    @pl.when(j == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    @pl.when(rptr_ref[r] + j < rptr_ref[r + 1])
+    def _acc():
+        o_ref[...] += jax.lax.dot_general(
+            x_ref[...].astype(jnp.float32), blk_ref[0].astype(jnp.float32),
+            (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32)
+
+
+def bsr_predict_gather_pallas(x: jax.Array, blocks: jax.Array,
+                              block_cols: jax.Array, row_ptr: jax.Array,
+                              sel: jax.Array, max_blocks_per_row: int,
+                              *, interpret: bool = True) -> jax.Array:
+    """Gathered-block BSR predict: score only the row blocks listed in `sel`.
+
+    x (n, Dp), blocks (nb, bl, bd) row-major packed, row_ptr (R + 1,),
+    sel (B,) int32 row-block ids (any order, no duplicates) -> scores
+    (n, B * bl), where columns [i*bl, (i+1)*bl) are the scores of row block
+    sel[i]'s labels. `max_blocks_per_row` bounds the inner grid dimension
+    (static: max(row_ptr[r+1] - row_ptr[r]) over all row blocks, >= 1).
+
+    Both BlockSpec index maps clamp the packed pointer to nb - 1 so padding
+    grid steps (j beyond a short row's block count) fetch a valid tile; the
+    kernel body gates their accumulation off. Compute and HBM traffic scale
+    with the selected blocks, not with L.
+    """
+    n = x.shape[0]
+    nb, bl, bd = blocks.shape
+    B = sel.shape[0]
+
+    def _ptr(i, j, sel_a, rptr_a, cols_a):
+        return jnp.minimum(rptr_a[sel_a[i]] + j, nb - 1)
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=3,
+        grid=(B, max_blocks_per_row),
+        in_specs=[
+            pl.BlockSpec((n, bd),
+                         lambda i, j, sel_a, rptr_a, cols_a:
+                         (0, cols_a[_ptr(i, j, sel_a, rptr_a, cols_a)])),
+            pl.BlockSpec((1, bl, bd),
+                         lambda i, j, sel_a, rptr_a, cols_a:
+                         (_ptr(i, j, sel_a, rptr_a, cols_a), 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((n, bl),
+                               lambda i, j, sel_a, rptr_a, cols_a: (0, i)),
+    )
+    return pl.pallas_call(
+        _bsr_gather_kernel, grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((n, B * bl), jnp.float32),
+        interpret=interpret,
+    )(sel, row_ptr, block_cols, x, blocks)

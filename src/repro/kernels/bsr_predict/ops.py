@@ -4,6 +4,12 @@
 fuses it with the blocked Pallas top-k (kernels/topk) into the serving
 entry point used by `repro.serve.xmc.BsrBackend` — scores never leave the
 padded block coordinate system before being reduced to k candidates.
+
+`bsr_predict_gather` / `bsr_predict_gather_topk` are the shortlist-gated
+variants (serve/shortlist.py): given a per-batch list of selected row
+blocks they score ONLY those blocks' packed tiles, so per-query compute
+scales with B * block_size instead of L. With the selection covering all
+row blocks (sorted) they reproduce the exhaustive path bit-for-bit.
 """
 
 from __future__ import annotations
@@ -13,7 +19,8 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core.pruning import BlockSparseModel
-from repro.kernels.bsr_predict.kernel import bsr_predict_pallas
+from repro.kernels.bsr_predict.kernel import (bsr_predict_gather_pallas,
+                                              bsr_predict_pallas)
 from repro.kernels.topk.kernel import NEG_INF
 
 
@@ -55,6 +62,76 @@ def bsr_predict_topk(x: jax.Array, model: BlockSparseModel, k: int,
         ids = jnp.arange(Lp)
         scores = jnp.where(ids[None, :] < n_labels, scores, NEG_INF)
     return topk_ops.topk(scores, k, interpret=interpret)
+
+
+def max_blocks_per_row(model: BlockSparseModel) -> int:
+    """Static bound on packed blocks per row block (>= 1) — the inner grid
+    extent of the gathered-block kernel."""
+    ptr = np.asarray(model.row_ptr)
+    return max(1, int(np.max(ptr[1:] - ptr[:-1])))
+
+
+def bsr_predict_gather(x: jax.Array, model: BlockSparseModel,
+                       sel: jax.Array, *,
+                       max_per_row: int | None = None,
+                       interpret: bool = True) -> jax.Array:
+    """Scores for ONLY the row blocks listed in `sel` (B,) int32.
+
+    Returns (n, B * bl): columns [i*bl, (i+1)*bl) are row block sel[i]'s
+    label scores. Pads x's feature dim like `bsr_predict`; a selected row
+    block with no surviving blocks comes back exact-zero (the kernel
+    zero-initializes every selected output tile), so pruned labels keep
+    the dense path's score convention without any extra masking.
+    """
+    Lp, Dp = model.shape
+    n, D = x.shape
+    if D < Dp:
+        x = jnp.pad(x, ((0, 0), (0, Dp - D)))
+    if max_per_row is None:
+        max_per_row = max_blocks_per_row(model)
+    return bsr_predict_gather_pallas(
+        x, model.blocks, model.block_cols, model.row_ptr,
+        jnp.asarray(sel, jnp.int32), max_per_row, interpret=interpret)
+
+
+def bsr_predict_gather_topk(x: jax.Array, model: BlockSparseModel,
+                            sel: jax.Array, k: int, *,
+                            n_labels: int | None = None,
+                            max_per_row: int | None = None,
+                            interpret: bool = True,
+                            ) -> tuple[jax.Array, jax.Array]:
+    """Fused gathered predict -> top-k over the shortlisted labels only.
+
+    (vals, idx) each (n, k); idx in TRUE label ids (candidates translated
+    back through `sel`). Padding labels (global id >= n_labels) are masked
+    to -inf between the kernels. With `sel` sorted ascending and covering
+    every row block this reproduces `bsr_predict_topk` exactly, tie order
+    included — the B-covers-all equivalence the shortlist backend tests
+    gate on.
+    """
+    from repro.kernels.topk import ops as topk_ops   # deferred: no cycle
+
+    bl = model.block_shape[0]
+    sel = jnp.asarray(sel, jnp.int32)
+    scores = bsr_predict_gather(x, model, sel, max_per_row=max_per_row,
+                                interpret=interpret)
+    # Candidate column -> true label id, used both to mask block padding
+    # and to translate the merged top-k back to label coordinates.
+    label_ids = (sel[:, None] * bl + jnp.arange(bl)[None, :]).reshape(-1)
+    if n_labels is not None:
+        scores = jnp.where(label_ids[None, :] < n_labels, scores, NEG_INF)
+    vals, idx = topk_ops.topk(scores, k, interpret=interpret)
+    return vals, jnp.take(label_ids, idx)
+
+
+def gather_flops(model: BlockSparseModel, n: int, sel: np.ndarray) -> int:
+    """FLOPs the gathered fine stage actually executes for one batch:
+    2 * n * bl * bd per surviving block of the selected row blocks."""
+    bl, bd = model.block_shape
+    ptr = np.asarray(model.row_ptr)
+    sel = np.asarray(sel)
+    n_sel_blocks = int((ptr[sel + 1] - ptr[sel]).sum())
+    return 2 * n * bl * bd * n_sel_blocks
 
 
 def model_flops(model: BlockSparseModel, n: int) -> int:

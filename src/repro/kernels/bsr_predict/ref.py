@@ -12,3 +12,15 @@ from repro.core.pruning import BlockSparseModel
 def bsr_predict(x: jax.Array, model: BlockSparseModel) -> jax.Array:
     W = model.to_dense()
     return x.astype(jnp.float32) @ W.T.astype(jnp.float32)
+
+
+def bsr_predict_gather(x: jax.Array, model: BlockSparseModel,
+                       sel: jax.Array) -> jax.Array:
+    """Oracle for the gathered-block kernel: dense scores against the
+    densified model, with the selected row blocks' label columns gathered
+    into (n, B * bl) in `sel` order."""
+    bl = model.block_shape[0]
+    scores = bsr_predict(x, model)                       # (n, Lp)
+    cols = (jnp.asarray(sel, jnp.int32)[:, None] * bl
+            + jnp.arange(bl)[None, :]).reshape(-1)       # (B * bl,)
+    return scores[:, cols]

@@ -52,7 +52,8 @@ def serve_xmc(args) -> None:
     # serving half of it for this session.
     handle = CheckpointHandle.open(args.ckpt)
     engine = handle.engine(
-        handle.spec.serve.replace(backend=args.backend, k=args.k))
+        handle.spec.serve.replace(backend=args.backend, k=args.k,
+                                  shortlist_blocks=args.shortlist_blocks))
     print(f"[xmc] backend={args.backend} loaded+warmed in "
           f"{time.time() - t0:.1f}s "
           f"(L={engine.backend.n_labels}, k={engine.backend.k})")
@@ -116,6 +117,9 @@ def main() -> None:
     ap.add_argument("--ckpt", default="/tmp/repro_xmc_ckpt",
                     help="XMC mode: sparse checkpoint directory")
     ap.add_argument("--k", type=int, default=5)
+    ap.add_argument("--shortlist-blocks", type=int, default=None,
+                    help="XMC mode, shortlist backend: candidate row blocks "
+                         "B per micro-batch (default: artifact's ~1/8)")
     ap.add_argument("--requests", type=int, default=32)
     ap.add_argument("--max-request-rows", type=int, default=8)
     ap.add_argument("--features", type=int, default=4096)

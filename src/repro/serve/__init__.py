@@ -1,21 +1,29 @@
 """Serving subsystem: two engines over one shared batching layer.
 
-  engine   — LM decode serving (prefill + decode_step loops).
-  xmc      — XMC top-k label serving over a registry of pluggable predict
-             backends (dense / BSR-Pallas / mesh-sharded built in;
-             `register_backend` adds more). The spec-driven way to build
-             an engine is `repro.xmc_api.CheckpointHandle.engine()`.
-  batching — request-side machinery both engines share: ragged padding,
-             size-bucketed micro-batch queue, latency accounting.
+  engine    — LM decode serving (prefill + decode_step loops).
+  xmc       — XMC top-k label serving over a registry of pluggable predict
+              backends (dense / BSR-Pallas / mesh-sharded / shortlist built
+              in; `register_backend` adds more). The spec-driven way to
+              build an engine is `repro.xmc_api.CheckpointHandle.engine()`.
+  shortlist — the coarse candidate stage of two-stage scoring: row-block
+              centroids built from the packed BSR checkpoint, persisted by
+              checkpoint/io.py, consumed by the "shortlist" backend.
+  batching  — request-side machinery both engines share: ragged padding,
+              size-bucketed micro-batch queue, latency accounting.
 """
 
 from repro.serve.engine import generate, serve_batch
+from repro.serve.shortlist import ShortlistArtifact, build_shortlist
 from repro.serve.xmc import (BACKENDS, BsrBackend, DenseBackend,
-                             PredictBackend, ShardedBackend, XMCEngine,
-                             XMCResult, available_backends, make_backend,
-                             register_backend, unregister_backend)
+                             PredictBackend, ShardedBackend,
+                             ShortlistBackend, XMCEngine, XMCResult,
+                             available_backends, make_backend,
+                             register_backend, reset_warmup_cache,
+                             unregister_backend, warmup_cache_stats)
 
 __all__ = ["generate", "serve_batch", "XMCEngine", "XMCResult",
            "PredictBackend", "DenseBackend", "BsrBackend", "ShardedBackend",
+           "ShortlistBackend", "ShortlistArtifact", "build_shortlist",
            "make_backend", "BACKENDS", "register_backend",
-           "unregister_backend", "available_backends"]
+           "unregister_backend", "available_backends",
+           "reset_warmup_cache", "warmup_cache_stats"]

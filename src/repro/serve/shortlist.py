@@ -1,0 +1,105 @@
+"""Shortlist layer: per-row-block coarse scoring for sub-linear serving.
+
+Every exhaustive `PredictBackend` scores all L labels per query — the wall
+between this reproduction and the paper's 670k-label regime at production
+traffic. Both XMC surveys in PAPERS.md document a candidate-selection stage
+as the standard path to sub-linear inference; this module is that stage,
+shaped for the packed BSR artifact the rest of the repo already serves:
+
+  * The *unit of shortlisting is the BSR row block* (bl consecutive
+    labels), because that is the granularity at which the fine stage —
+    `kernels/bsr_predict.ops.bsr_predict_gather_topk` — can skip work
+    without breaking the MXU-tiled matmul structure.
+  * The coarse model is one (R, Dp) matrix of row-block centroids
+    (R = Lp / bl): row r is the mean of the bl label weight rows of block
+    r, computed directly from the packed blocks (never densifying W).
+    Coarse scoring a query is one (n, Dp) x (Dp, R) matmul — O(R * D)
+    instead of O(L * D), an L/R = bl-fold cheaper first pass.
+  * Selection takes the top-B row blocks per micro-batch (max over the
+    batch's per-query coarse scores, so shapes stay static and one XLA
+    compile serves every bucket); the fine stage then scores only those
+    B blocks' packed BSR tiles. Compute scales with B * bl * D + R * D,
+    not L * D.
+
+The artifact is built once at checkpoint-save/finalize time from the packed
+model (`build_shortlist`) and persisted next to the BSR arrays by
+`checkpoint/io.py::save_shortlist` — the serving-side analogue of the
+paper's offline per-batch model files. Checkpoints without it (written
+before this PR) keep serving: the "shortlist" backend falls back to
+exhaustive BSR scoring when `load_shortlist` finds nothing.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+
+@dataclasses.dataclass
+class ShortlistArtifact:
+    """The coarse stage of two-stage scoring, built from a packed BSR model.
+
+    centroids  : (R, Dp) float32 — row r is the mean weight vector of the
+                 bl labels in BSR row block r (block-padded feature width).
+    block_rows : bl, the row-block height the centroids summarize. Must
+                 match the served model's block height.
+    n_labels   : true (pre-padding) label count of the source model.
+    stat       : reducer used over each block's rows ("mean" today; the
+                 field exists so a future artifact can declare a different
+                 meta-classifier without a format break).
+    """
+    centroids: np.ndarray
+    block_rows: int
+    n_labels: int
+    stat: str = "mean"
+
+    @property
+    def n_row_blocks(self) -> int:
+        return int(self.centroids.shape[0])
+
+    def default_blocks(self) -> int:
+        """Default shortlist width B when `ServeSpec.shortlist_blocks` is
+        unset: 1/8 of the row blocks (12.5% candidate fraction), floored
+        at 1 — comfortably inside the <25% regime the serving benchmark
+        gates on while leaving recall headroom."""
+        return max(1, -(-self.n_row_blocks // 8))
+
+    def validate_against(self, model) -> "ShortlistArtifact":
+        """Shape-check against the `BlockSparseModel` it will gate."""
+        bl = model.block_shape[0]
+        R = model.shape[0] // bl
+        if self.block_rows != bl or self.centroids.shape != (R, model.shape[1]):
+            raise ValueError(
+                f"shortlist artifact ({self.centroids.shape} centroids, "
+                f"block_rows={self.block_rows}) does not match model "
+                f"(shape {model.shape}, block height {bl}); rebuild it with "
+                "build_shortlist(model)")
+        return self
+
+
+def build_shortlist(model) -> ShortlistArtifact:
+    """Build the coarse centroid matrix from a packed `BlockSparseModel`.
+
+    Works entirely on the packed arrays: each surviving (bl, bd) block
+    contributes its column sums to its row block's centroid slice, then
+    every centroid is divided by bl. Deterministic (packed blocks are
+    row-major sorted), so cooperative multi-worker finalizes write
+    byte-identical artifacts.
+    """
+    bl, bd = model.block_shape
+    Lp, Dp = model.shape
+    R = Lp // bl
+    row_ptr = np.asarray(model.row_ptr)
+    rows = np.asarray(model.block_rows)
+    cols = np.asarray(model.block_cols)
+    blocks = np.asarray(model.blocks, dtype=np.float32)
+    C = np.zeros((R, Dp), np.float32)
+    # row_ptr[-1] is the packed-block count; the all-pruned sentinel model
+    # carries one zero block with row_ptr all zeros, which this skips.
+    for k in range(int(row_ptr[-1])):
+        r, c = int(rows[k]), int(cols[k])
+        C[r, c * bd:(c + 1) * bd] += blocks[k].sum(axis=0)
+    C /= float(bl)
+    return ShortlistArtifact(centroids=C, block_rows=bl,
+                             n_labels=model.n_labels, stat="mean")

@@ -15,28 +15,40 @@ differently). Backends live in a decorator registry —
 multi-model, ...) into the engine, `make_backend` is a thin lookup, and
 `ServeSpec(backend="kind")` selects it without touching engine code.
 
-One engine, three built-in interchangeable backends behind the
+One engine, four built-in interchangeable backends behind the
 `PredictBackend` protocol:
 
-  dense    — jitted X @ W.T + lax.top_k on the densified model. Baseline
-             and reference semantics.
-  bsr      — the block-sparse Pallas predict kernel fused with the blocked
-             Pallas top-k (kernels/bsr_predict.ops.bsr_predict_topk); the
-             model stays in packed BSR form end-to-end, compute scales with
-             block density.
-  sharded  — label-sharded local-topk + all-gather merge
-             (core.prediction.predict_topk_sharded) on a device mesh; only
-             k*n_shards candidates ever cross the interconnect.
+  dense     — jitted X @ W.T + lax.top_k on the densified model. Baseline
+              and reference semantics.
+  bsr       — the block-sparse Pallas predict kernel fused with the blocked
+              Pallas top-k (kernels/bsr_predict.ops.bsr_predict_topk); the
+              model stays in packed BSR form end-to-end, compute scales
+              with block density.
+  sharded   — label-sharded local-topk + all-gather merge
+              (core.prediction.predict_topk_sharded) on a device mesh; only
+              k*n_shards candidates ever cross the interconnect.
+  shortlist — two-stage sub-linear scoring: a coarse row-block centroid
+              matmul (serve/shortlist.py) picks the top-B BSR row blocks
+              per micro-batch, then the gathered-block Pallas kernel
+              (bsr_predict_gather_topk) scores only those blocks. Compute
+              scales with B * block_size + R * D, not L * D. Falls back to
+              exhaustive BSR when the checkpoint has no shortlist artifact.
 
-All three produce identical top-k label ids on the same pruned model: the
-padding labels a backend introduces (BSR block padding, shard divisibility
-padding) are masked below any real score before the merge, and fully pruned
-real labels keep their exact-zero dense score in every backend.
+All built-ins produce identical top-k label ids on the same pruned model
+(the shortlist backend whenever its candidate set covers the true top-k;
+exactly, tie order included, when B equals the row-block count): padding
+labels a backend introduces (BSR block padding, shard divisibility padding)
+are masked below any real score before the merge, and fully pruned real
+labels keep their exact-zero dense score in every backend.
 
 Request-side machinery lives here too: the engine pulls requests through
 `serve.batching.MicroBatchQueue` (size-bucketed padding of ragged streams),
 warms up one XLA compile per bucket, and tracks per-request latency
-percentiles. Models load from the sparse checkpoint artifact written by
+percentiles. Backend math lives in module-level jitted functions, so two
+backends over equal-shaped models share one XLA compile cache entry per
+bucket — opening a second engine never repeats the first one's warm-up
+compiles (the process-wide ledger below skips the redundant dispatches).
+Models load from the sparse checkpoint artifact written by
 `BlockSparseModel.save` — saved once offline like the paper's per-batch
 model files, served without re-densifying (the dense/sharded backends
 densify in memory at load; the checkpoint on disk is always sparse).
@@ -45,6 +57,8 @@ densify in memory at load; the checkpoint on disk is always sparse).
 from __future__ import annotations
 
 import dataclasses
+import functools
+import inspect
 import time
 from typing import Iterable, Protocol, Sequence
 
@@ -56,11 +70,12 @@ from repro.core.prediction import predict_topk_sharded
 from repro.core.pruning import BlockSparseModel, to_block_sparse
 from repro.serve.batching import (DEFAULT_BUCKETS, LatencyStats,
                                   MicroBatchQueue)
+from repro.serve.shortlist import ShortlistArtifact, build_shortlist
 
 Array = jax.Array
 
 #: Built-in backend kinds (the registry below may grow beyond these).
-BACKENDS = ("dense", "bsr", "sharded")
+BACKENDS = ("dense", "bsr", "sharded", "shortlist")
 
 
 class PredictBackend(Protocol):
@@ -75,6 +90,69 @@ class PredictBackend(Protocol):
         ...
 
 
+# ---------------------------------------------------------------------------
+# Module-level jitted scoring functions. Backends used to close jit over
+# per-instance state, so every backend object carried its own compile cache
+# and a second engine over an equal-shaped model re-paid every bucket
+# compile. At module level jax keys the cache on (arg shapes/dtypes, static
+# values) alone: any two backends with equal (D, k) and model geometry share
+# one executable per bucket.
+# ---------------------------------------------------------------------------
+
+@functools.partial(jax.jit, static_argnames=("k",))
+def _dense_topk(x: Array, W: Array, k: int) -> tuple[Array, Array]:
+    return jax.lax.top_k(x @ W.T, k)
+
+
+@functools.partial(jax.jit, static_argnames=(
+    "shape", "block_shape", "orig_shape", "k", "n_labels", "interpret"))
+def _bsr_topk(x, blocks, block_rows, block_cols, row_ptr, *, shape,
+              block_shape, orig_shape, k, n_labels, interpret):
+    from repro.kernels.bsr_predict import ops as bsr_ops   # deferred: no cycle
+    model = BlockSparseModel(blocks=blocks, block_rows=block_rows,
+                             block_cols=block_cols, row_ptr=row_ptr,
+                             shape=shape, block_shape=block_shape,
+                             orig_shape=orig_shape)
+    return bsr_ops.bsr_predict_topk(x, model, k, n_labels=n_labels,
+                                    interpret=interpret)
+
+
+@functools.partial(jax.jit, static_argnames=("B",))
+def _shortlist_select(x: Array, centroids: Array, B: int) -> Array:
+    """Coarse stage: top-B row blocks for one micro-batch, sorted ascending.
+
+    One (n, Dp) x (Dp, R) matmul, max over the batch's per-query scores
+    (static output shape: one selection serves the whole micro-batch), then
+    lax.top_k. The sort makes B = R reproduce exhaustive scoring bit-for-bit
+    (same float accumulation order into the same top-k input).
+    """
+    Dp = centroids.shape[1]
+    xf = x.astype(jnp.float32)
+    if xf.shape[1] < Dp:
+        xf = jnp.pad(xf, ((0, 0), (0, Dp - xf.shape[1])))
+    coarse = xf @ centroids.T                      # (n, R)
+    _, sel = jax.lax.top_k(coarse.max(axis=0), B)
+    return jnp.sort(sel)
+
+
+@functools.partial(jax.jit, static_argnames=(
+    "shape", "block_shape", "orig_shape", "k", "n_labels", "B",
+    "max_per_row", "interpret"))
+def _shortlist_topk(x, centroids, blocks, block_rows, block_cols, row_ptr,
+                    *, shape, block_shape, orig_shape, k, n_labels, B,
+                    max_per_row, interpret):
+    from repro.kernels.bsr_predict import ops as bsr_ops   # deferred: no cycle
+    sel = _shortlist_select(x, centroids, B)
+    model = BlockSparseModel(blocks=blocks, block_rows=block_rows,
+                             block_cols=block_cols, row_ptr=row_ptr,
+                             shape=shape, block_shape=block_shape,
+                             orig_shape=orig_shape)
+    return bsr_ops.bsr_predict_gather_topk(x, model, sel, k,
+                                           n_labels=n_labels,
+                                           max_per_row=max_per_row,
+                                           interpret=interpret)
+
+
 class DenseBackend:
     """Reference semantics: jitted dense scores + lax.top_k."""
 
@@ -83,9 +161,11 @@ class DenseBackend:
     def __init__(self, W: Array, k: int, *, n_labels: int | None = None):
         self.k = k
         self.n_labels = int(n_labels if n_labels is not None else W.shape[0])
-        W = W[:self.n_labels]                      # drop any padding rows
-        self._W = jnp.asarray(W)
-        self._fn = jax.jit(lambda x: jax.lax.top_k(x @ self._W.T, k))
+        self._W = jnp.asarray(W[:self.n_labels])   # drop any padding rows
+        self._fn = functools.partial(_dense_topk, W=self._W, k=k)
+
+    def warmup_key(self):
+        return ("dense", self._W.shape, str(self._W.dtype), self.k)
 
     def topk(self, x: Array) -> tuple[Array, Array]:
         return self._fn(x)
@@ -98,17 +178,85 @@ class BsrBackend:
 
     def __init__(self, model: BlockSparseModel, k: int,
                  *, n_labels: int | None = None, interpret: bool = True):
-        from repro.kernels.bsr_predict import ops as bsr_ops
         self.k = k
         self.n_labels = int(n_labels if n_labels is not None
                             else model.n_labels)
         self.model = model
-        self._fn = jax.jit(
-            lambda x: bsr_ops.bsr_predict_topk(
-                x, model, k, n_labels=self.n_labels, interpret=interpret))
+        self._interpret = bool(interpret)
+
+    def warmup_key(self):
+        m = self.model
+        return ("bsr", m.blocks.shape, str(jnp.asarray(m.blocks).dtype),
+                m.shape, m.block_shape, m.orig_shape, self.k, self.n_labels,
+                self._interpret)
 
     def topk(self, x: Array) -> tuple[Array, Array]:
-        return self._fn(x)
+        m = self.model
+        return _bsr_topk(x, m.blocks, m.block_rows, m.block_cols, m.row_ptr,
+                         shape=m.shape, block_shape=m.block_shape,
+                         orig_shape=m.orig_shape, k=self.k,
+                         n_labels=self.n_labels, interpret=self._interpret)
+
+
+class ShortlistBackend:
+    """Two-stage sub-linear scoring: coarse centroid shortlist + gathered
+    fine stage over the packed BSR tiles of the selected row blocks only.
+
+    B (the shortlist width, in row blocks) is static per backend: one XLA
+    compile per bucket, candidate fraction B / R. One caveat inherited from
+    bucket padding: the coarse max runs over the padded micro-batch, and a
+    padding row's coarse score is exactly 0 — on models whose true coarse
+    scores are all negative, padding can steer (never widen) the selection.
+    """
+
+    name = "shortlist"
+
+    def __init__(self, model: BlockSparseModel, artifact: ShortlistArtifact,
+                 k: int, *, n_labels: int | None = None,
+                 blocks: int | None = None, interpret: bool = True):
+        from repro.kernels.bsr_predict import ops as bsr_ops
+        artifact.validate_against(model)
+        self.k = k
+        self.n_labels = int(n_labels if n_labels is not None
+                            else model.n_labels)
+        self.model = model
+        self.artifact = artifact
+        R = artifact.n_row_blocks
+        self.B = min(int(blocks if blocks is not None
+                         else artifact.default_blocks()), R)
+        if self.B < 1:
+            raise ValueError(f"shortlist width must be >= 1, got {self.B}")
+        self._centroids = jnp.asarray(artifact.centroids)
+        self._max_per_row = bsr_ops.max_blocks_per_row(model)
+        self._interpret = bool(interpret)
+
+    @property
+    def candidate_fraction(self) -> float:
+        """Fraction of row blocks the fine stage scores per micro-batch."""
+        return self.B / self.artifact.n_row_blocks
+
+    def warmup_key(self):
+        m = self.model
+        return ("shortlist", m.blocks.shape,
+                str(jnp.asarray(m.blocks).dtype), m.shape, m.block_shape,
+                m.orig_shape, self._centroids.shape, self.B,
+                self._max_per_row, self.k, self.n_labels, self._interpret)
+
+    def select_blocks(self, x: Array) -> np.ndarray:
+        """Coarse-stage introspection: the (B,) sorted row-block ids the
+        fine stage would score for this batch (benchmarks measure recall
+        and candidate fraction through this)."""
+        return np.asarray(_shortlist_select(
+            jnp.asarray(x, jnp.float32), self._centroids, self.B))
+
+    def topk(self, x: Array) -> tuple[Array, Array]:
+        m = self.model
+        return _shortlist_topk(
+            x, self._centroids, m.blocks, m.block_rows, m.block_cols,
+            m.row_ptr, shape=m.shape, block_shape=m.block_shape,
+            orig_shape=m.orig_shape, k=self.k, n_labels=self.n_labels,
+            B=self.B, max_per_row=self._max_per_row,
+            interpret=self._interpret)
 
 
 class ShardedBackend:
@@ -131,6 +279,9 @@ class ShardedBackend:
             lambda x: predict_topk_sharded(x, self._W, k, mesh,
                                            label_axis=label_axis,
                                            n_labels=self.n_labels))
+
+    def warmup_key(self):
+        return None        # mesh-bound closure: never share warm-up state
 
     def topk(self, x: Array) -> tuple[Array, Array]:
         return self._fn(x)
@@ -201,16 +352,34 @@ def _make_sharded_backend(bsr: BlockSparseModel, k: int, *, n_labels: int,
                           mesh, label_axis=label_axis, n_labels=n_labels)
 
 
+@register_backend("shortlist")
+def _make_shortlist_backend(bsr: BlockSparseModel, k: int, *, n_labels: int,
+                            mesh, label_axis: str, interpret: bool,
+                            shortlist=None, shortlist_blocks=None):
+    if shortlist is None:
+        # Legacy checkpoint (or in-memory model) without the artifact:
+        # exhaustive BSR scoring, same results, no sub-linear gate.
+        return BsrBackend(bsr, k, n_labels=n_labels, interpret=interpret)
+    return ShortlistBackend(bsr, shortlist, k, n_labels=n_labels,
+                            blocks=shortlist_blocks, interpret=interpret)
+
+
 def make_backend(kind: str, bsr: BlockSparseModel, k: int, *,
                  n_labels: int | None = None, mesh=None,
-                 label_axis: str = "model",
-                 interpret: bool = True) -> PredictBackend:
+                 label_axis: str = "model", interpret: bool = True,
+                 shortlist: ShortlistArtifact | None = None,
+                 shortlist_blocks: int | None = None) -> PredictBackend:
     """Build any registered backend from the one canonical model artifact
     (packed BSR) — a thin lookup over the registry.
 
     dense/sharded densify in memory, sliced back to the true (L, D) so
     block padding never surfaces; bsr serves the packed form directly (its
-    kernel pads x internally and its top-k masks padding labels).
+    kernel pads x internally and its top-k masks padding labels); shortlist
+    adds the coarse candidate stage when a `ShortlistArtifact` is supplied.
+
+    Factories registered before the shortlist kwargs existed keep working:
+    keyword args are filtered down to what each factory's signature accepts
+    (factories with **kwargs receive everything).
     """
     try:
         factory = _BACKEND_REGISTRY[kind]
@@ -218,8 +387,46 @@ def make_backend(kind: str, bsr: BlockSparseModel, k: int, *,
         raise ValueError(f"unknown backend {kind!r}; expected one of "
                          f"{available_backends()}") from None
     n_labels = int(n_labels if n_labels is not None else bsr.n_labels)
-    return factory(bsr, k, n_labels=n_labels, mesh=mesh,
-                   label_axis=label_axis, interpret=interpret)
+    kwargs = dict(n_labels=n_labels, mesh=mesh, label_axis=label_axis,
+                  interpret=interpret, shortlist=shortlist,
+                  shortlist_blocks=shortlist_blocks)
+    try:
+        params = inspect.signature(factory).parameters
+        if not any(p.kind is p.VAR_KEYWORD for p in params.values()):
+            kwargs = {k2: v for k2, v in kwargs.items() if k2 in params}
+    except (TypeError, ValueError):      # uninspectable callable: old contract
+        kwargs = dict(n_labels=n_labels, mesh=mesh, label_axis=label_axis,
+                      interpret=interpret)
+    return factory(bsr, k, **kwargs)
+
+
+# ---------------------------------------------------------------------------
+# Process-wide warm-up ledger. The jitted functions above make the sharing
+# real (one XLA cache entry per computation); this ledger makes it visible
+# and cheap: a (warmup_key, bucket, n_features) triple already warmed by ANY
+# engine is skipped outright — the second engine's warmup() marks the bucket
+# warm without a dispatch. Backends whose key is None (mesh-bound sharded,
+# plugins without warmup_key) always dispatch.
+# ---------------------------------------------------------------------------
+
+_WARMUP_SEEN: set = set()
+_WARMUP_STATS = {"dispatches": 0, "shared_hits": 0}
+
+
+def reset_warmup_cache() -> None:
+    """Forget all shared warm-up state (tests / benchmark isolation). Does
+    not touch jax's own compile cache — only the skip-dispatch ledger."""
+    _WARMUP_SEEN.clear()
+    _WARMUP_STATS["dispatches"] = 0
+    _WARMUP_STATS["shared_hits"] = 0
+
+
+def warmup_cache_stats() -> dict[str, int]:
+    """Counters since the last reset: `dispatches` (warm-up calls actually
+    issued; each may still hit jax's compile cache) and `shared_hits`
+    (bucket warm-ups skipped because an equal computation was already
+    warmed by another engine this process)."""
+    return dict(_WARMUP_STATS)
 
 
 @dataclasses.dataclass
@@ -260,12 +467,21 @@ class XMCEngine:
     def from_checkpoint(cls, directory: str, *, backend: str = "bsr",
                         k: int = 5, mesh=None, interpret: bool = True,
                         buckets: Sequence[int] = DEFAULT_BUCKETS,
-                        warmup: bool = True) -> "XMCEngine":
-        """Serve the sparse artifact written by `BlockSparseModel.save`."""
+                        warmup: bool = True,
+                        shortlist_blocks: int | None = None) -> "XMCEngine":
+        """Serve the sparse artifact written by `BlockSparseModel.save`.
+
+        Also picks up the shortlist artifact saved next to the BSR arrays
+        when present — absent (legacy checkpoints), the "shortlist" backend
+        silently degrades to exhaustive BSR scoring.
+        """
+        from repro.checkpoint.io import load_shortlist   # deferred: no cycle
         bsr, meta = BlockSparseModel.load(directory)
         n_labels = int(meta.get("n_labels", bsr.n_labels))
         be = make_backend(backend, bsr, k, n_labels=n_labels, mesh=mesh,
-                          interpret=interpret)
+                          interpret=interpret,
+                          shortlist=load_shortlist(directory),
+                          shortlist_blocks=shortlist_blocks)
         return cls(be, buckets, warmup=warmup,
                    n_features=int(meta.get("n_features", bsr.n_features)))
 
@@ -274,11 +490,15 @@ class XMCEngine:
                     mesh=None, block_shape: tuple[int, int] = (128, 128),
                     interpret: bool = True,
                     buckets: Sequence[int] = DEFAULT_BUCKETS,
-                    warmup: bool = False) -> "XMCEngine":
-        """Convenience: engine straight from an in-memory DiSMECModel."""
+                    warmup: bool = False,
+                    shortlist_blocks: int | None = None) -> "XMCEngine":
+        """Convenience: engine straight from an in-memory DiSMECModel (the
+        shortlist artifact is built on the fly — no checkpoint needed)."""
         bsr = to_block_sparse(model.W, block_shape)
         be = make_backend(backend, bsr, k, n_labels=model.W.shape[0],
-                          mesh=mesh, interpret=interpret)
+                          mesh=mesh, interpret=interpret,
+                          shortlist=build_shortlist(bsr),
+                          shortlist_blocks=shortlist_blocks)
         return cls(be, buckets, warmup=warmup,
                    n_features=int(model.W.shape[1]))
 
@@ -286,14 +506,25 @@ class XMCEngine:
 
     def warmup(self, buckets: Sequence[int] | None = None) -> int:
         """Compile the backend once per bucket shape (cold-start cost paid
-        up front, not on the first unlucky request). Returns #compiles."""
+        up front, not on the first unlucky request). Returns the number of
+        buckets newly warmed for THIS engine; buckets another engine
+        already warmed process-wide (same `warmup_key`) count but skip the
+        dispatch entirely — see `warmup_cache_stats`."""
         assert self._n_features is not None, "n_features needed for warmup"
+        key = getattr(self.backend, "warmup_key", lambda: None)()
         done = 0
         for b in (buckets or self.queue.buckets):
             if b in self._warm:
                 continue
-            x = jnp.zeros((b, self._n_features), jnp.float32)
-            jax.block_until_ready(self.backend.topk(x))
+            gkey = None if key is None else (key, b, self._n_features)
+            if gkey is not None and gkey in _WARMUP_SEEN:
+                _WARMUP_STATS["shared_hits"] += 1
+            else:
+                x = jnp.zeros((b, self._n_features), jnp.float32)
+                jax.block_until_ready(self.backend.topk(x))
+                _WARMUP_STATS["dispatches"] += 1
+                if gkey is not None:
+                    _WARMUP_SEEN.add(gkey)
             self._warm.add(b)
             done += 1
         return done

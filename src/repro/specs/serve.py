@@ -25,20 +25,27 @@ DEFAULT_BUCKETS = (1, 2, 4, 8, 16, 32, 64, 128, 256)
 class ServeSpec(Spec):
     """One serving configuration over a sparse checkpoint.
 
-    backend   : predict-backend registry kind ("dense" / "bsr" / "sharded"
-                built in; plugins register more).
+    backend   : predict-backend registry kind ("dense" / "bsr" / "sharded" /
+                "shortlist" built in; plugins register more).
     k         : top-k labels returned per instance.
     buckets   : micro-batch bucket sizes (one XLA compile each).
     interpret : Pallas execution mode for kernel backends — None
                 auto-selects per hardware (compiled Mosaic on TPU,
                 interpreter elsewhere), True/False force it.
     warmup    : pre-compile every bucket at engine construction.
+    shortlist_blocks : B, the number of BSR row blocks the "shortlist"
+                backend's coarse stage keeps per micro-batch (its candidate
+                fraction is B / n_row_blocks). None defers to the
+                artifact's default (~1/8 of the row blocks); values above
+                the row-block count are clamped, and B = n_row_blocks is
+                exactly exhaustive scoring. Ignored by other backends.
     """
     backend: str = "bsr"
     k: int = 5
     buckets: tuple[int, ...] = DEFAULT_BUCKETS
     interpret: Optional[bool] = None
     warmup: bool = True
+    shortlist_blocks: Optional[int] = None
 
     def validate(self) -> "ServeSpec":
         if self.k < 1:
@@ -48,6 +55,10 @@ class ServeSpec(Spec):
                              f"got {self.buckets}")
         if list(self.buckets) != sorted(self.buckets):
             raise ValueError(f"buckets must be ascending, got {self.buckets}")
+        if self.shortlist_blocks is not None and self.shortlist_blocks < 1:
+            raise ValueError(f"shortlist_blocks must be >= 1 (or None for "
+                             f"the artifact default), got "
+                             f"{self.shortlist_blocks}")
         return self
 
     def resolved_interpret(self) -> bool:

@@ -548,6 +548,8 @@ def train_streaming(X: Array, Y: Array, cfg: DiSMECConfig, out_dir: str,
 def train_demo_checkpoint(ckpt_dir: str, *, n_train: int = 800,
                           n_test: int = 512, n_features: int = 4096,
                           n_labels: int = 256, label_batch: int = 128,
+                          block_shape: tuple[int, int] = (128, 128),
+                          data_kwargs: dict | None = None,
                           C: float = 1.0, delta: float = 0.01,
                           seed: int = 0, reuse: bool = True,
                           verbose: bool = True):
@@ -558,19 +560,24 @@ def train_demo_checkpoint(ckpt_dir: str, *, n_train: int = 800,
     synthetic dataset, streams a model into `ckpt_dir` through `XMCTrainJob`
     (unless a servable checkpoint is already there and `reuse`), and returns
     `(dataset, index)` where `index` is the checkpoint's pre-flight metadata
-    (`checkpoint.io.load_block_sparse_meta`).
+    (`checkpoint.io.load_block_sparse_meta`). `block_shape` sets the BSR
+    tile — the shortlist serving benchmark passes a finer block height so
+    the demo model has enough row blocks for a meaningful candidate stage.
+    `data_kwargs` forwards extra knobs to `make_xmc_dataset` (e.g.
+    pool_stride / label_locality for a cluster-ordered label space).
     """
     from repro.data.xmc import make_xmc_dataset       # deferred: keep light
     data = make_xmc_dataset(n_train=n_train, n_test=n_test,
                             n_features=n_features, n_labels=n_labels,
-                            seed=seed)
+                            seed=seed, **(data_kwargs or {}))
     if not (reuse and has_block_sparse_checkpoint(ckpt_dir)):
         if verbose:
             print(f"[xmc] no servable checkpoint at {ckpt_dir}; streaming a "
                   f"{n_labels}-label model in batches of {label_batch}...")
         from repro.xmc_api import XMCSpec, fit            # deferred: no cycle
         spec = XMCSpec(solver=SolverSpec(C=C, delta=delta),
-                       schedule=ScheduleSpec(label_batch=label_batch))
+                       schedule=ScheduleSpec(label_batch=label_batch,
+                                             block_shape=tuple(block_shape)))
         fit(jnp.asarray(data.X_train), jnp.asarray(data.Y_train), spec,
             ckpt_dir)
         if verbose:

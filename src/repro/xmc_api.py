@@ -259,4 +259,5 @@ class CheckpointHandle:
         return XMCEngine.from_checkpoint(
             self.directory, backend=serve.backend, k=serve.k,
             mesh=mesh, interpret=serve.resolved_interpret(),
-            buckets=tuple(serve.buckets), warmup=serve.warmup)
+            buckets=tuple(serve.buckets), warmup=serve.warmup,
+            shortlist_blocks=serve.shortlist_blocks)

@@ -1,0 +1,300 @@
+"""Shortlist-gated sub-linear serving: gathered-block kernel parity, the
+two-stage backend's equivalence/recall/fallback contracts, the persisted
+artifact, and the shared warm-up compile ledger."""
+
+import os
+import tempfile
+
+import numpy as np
+import pytest
+
+import jax.numpy as jnp
+
+from repro.checkpoint.io import (SHORTLIST_FILE, load_block_sparse,
+                                 load_block_sparse_meta, load_shortlist,
+                                 save_shortlist)
+from repro.core.pruning import prune, to_block_sparse
+from repro.data.xmc import make_xmc_dataset
+from repro.kernels.bsr_predict import ops as bsr_ops
+from repro.kernels.bsr_predict import ref as bsr_ref
+from repro.serve import (ShortlistBackend, XMCEngine, build_shortlist,
+                         make_backend, reset_warmup_cache,
+                         warmup_cache_stats)
+from repro.serve.shortlist import ShortlistArtifact
+from repro.specs import ServeSpec
+
+
+def _random_pruned_bsr(L, D, *, block=(16, 128), delta=0.05, seed=0,
+                       zero_rows=()):
+    rng = np.random.default_rng(seed)
+    W = rng.normal(size=(L, D)).astype(np.float32) * 0.1
+    W = np.array(prune(jnp.asarray(W), delta))
+    for r in zero_rows:
+        W[r] = 0.0
+    return W, to_block_sparse(jnp.asarray(W), block)
+
+
+# ---------------------------------------------------------------------------
+# Gathered-block kernel
+# ---------------------------------------------------------------------------
+
+def test_gather_kernel_matches_ref_non_tile_aligned():
+    """Pallas gathered-block scoring == dense-gather oracle on shapes that
+    hit both row padding (L=100 -> Lp=112 with bl=16) and feature padding
+    (D=300 -> Dp=384), with an UNSORTED selection."""
+    L, D = 100, 300
+    _, bsr = _random_pruned_bsr(L, D, seed=1)
+    rng = np.random.default_rng(2)
+    x = jnp.asarray(rng.normal(size=(4, D)).astype(np.float32))
+    sel = jnp.asarray([5, 0, 3], jnp.int32)          # arbitrary order
+    got = bsr_ops.bsr_predict_gather(x, bsr, sel)
+    want = bsr_ref.bsr_predict_gather(
+        jnp.pad(x, ((0, 0), (0, bsr.shape[1] - D))), bsr, sel)
+    assert got.shape == (4, 3 * 16)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-5, atol=1e-5)
+
+
+def test_gather_kernel_empty_row_block_is_exact_zero():
+    """A selected row block whose labels were all Delta-pruned must come
+    back EXACTLY 0.0 (the dense score of a pruned label), not garbage."""
+    L, D = 64, 256
+    zero_rows = list(range(16, 32))                  # kills row block 1
+    _, bsr = _random_pruned_bsr(L, D, seed=3, zero_rows=zero_rows)
+    rng = np.random.default_rng(4)
+    x = jnp.asarray(rng.normal(size=(3, D)).astype(np.float32))
+    out = np.asarray(bsr_ops.bsr_predict_gather(x, bsr, jnp.asarray([1, 2])))
+    assert (out[:, :16] == 0.0).all()                # block 1: pruned
+    assert (out[:, 16:] != 0.0).any()                # block 2: real scores
+
+
+def test_gather_topk_full_coverage_is_bit_exact():
+    """sel = every row block (sorted) reproduces the exhaustive fused
+    predict->topk bit-for-bit, tie order included."""
+    L, D, k = 100, 300, 5
+    _, bsr = _random_pruned_bsr(L, D, seed=5)
+    R = bsr.shape[0] // bsr.block_shape[0]
+    rng = np.random.default_rng(6)
+    x = jnp.asarray(rng.normal(size=(8, D)).astype(np.float32))
+    v1, i1 = bsr_ops.bsr_predict_topk(x, bsr, k, n_labels=L)
+    v2, i2 = bsr_ops.bsr_predict_gather_topk(x, bsr, jnp.arange(R), k,
+                                             n_labels=L)
+    np.testing.assert_array_equal(np.asarray(v1), np.asarray(v2))
+    np.testing.assert_array_equal(np.asarray(i1), np.asarray(i2))
+
+
+# ---------------------------------------------------------------------------
+# Shortlist backend
+# ---------------------------------------------------------------------------
+
+def test_shortlist_backend_full_width_equals_exhaustive():
+    """B covering all row blocks == exhaustive BSR: identical scores AND
+    identical label ids (the B-covers-all acceptance gate)."""
+    L, D, k = 200, 300, 5
+    _, bsr = _random_pruned_bsr(L, D, seed=7)
+    art = build_shortlist(bsr)
+    R = art.n_row_blocks
+    rng = np.random.default_rng(8)
+    x = jnp.asarray(rng.normal(size=(6, D)).astype(np.float32))
+    sl = make_backend("shortlist", bsr, k, n_labels=L, shortlist=art,
+                      shortlist_blocks=R)
+    ex = make_backend("bsr", bsr, k, n_labels=L)
+    v1, i1 = sl.topk(x)
+    v2, i2 = ex.topk(x)
+    assert isinstance(sl, ShortlistBackend) and sl.candidate_fraction == 1.0
+    np.testing.assert_array_equal(np.asarray(v1), np.asarray(v2))
+    np.testing.assert_array_equal(np.asarray(i1), np.asarray(i2))
+
+
+def test_shortlist_recall_gate_on_clustered_power_law():
+    """On a cluster-ordered power-law label space (the regime candidate
+    stages serve), a B = 3/16 shortlist recovers >= 95% of the exhaustive
+    top-5 for single-query batches — at under 25% of the row blocks."""
+    L, D, k = 128, 1024, 5
+    data = make_xmc_dataset(n_train=8, n_test=48, n_features=D, n_labels=L,
+                            pool_stride=2, label_locality=0.9,
+                            multi_label_p=0.9, seed=9)
+    # Analytic OvR weights from the generator's signature pools (training
+    # would find ~these; the test needs the serving stack, not TRON).
+    W = np.zeros((L, D), np.float32)
+    for l in range(L):
+        W[l, data.label_pools[l]] = 1.0
+    bsr = to_block_sparse(jnp.asarray(W), (8, 128))
+    art = build_shortlist(bsr)
+    assert art.n_row_blocks == 16
+    sl = make_backend("shortlist", bsr, k, n_labels=L, shortlist=art,
+                      shortlist_blocks=3)
+    ex = make_backend("bsr", bsr, k, n_labels=L)
+    assert sl.candidate_fraction < 0.25
+
+    hits = total = 0
+    for q in np.asarray(data.X_test, np.float32):
+        x = jnp.asarray(q[None, :])
+        _, want = ex.topk(x)
+        _, got = sl.topk(x)
+        hits += len(set(np.asarray(want)[0].tolist())
+                    & set(np.asarray(got)[0].tolist()))
+        total += k
+    assert hits / total >= 0.95, f"recall@{k} = {hits / total:.3f}"
+
+
+def test_shortlist_spec_and_registry_fallback():
+    """Without an artifact the "shortlist" kind degrades to exhaustive BSR
+    (same results); old-style plugin factories without the shortlist
+    kwargs still work through make_backend."""
+    L, D, k = 100, 256, 3
+    _, bsr = _random_pruned_bsr(L, D, seed=10)
+    rng = np.random.default_rng(11)
+    x = jnp.asarray(rng.normal(size=(4, D)).astype(np.float32))
+    fb = make_backend("shortlist", bsr, k, n_labels=L)       # no artifact
+    ex = make_backend("bsr", bsr, k, n_labels=L)
+    assert fb.name == "bsr"
+    np.testing.assert_array_equal(np.asarray(fb.topk(x)[1]),
+                                  np.asarray(ex.topk(x)[1]))
+
+    from repro.serve import register_backend, unregister_backend
+
+    @register_backend("_old_style")
+    def _old_factory(bsr_, k_, *, n_labels, mesh, label_axis, interpret):
+        return make_backend("dense", bsr_, k_, n_labels=n_labels)
+    try:
+        be = make_backend("_old_style", bsr, k, n_labels=L,
+                          shortlist=build_shortlist(bsr), shortlist_blocks=2)
+        assert be.name == "dense"                # kwargs filtered, no crash
+    finally:
+        unregister_backend("_old_style")
+
+
+# ---------------------------------------------------------------------------
+# Artifact persistence
+# ---------------------------------------------------------------------------
+
+def test_artifact_roundtrip_and_validation():
+    L, D = 150, 300
+    _, bsr = _random_pruned_bsr(L, D, seed=12)
+    art = build_shortlist(bsr)
+    assert art.centroids.shape == (bsr.shape[0] // 16, bsr.shape[1])
+    assert art.validate_against(bsr) is art
+    with tempfile.TemporaryDirectory() as d:
+        entry = save_shortlist(d, art)
+        assert entry["file"] == SHORTLIST_FILE
+        back = load_shortlist(d)
+    np.testing.assert_array_equal(back.centroids, art.centroids)
+    assert (back.block_rows, back.n_labels, back.stat) == (16, L, "mean")
+    _, other = _random_pruned_bsr(64, D, block=(32, 128), seed=13)
+    with pytest.raises(ValueError, match="does not match"):
+        back.validate_against(other)
+
+
+def test_centroids_are_true_block_means():
+    L, D = 96, 256
+    W, bsr = _random_pruned_bsr(L, D, seed=14)
+    art = build_shortlist(bsr)
+    dense = np.asarray(bsr.to_dense())
+    for r in range(art.n_row_blocks):
+        np.testing.assert_allclose(art.centroids[r],
+                                   dense[r * 16:(r + 1) * 16].mean(axis=0),
+                                   rtol=1e-6, atol=1e-6)
+
+
+def test_save_writes_artifact_and_legacy_checkpoint_falls_back():
+    """`BlockSparseModel.save` persists the shortlist next to the BSR
+    arrays; deleting it (a checkpoint from before this PR) must silently
+    fall back to exhaustive scoring with identical results."""
+    L, D, k = 140, 300, 5
+    _, bsr = _random_pruned_bsr(L, D, seed=15)
+    rng = np.random.default_rng(16)
+    x = np.asarray(rng.normal(size=(3, D)), np.float32)
+    with tempfile.TemporaryDirectory() as d:
+        bsr.save(d, meta={"n_labels": L, "n_features": D})
+        assert os.path.exists(os.path.join(d, SHORTLIST_FILE))
+        index = load_block_sparse_meta(d)
+        assert index["shortlist"]["n_row_blocks"] == bsr.shape[0] // 16
+        art = load_shortlist(d)
+        art.validate_against(load_block_sparse(d)[0])
+
+        eng = XMCEngine.from_checkpoint(d, backend="shortlist", k=k,
+                                        warmup=False, shortlist_blocks=2)
+        assert isinstance(eng.backend, ShortlistBackend)
+        got_sl = eng.serve([x])[0].labels
+
+        os.remove(os.path.join(d, SHORTLIST_FILE))      # legacy checkpoint
+        eng_fb = XMCEngine.from_checkpoint(d, backend="shortlist", k=k,
+                                           warmup=False)
+        assert eng_fb.backend.name == "bsr"
+        got_fb = eng_fb.serve([x])[0].labels
+        eng_ex = XMCEngine.from_checkpoint(d, backend="bsr", k=k,
+                                           warmup=False)
+        np.testing.assert_array_equal(got_fb, eng_ex.serve([x])[0].labels)
+        assert got_sl.shape == got_fb.shape
+
+
+# ---------------------------------------------------------------------------
+# ServeSpec knob
+# ---------------------------------------------------------------------------
+
+def test_serve_spec_shortlist_blocks_roundtrip_and_validation():
+    spec = ServeSpec(backend="shortlist", shortlist_blocks=4)
+    assert ServeSpec.from_dict(spec.to_dict()) == spec
+    # Manifests written before the knob existed deserialize to the default.
+    old = spec.to_dict()
+    del old["shortlist_blocks"]
+    assert ServeSpec.from_dict(old).shortlist_blocks is None
+    with pytest.raises(ValueError, match="shortlist_blocks"):
+        ServeSpec(shortlist_blocks=0).validate()
+
+
+# ---------------------------------------------------------------------------
+# Shared warm-up compile ledger
+# ---------------------------------------------------------------------------
+
+def test_warmup_shared_across_equal_backends():
+    """A second engine over an equal-shaped model must not repeat the
+    first's warm-up dispatches: every bucket is a shared hit (the jitted
+    scoring functions are module-level, so jax's compile cache is keyed on
+    shapes/statics, not backend instances)."""
+    L, D, k = 140, 256, 3
+    _, bsr1 = _random_pruned_bsr(L, D, seed=17)
+    _, bsr2 = _random_pruned_bsr(L, D, seed=18)     # same shapes, new values
+    reset_warmup_cache()
+    try:
+        e1 = XMCEngine(make_backend("dense", bsr1, k, n_labels=L),
+                       buckets=(2, 4), warmup=False, n_features=D)
+        assert e1.warmup() == 2
+        assert warmup_cache_stats() == {"dispatches": 2, "shared_hits": 0}
+        e2 = XMCEngine(make_backend("dense", bsr2, k, n_labels=L),
+                       buckets=(2, 4), warmup=False, n_features=D)
+        assert e2.warmup() == 2                     # per-engine count stays
+        assert warmup_cache_stats() == {"dispatches": 2, "shared_hits": 2}
+        # A different k is a different computation: no false sharing.
+        e3 = XMCEngine(make_backend("dense", bsr1, k + 1, n_labels=L),
+                       buckets=(2,), warmup=False, n_features=D)
+        assert e3.warmup() == 1
+        assert warmup_cache_stats()["dispatches"] == 3
+    finally:
+        reset_warmup_cache()
+
+
+def test_warmup_shared_across_bsr_and_shortlist_instances():
+    """The bsr and shortlist backends share warm-up state per kind too —
+    and the two kinds never collide with each other."""
+    L, D, k = 100, 256, 3
+    _, bsr = _random_pruned_bsr(L, D, seed=19)
+    art = build_shortlist(bsr)
+    reset_warmup_cache()
+    try:
+        for expected_hits, make in ((0, lambda: make_backend(
+                "bsr", bsr, k, n_labels=L)),
+                (0, lambda: make_backend(
+                    "shortlist", bsr, k, n_labels=L, shortlist=art,
+                    shortlist_blocks=2)),
+                (2, lambda: make_backend("bsr", bsr, k, n_labels=L)),
+                (4, lambda: make_backend(
+                    "shortlist", bsr, k, n_labels=L, shortlist=art,
+                    shortlist_blocks=2))):
+            eng = XMCEngine(make(), buckets=(1, 2), warmup=False,
+                            n_features=D)
+            assert eng.warmup() == 2
+            assert warmup_cache_stats()["shared_hits"] == expected_hits
+    finally:
+        reset_warmup_cache()
