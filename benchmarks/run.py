@@ -17,10 +17,13 @@ Modules (deliverable d):
   train_pipeline         streaming label-batch training: throughput/mem/resume
                          (+ per-device peak-memory counters)
   tron_hotpath           CG matmul accounting + scheduler-overlap wall clock
-  serve_latency          serving-engine p50/p99 per predict backend, plus the
+  serve_latency          serving-engine p50/p99 per predict backend, the
                          shortlist-vs-exhaustive sub-linear gate (candidate
-                         fraction < 25% at recall@5 >= 0.95) — live in
-                         --smoke, so tools/verify.sh gates it
+                         fraction < 25% at recall@5 >= 0.95), and the
+                         open-loop Poisson server benchmark (deadline beats
+                         drain-on-full on p99; overload sheds with bounded
+                         queue wait) — all live in --smoke, so
+                         tools/verify.sh gates them
   roofline               deliverable (g): 3-term roofline from the dry-run
 """
 

@@ -1,5 +1,6 @@
-"""Serving latency benchmark: p50/p99 per predict backend, plus the
-shortlist-vs-exhaustive sub-linear serving gate.
+"""Serving latency benchmark: p50/p99 per predict backend, the
+shortlist-vs-exhaustive sub-linear serving gate, and the open-loop Poisson
+server benchmark.
 
 Part 1 drives the same ragged request stream through each
 `repro.serve.XMCEngine` backend (dense / bsr / sharded / shortlist) from
@@ -19,6 +20,25 @@ blocks vs all packed blocks). The run asserts candidate fraction < 25%
 at recall@k >= 0.95 — the acceptance criterion of the shortlist PR, live
 in --smoke so tools/verify.sh gates it.
 
+Part 3 is OPEN LOOP: a Poisson load generator submits requests to the
+async continuous-batching server (`serve/server.py`) at a fixed offered
+load, independent of completions — the regime closed-loop percentiles say
+nothing about, because a closed loop never queues. Each scenario emits a
+`mode="server_poisson"` record with arrival-to-completion p50/p99,
+queue-wait percentiles, goodput (completed requests per second of wall),
+and the reject rate. Two assertions run live in --smoke (the continuous-
+batching PR's acceptance gates, wired into tools/verify.sh through
+`benchmarks.run --smoke`):
+
+  * at an offered load below saturation, deadline launch
+    (max_batch_delay_ms small) beats drain-on-full batching (deadline
+    effectively infinite, batches ship only when a bucket fills or at
+    final flush) on p99 arrival-to-completion latency;
+  * under overload with a finite `max_queue`, admission control rejects
+    (reject_rate > 0) and the queue wait of ACCEPTED requests stays
+    bounded, instead of the unbounded queue growth an un-admission-
+    controlled open loop produces.
+
 This is the serving-side companion of table_prediction_speed (which
 measures raw predict calls without the queue/bucketing layer).
 """
@@ -31,7 +51,7 @@ import time
 import numpy as np
 
 from benchmarks._common import emit_json, print_table
-from repro.serve import BACKENDS
+from repro.serve import BACKENDS, Rejected
 from repro.specs import ServeSpec
 from repro.train.xmc import train_demo_checkpoint
 from repro.xmc_api import CheckpointHandle
@@ -63,6 +83,19 @@ SHORTLIST_B = 3                        # candidate blocks: 3/16 = 18.75% < 25%
 RECALL_GATE = 0.95
 FRACTION_GATE = 0.25
 
+# Part 3 (open-loop Poisson server): small buckets keep per-batch service
+# time well under the arrival gaps, so "below saturation" holds even on the
+# 2-core CI container; the overload scenario shrinks them further so a
+# back-to-back burst genuinely outruns dispatch.
+SERVER_BUCKETS = (1, 2, 4, 8, 16, 32, 64)
+OVERLOAD_BUCKETS = (1, 2, 4, 8)
+FILL_ONLY_DELAY_MS = 60_000.0   # deadline past any run: pure drain-on-full
+SERVER_LOW = dict(n_requests=200, rate_rps=120.0, deadline_ms=2.0)
+SERVER_LOW_SMOKE = dict(n_requests=40, rate_rps=60.0, deadline_ms=2.0)
+SERVER_OVERLOAD = dict(n_requests=160, max_queue=8)
+SERVER_OVERLOAD_SMOKE = dict(n_requests=80, max_queue=8)
+QUEUE_WAIT_BOUND_MS = 1000.0    # overload queue wait must stay bounded
+
 
 def make_requests(X: np.ndarray, n_requests: int, seed: int = 0,
                   max_rows: int = MAX_ROWS):
@@ -84,6 +117,54 @@ def serve_closed_loop(engine, requests):
         engine.submit(x)
         results.extend(engine.step())
     return results, time.time() - t0
+
+
+def run_open_loop(handle, pool: np.ndarray, *, n_requests: int,
+                  rate_rps: float | None, delay_ms: float,
+                  buckets, policy: str, smoke: bool,
+                  max_queue: int | None = None, seed: int = 0) -> dict:
+    """One open-loop scenario: submit `n_requests` single-instance requests
+    to a fresh async server with Poisson inter-arrivals at `rate_rps`
+    (None = back-to-back burst), flush, and report arrival-to-completion
+    percentiles, queue wait, goodput, and the reject rate. The generator
+    never waits for completions — offered load is independent of service,
+    which is what makes tail latency and backpressure measurable at all."""
+    rng = np.random.default_rng(seed)
+    requests = [pool[rng.integers(0, pool.shape[0], size=1)]
+                for _ in range(n_requests)]
+    gaps = (np.zeros(n_requests) if rate_rps is None
+            else rng.exponential(1.0 / rate_rps, size=n_requests))
+    server = handle.server(ServeSpec(
+        backend="dense", k=K, buckets=tuple(buckets),
+        max_batch_delay_ms=delay_ms, max_queue=max_queue))
+    t0 = time.monotonic()
+    t_next = t0
+    futures = []
+    for x, gap in zip(requests, gaps):
+        t_next += gap
+        now = time.monotonic()
+        if t_next > now:
+            time.sleep(t_next - now)
+        futures.append(server.submit(x))
+    server.stop()                  # flush: every accepted request resolves
+    wall = time.monotonic() - t0
+    results = [f.result(timeout=60) for f in futures]
+    n_rejected = sum(isinstance(r, Rejected) for r in results)
+    st = server.stats()
+    assert st["completed"] + n_rejected == n_requests
+    return {"bench": "serve_latency", "mode": "server_poisson",
+            "policy": policy, "smoke": smoke, "backend": "dense", "k": K,
+            "n_offered": n_requests, "offered_load_rps": rate_rps,
+            "max_batch_delay_ms": delay_ms, "max_queue": max_queue,
+            "buckets": list(buckets), "batches": st["batches"],
+            "n_completed": st["completed"], "n_rejected": st["rejected"],
+            "reject_rate": st["reject_rate"],
+            "goodput_rps": st["completed"] / wall, "wall_s": wall,
+            "p50_ms": st["latency"].get("p50_ms"),
+            "p99_ms": st["latency"].get("p99_ms"),
+            "mean_ms": st["latency"].get("mean_ms"),
+            "queue_wait_p50_ms": st["queue_wait"].get("p50_ms"),
+            "queue_wait_p99_ms": st["queue_wait"].get("p99_ms")}
 
 
 def recall_at_k(reference, candidate) -> float:
@@ -139,9 +220,55 @@ def main(smoke: bool = False):
                              "mean_ms": stats["mean_ms"],
                              "inst/s": n_inst / wall})
 
+        # -- part 3: open-loop Poisson load through the async server ------
+        # Same checkpoint; the load generator submits on its own clock.
+        pool = np.asarray(data.X_test, np.float32)
+        low = SERVER_LOW_SMOKE if smoke else SERVER_LOW
+        over = SERVER_OVERLOAD_SMOKE if smoke else SERVER_OVERLOAD
+        server_recs = {}
+        for policy, delay_ms in (("deadline", low["deadline_ms"]),
+                                 ("fill_only", FILL_ONLY_DELAY_MS)):
+            server_recs[policy] = run_open_loop(
+                handle, pool, n_requests=low["n_requests"],
+                rate_rps=low["rate_rps"], delay_ms=delay_ms,
+                buckets=SERVER_BUCKETS, policy=policy, smoke=smoke, seed=2)
+        server_recs["overload"] = run_open_loop(
+            handle, pool, n_requests=over["n_requests"], rate_rps=None,
+            delay_ms=low["deadline_ms"], buckets=OVERLOAD_BUCKETS,
+            policy="overload_admission", smoke=smoke,
+            max_queue=over["max_queue"], seed=3)
+        for rec in server_recs.values():
+            emit_json(OUT_JSON, rec)
+
     print_table("serving latency per backend "
                 f"({n_requests} ragged requests, {n_inst} instances, k={K})",
                 rows_out, ["backend", "p50_ms", "p99_ms", "mean_ms", "inst/s"])
+
+    print_table(
+        f"open-loop Poisson server (arrival-to-completion, "
+        f"{low['n_requests']} offered at {low['rate_rps']} rps; overload = "
+        f"{over['n_requests']}-request burst, max_queue={over['max_queue']})",
+        [{"policy": name, "p50_ms": r["p50_ms"], "p99_ms": r["p99_ms"],
+          "qwait_p99_ms": r["queue_wait_p99_ms"],
+          "goodput_rps": r["goodput_rps"], "reject_rate": r["reject_rate"]}
+         for name, r in server_recs.items()],
+        ["policy", "p50_ms", "p99_ms", "qwait_p99_ms", "goodput_rps",
+         "reject_rate"])
+
+    # Continuous-batching acceptance gates, live in CI (verify.sh --smoke):
+    # deadline launch must beat drain-on-full on tail latency below
+    # saturation, and admission control must shed overload with bounded
+    # queue wait for what it accepts.
+    dl, fo, ov = (server_recs["deadline"], server_recs["fill_only"],
+                  server_recs["overload"])
+    assert dl["p99_ms"] < fo["p99_ms"], \
+        (f"deadline launch p99 {dl['p99_ms']:.1f}ms not below drain-on-full "
+         f"p99 {fo['p99_ms']:.1f}ms at {low['rate_rps']} rps")
+    assert ov["reject_rate"] > 0, \
+        "overload burst produced no rejections: admission control inert"
+    assert ov["queue_wait_p99_ms"] < QUEUE_WAIT_BOUND_MS, \
+        (f"accepted-request queue wait p99 {ov['queue_wait_p99_ms']:.1f}ms "
+         f"not bounded under overload (limit {QUEUE_WAIT_BOUND_MS}ms)")
 
     # -- part 2: shortlist vs exhaustive on the finer-block checkpoint ----
     from repro.kernels.bsr_predict import ops as bsr_ops

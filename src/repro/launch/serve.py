@@ -12,6 +12,19 @@ overrides just its ServeSpec with the CLI flags):
 
   PYTHONPATH=src python -m repro.launch.serve --xmc --backend bsr \
       --ckpt /tmp/xmc_ckpt --requests 64 --k 5
+
+XMC server mode (the continuous-batching async request path: deadline-
+launched buckets, admission control, and a multi-model router in one
+process; each --model carries its own per-model ServeSpec overrides and
+an open-loop Poisson load generator drives the router):
+
+  PYTHONPATH=src python -m repro.launch.serve --xmc --server \
+      --model wiki=/tmp/ckpt_a,backend=bsr,k=5,delay=2,max_queue=256 \
+      --model amazon=/tmp/ckpt_b,backend=dense,k=10 \
+      --rate 200 --requests 400
+
+With no --model, a single model named "default" is built from the plain
+XMC flags (--ckpt/--backend/--k/--max-batch-delay-ms/--max-queue).
 """
 
 from __future__ import annotations
@@ -23,6 +36,31 @@ import jax
 import numpy as np
 
 from repro.configs.registry import ARCH_IDS, get_config
+
+#: --model value: NAME=CKPT_DIR[,key=value...]; these keys override the
+#: checkpoint's own ServeSpec for that model's server.
+MODEL_KEYS = ("backend", "k", "delay", "max_queue", "shortlist_blocks")
+
+
+def parse_model_flag(value: str) -> tuple[str, str, dict]:
+    """'wiki=/tmp/ckpt,backend=bsr,k=5' -> (name, ckpt_dir, overrides)."""
+    head, *opts = value.split(",")
+    if "=" not in head:
+        raise argparse.ArgumentTypeError(
+            f"--model must look like NAME=CKPT_DIR[,key=value...], "
+            f"got {value!r}")
+    name, ckpt = head.split("=", 1)
+    overrides: dict = {}
+    for opt in opts:
+        if "=" not in opt:
+            raise argparse.ArgumentTypeError(
+                f"--model option {opt!r} is not key=value")
+        key, val = opt.split("=", 1)
+        if key not in MODEL_KEYS:
+            raise argparse.ArgumentTypeError(
+                f"--model key {key!r} unknown; valid: {MODEL_KEYS}")
+        overrides[key] = val
+    return name, ckpt, overrides
 
 
 def serve_xmc(args) -> None:
@@ -77,6 +115,84 @@ def serve_xmc(args) -> None:
           f"{sample.labels[:2].tolist()}")
 
 
+def serve_xmc_server(args) -> None:
+    """Multi-model continuous-batching server under open-loop Poisson load.
+
+    Builds one async `XMCServer` per --model (training a small demo
+    checkpoint first when the directory has none), routes a Poisson
+    request stream across them through `ModelRouter`, and reports
+    per-model arrival-to-completion percentiles, queue wait, goodput, and
+    reject rate.
+    """
+    from repro.serve.server import ModelRouter, Rejected
+    from repro.train.xmc import train_demo_checkpoint
+    from repro.xmc_api import CheckpointHandle
+
+    model_flags = args.model or [
+        (f"default={args.ckpt},backend={args.backend},k={args.k}")]
+    router = ModelRouter()
+    pools: dict[str, np.ndarray] = {}
+    t0 = time.time()
+    for flag in model_flags:
+        name, ckpt, ov = parse_model_flag(flag) \
+            if isinstance(flag, str) else flag
+        d, _ = train_demo_checkpoint(
+            ckpt, n_train=600, n_test=max(args.requests, 64),
+            n_features=args.features, n_labels=args.labels,
+            label_batch=min(128, args.labels), seed=args.seed)
+        handle = CheckpointHandle.open(ckpt)
+        serve = handle.spec.serve.replace(
+            backend=ov.get("backend", args.backend),
+            k=int(ov.get("k", args.k)),
+            max_batch_delay_ms=float(ov.get("delay",
+                                            args.max_batch_delay_ms)),
+            max_queue=(int(ov["max_queue"]) if "max_queue" in ov
+                       else args.max_queue),
+            shortlist_blocks=(int(ov["shortlist_blocks"])
+                              if "shortlist_blocks" in ov
+                              else args.shortlist_blocks))
+        router.add(name, handle.server(serve, name=name))
+        pools[name] = np.asarray(d.X_test, np.float32)
+        print(f"[server] model {name!r}: backend={serve.backend} "
+              f"k={serve.k} delay={serve.max_batch_delay_ms}ms "
+              f"max_queue={serve.max_queue} ({ckpt})")
+    print(f"[server] {len(router)} model(s) loaded+warmed in "
+          f"{time.time() - t0:.1f}s; offering ~{args.rate} req/s "
+          f"({args.requests} requests, Poisson arrivals)")
+
+    rng = np.random.default_rng(args.seed)
+    names = router.models()
+    futures = []
+    t_start = time.monotonic()
+    t_next = t_start
+    for _ in range(args.requests):
+        t_next += rng.exponential(1.0 / args.rate)
+        now = time.monotonic()
+        if t_next > now:
+            time.sleep(t_next - now)
+        name = names[int(rng.integers(len(names)))]
+        pool = pools[name]
+        n_i = int(rng.integers(1, args.max_request_rows + 1))
+        futures.append((name, router.submit(
+            name, pool[rng.integers(0, pool.shape[0], size=n_i)])))
+    router.stop()                     # flush: every accepted future resolves
+    wall = time.monotonic() - t_start
+
+    for name in names:
+        st = router[name].stats()
+        lat, qw = st["latency"], st["queue_wait"]
+        print(f"[server] {name}: completed={st['completed']} "
+              f"rejected={st['rejected']} "
+              f"(reject_rate={st['reject_rate']:.3f}) "
+              f"p50={lat.get('p50_ms', float('nan')):.2f}ms "
+              f"p99={lat.get('p99_ms', float('nan')):.2f}ms "
+              f"queue_wait_p99={qw.get('p99_ms', float('nan')):.2f}ms")
+    done = sum(1 for _, f in futures
+               if not isinstance(f.result(0), Rejected))
+    print(f"[server] goodput {done / wall:.1f} req/s over {wall:.2f}s wall "
+          f"across {len(names)} model(s)")
+
+
 def serve_lm(args) -> None:
     from repro.models.model import build_model
     from repro.serve import serve_batch
@@ -105,6 +221,21 @@ def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--xmc", action="store_true",
                     help="serve XMC top-k label queries instead of LM decode")
+    ap.add_argument("--server", action="store_true",
+                    help="XMC mode: run the async continuous-batching "
+                         "multi-model server under Poisson load instead of "
+                         "the synchronous engine demo")
+    ap.add_argument("--model", action="append", default=None,
+                    metavar="NAME=CKPT[,key=val...]",
+                    help="server mode, repeatable: route NAME to CKPT with "
+                         f"per-model ServeSpec overrides {MODEL_KEYS}")
+    ap.add_argument("--rate", type=float, default=200.0,
+                    help="server mode: offered load, requests/s (Poisson)")
+    ap.add_argument("--max-batch-delay-ms", type=float, default=2.0,
+                    help="server mode: bucket launch deadline")
+    ap.add_argument("--max-queue", type=int, default=None,
+                    help="server mode: admission bound on queued requests "
+                         "(default unbounded)")
     ap.add_argument("--arch", default=None, choices=list(ARCH_IDS),
                     help="LM mode: architecture to serve")
     ap.add_argument("--smoke", action="store_true")
@@ -128,7 +259,12 @@ def main() -> None:
     args = ap.parse_args()
 
     if args.xmc:
-        serve_xmc(args)
+        if args.server:
+            serve_xmc_server(args)
+        else:
+            serve_xmc(args)
+    elif args.server:
+        ap.error("--server requires --xmc (the LM path has no async server)")
     else:
         if args.arch is None:
             ap.error("--arch is required in LM mode (or pass --xmc)")

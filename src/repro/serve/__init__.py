@@ -1,18 +1,26 @@
-"""Serving subsystem: two engines over one shared batching layer.
+"""Serving subsystem: two engines over one shared batching layer, plus the
+async request-path server.
 
   engine    — LM decode serving (prefill + decode_step loops).
   xmc       — XMC top-k label serving over a registry of pluggable predict
               backends (dense / BSR-Pallas / mesh-sharded / shortlist built
               in; `register_backend` adds more). The spec-driven way to
               build an engine is `repro.xmc_api.CheckpointHandle.engine()`.
+  server    — continuous-batching async loop over an engine: deadline-
+              launched buckets, double-buffered dispatch, admission
+              control (`Rejected`), future-style results, and multi-model
+              routing (`ModelRouter`). Spec-driven entry:
+              `CheckpointHandle.server()`.
   shortlist — the coarse candidate stage of two-stage scoring: row-block
               centroids built from the packed BSR checkpoint, persisted by
               checkpoint/io.py, consumed by the "shortlist" backend.
-  batching  — request-side machinery both engines share: ragged padding,
-              size-bucketed micro-batch queue, latency accounting.
+  batching  — request-side machinery everything above shares: ragged
+              padding, size-bucketed micro-batch queue with arrival
+              timestamps and deadline launch, latency accounting.
 """
 
 from repro.serve.engine import generate, serve_batch
+from repro.serve.server import ModelRouter, Rejected, XMCFuture, XMCServer
 from repro.serve.shortlist import ShortlistArtifact, build_shortlist
 from repro.serve.xmc import (BACKENDS, BsrBackend, DenseBackend,
                              PredictBackend, ShardedBackend,
@@ -22,6 +30,7 @@ from repro.serve.xmc import (BACKENDS, BsrBackend, DenseBackend,
                              unregister_backend, warmup_cache_stats)
 
 __all__ = ["generate", "serve_batch", "XMCEngine", "XMCResult",
+           "XMCServer", "XMCFuture", "ModelRouter", "Rejected",
            "PredictBackend", "DenseBackend", "BsrBackend", "ShardedBackend",
            "ShortlistBackend", "ShortlistArtifact", "build_shortlist",
            "make_backend", "BACKENDS", "register_backend",

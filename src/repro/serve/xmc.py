@@ -44,7 +44,11 @@ labels keep their exact-zero dense score in every backend.
 Request-side machinery lives here too: the engine pulls requests through
 `serve.batching.MicroBatchQueue` (size-bucketed padding of ragged streams),
 warms up one XLA compile per bucket, and tracks per-request latency
-percentiles. Backend math lives in module-level jitted functions, so two
+percentiles (enqueue -> completion, so queue wait is measured). The
+synchronous path is `submit()` + `step()`; `engine.server()` wraps the
+same engine in the async continuous-batching loop (`serve/server.py`) —
+future-style results, deadline-launched buckets, admission control —
+without changing the backend math or the top-k bits. Backend math lives in module-level jitted functions, so two
 backends over equal-shaped models share one XLA compile cache entry per
 bucket — opening a second engine never repeats the first one's warm-up
 compiles (the process-wide ledger below skips the redundant dispatches).
@@ -504,6 +508,12 @@ class XMCEngine:
 
     # -- serving ------------------------------------------------------------
 
+    def ensure_warm(self, bucket: int) -> None:
+        """Warm one bucket if this engine has not yet (step() and the async
+        server share this so no request pays a compile mid-flight)."""
+        if bucket not in self._warm:
+            self.warmup([bucket])
+
     def warmup(self, buckets: Sequence[int] | None = None) -> int:
         """Compile the backend once per bucket shape (cold-start cost paid
         up front, not on the first unlucky request). Returns the number of
@@ -545,25 +555,33 @@ class XMCEngine:
         return self.queue.submit(np.asarray(x, np.float32))
 
     def step(self) -> list[XMCResult]:
-        """Drain the queue: run every micro-batch, un-pad, return results."""
+        """Drain the queue: run every micro-batch, un-pad, return results.
+
+        One `XMCResult` per request id, always — a request the queue split
+        across micro-batches (oversize) has its rows re-coalesced in
+        dispatch order before anything is returned. Latency is recorded per
+        request from its own enqueue timestamp to the completion of its
+        last micro-batch, so time spent waiting in the queue (between
+        `submit` and this drain) is part of the number.
+        """
         out: dict[int, list[tuple[np.ndarray, np.ndarray]]] = {}
-        lat_by_rid: dict[int, float] = {}
+        arrival_by_rid: dict[int, float] = {}
+        done_by_rid: dict[int, float] = {}
         for mb in self.queue.drain():
-            if mb.bucket not in self._warm:
-                self.warmup([mb.bucket])
-            t0 = time.time()
+            self.ensure_warm(mb.bucket)
             scores, labels = self.backend.topk(jnp.asarray(mb.x))
             jax.block_until_ready(labels)
-            dt = time.time() - t0
-            # Every co-batched request waited for the same dispatch; a
-            # request split across micro-batches waited for all of them.
-            for rid in set(mb.request_ids):
-                lat_by_rid[rid] = lat_by_rid.get(rid, 0.0) + dt
+            t_done = time.monotonic()
+            # A split request completes with its LAST micro-batch: later
+            # batches overwrite t_done, the arrival never changes.
+            for rid, arrival in zip(mb.request_ids, mb.arrivals):
+                arrival_by_rid[rid] = arrival
+                done_by_rid[rid] = t_done
             scores, labels = np.asarray(scores), np.asarray(labels)
             for (rid, s), (_, l) in zip(mb.split(scores), mb.split(labels)):
                 out.setdefault(rid, []).append((s, l))
-        for rid in sorted(lat_by_rid):
-            self.stats.record(lat_by_rid[rid])
+        for rid in sorted(done_by_rid):
+            self.stats.record_span(arrival_by_rid[rid], done_by_rid[rid])
         results = []
         for rid in sorted(out):
             parts = out[rid]
@@ -579,6 +597,16 @@ class XMCEngine:
         for x in requests:
             self.submit(x)
         return self.step()
+
+    def server(self, **kwargs) -> "object":
+        """Wrap this engine in the async continuous-batching loop
+        (`serve.server.XMCServer`): `submit` returns futures, buckets
+        launch on fill OR deadline, admission control sheds overload. The
+        synchronous `step()` path stays available and bit-identical.
+        Keyword args go to `XMCServer` (max_batch_delay_ms, max_queue,
+        max_inflight, name, start)."""
+        from repro.serve.server import XMCServer     # deferred: no cycle
+        return XMCServer(self, **kwargs)
 
     def latency_summary(self) -> dict[str, float]:
         return self.stats.summary()

@@ -39,6 +39,15 @@ class ServeSpec(Spec):
                 artifact's default (~1/8 of the row blocks); values above
                 the row-block count are clamped, and B = n_row_blocks is
                 exactly exhaustive scoring. Ignored by other backends.
+    max_batch_delay_ms : continuous-batching launch deadline for the async
+                server (`CheckpointHandle.server()`): a partially filled
+                bucket launches once its oldest request has waited this
+                long. 0 dispatches every submit immediately; the
+                synchronous `engine()` path ignores it.
+    max_queue : admission bound for the async server — requests arriving
+                while this many are already queued get an immediate
+                `Rejected` result instead of growing the queue without
+                bound. None = unbounded. Ignored by `engine()`.
     """
     backend: str = "bsr"
     k: int = 5
@@ -46,6 +55,8 @@ class ServeSpec(Spec):
     interpret: Optional[bool] = None
     warmup: bool = True
     shortlist_blocks: Optional[int] = None
+    max_batch_delay_ms: float = 2.0
+    max_queue: Optional[int] = None
 
     def validate(self) -> "ServeSpec":
         if self.k < 1:
@@ -59,6 +70,12 @@ class ServeSpec(Spec):
             raise ValueError(f"shortlist_blocks must be >= 1 (or None for "
                              f"the artifact default), got "
                              f"{self.shortlist_blocks}")
+        if self.max_batch_delay_ms < 0:
+            raise ValueError(f"max_batch_delay_ms must be >= 0, got "
+                             f"{self.max_batch_delay_ms}")
+        if self.max_queue is not None and self.max_queue < 1:
+            raise ValueError(f"max_queue must be >= 1 (or None for "
+                             f"unbounded), got {self.max_queue}")
         return self
 
     def resolved_interpret(self) -> bool:

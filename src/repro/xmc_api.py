@@ -261,3 +261,19 @@ class CheckpointHandle:
             mesh=mesh, interpret=serve.resolved_interpret(),
             buckets=tuple(serve.buckets), warmup=serve.warmup,
             shortlist_blocks=serve.shortlist_blocks)
+
+    def server(self, serve_override: Optional[ServeSpec] = None, *,
+               mesh=None, name: Optional[str] = None, start: bool = True):
+        """Build the async continuous-batching server this checkpoint's
+        spec describes (`serve.server.XMCServer`): `submit` returns
+        futures, buckets launch on fill OR `max_batch_delay_ms`, and
+        `max_queue` admission control sheds overload with `Rejected`
+        results. Several handles' servers compose into one process via
+        `serve.server.ModelRouter` — equal-shaped models share bucket
+        warm-up compiles. The synchronous `engine()` path is unchanged.
+        """
+        from repro.serve.server import XMCServer
+        serve = (serve_override or self.spec.serve).validate()
+        return XMCServer(self.engine(serve, mesh=mesh),
+                         max_batch_delay_ms=serve.max_batch_delay_ms,
+                         max_queue=serve.max_queue, name=name, start=start)

@@ -269,6 +269,62 @@ def test_split_request_counts_once_in_latency_stats():
     assert engine.latency_summary()["count"] == 1
 
 
+def test_next_batch_launch_policy():
+    """Continuous-batching launch decision, with an injected clock: no
+    launch before the deadline, launch at the deadline, immediate launch
+    when the largest bucket fills, and force for drain/shutdown."""
+    q = MicroBatchQueue(buckets=(2, 4))
+    assert q.next_batch(force=True) is None          # empty queue
+    q.submit(np.ones((1, 3), np.float32), arrival=100.0)
+    # Partially filled, deadline not reached: hold.
+    assert q.next_batch(now=100.001, max_delay_s=0.002) is None
+    # No deadline configured at all: hold until full.
+    assert q.next_batch(now=999.0) is None
+    # Deadline expired: ship the partial bucket.
+    mb = q.next_batch(now=100.01, max_delay_s=0.002)
+    assert mb is not None and mb.bucket == 2 and mb.row_counts == [1]
+    assert mb.arrivals == [100.0]
+    # Fill launch: 4 rows >= largest bucket ships with no deadline check.
+    for i in range(4):
+        q.submit(np.ones((1, 3), np.float32), arrival=200.0 + i)
+    mb = q.next_batch(now=200.0)                     # zero elapsed time
+    assert mb is not None and mb.bucket == 4
+    assert mb.arrivals == [200.0, 201.0, 202.0, 203.0]
+    assert q.next_batch(now=200.0) is None
+    # Force drains regardless of clock or fill.
+    q.submit(np.ones((1, 3), np.float32), arrival=300.0)
+    assert q.next_batch(force=True) is not None
+
+
+def test_queue_pending_and_arrival_accounting():
+    """pending_requests counts distinct requests (a split request once),
+    pending_rows counts instances, oldest_arrival tracks head-of-line —
+    the three quantities the server's launch/admission decisions read."""
+    q = MicroBatchQueue(buckets=(2, 4))
+    assert q.pending_requests() == 0 and q.pending_rows() == 0
+    assert q.oldest_arrival() is None
+    q.submit(np.ones((10, 3), np.float32), arrival=5.0)   # 3 pieces, 1 req
+    q.submit(np.ones((1, 3), np.float32), arrival=6.0)
+    assert q.pieces_of(10) == 3 and q.pieces_of(4) == 1
+    assert q.pending_requests() == 2
+    assert q.pending_rows() == 11
+    assert q.oldest_arrival() == 5.0
+    q.next_batch(force=True)                         # first 4-row piece out
+    assert q.pending_requests() == 2                 # split req still queued
+    assert q.pending_rows() == 7
+    list(q.drain())
+    assert q.pending_requests() == 0 and q.pending_rows() == 0
+
+
+def test_reserve_id_shares_namespace_with_submit():
+    q = MicroBatchQueue(buckets=(2,))
+    a = q.submit(np.ones((1, 3), np.float32))
+    b = q.reserve_id()                               # e.g. a rejected request
+    c = q.submit(np.ones((1, 3), np.float32))
+    assert [a, b, c] == [0, 1, 2]
+    assert q.pending_requests() == 2                 # reserve queues nothing
+
+
 def test_latency_stats_percentiles():
     s = LatencyStats()
     for ms in [1, 2, 3, 4, 100]:
@@ -277,6 +333,35 @@ def test_latency_stats_percentiles():
     assert out["count"] == 5
     assert out["p50_ms"] == pytest.approx(3.0)
     assert out["p99_ms"] > out["p50_ms"]
+
+
+def test_latency_stats_record_span_and_aggregate_wrapper():
+    """record_span is the per-request primitive (enqueue -> completion
+    timestamps); the legacy record(seconds, n) API stamps one duration onto
+    n requests through the same samples list."""
+    s = LatencyStats()
+    s.record_span(10.0, 10.004)                      # 4 ms span
+    s.record(0.002, n_requests=3)                    # 3 aggregate samples
+    out = s.summary()
+    assert s.count == 4 and out["count"] == 4
+    assert out["p50_ms"] == pytest.approx(2.0)
+    assert max(np.asarray(s._ms)) == pytest.approx(4.0)
+
+
+def test_step_latency_includes_queue_wait():
+    """Per-request spans start at enqueue, not at dispatch: a request that
+    sat in the queue before step() ran reports that wait in its latency."""
+    import time
+    L, D = 140, 256
+    _, bsr = _random_pruned_bsr(L, D, seed=16)
+    be = make_backend("dense", bsr, 3, n_labels=L)
+    engine = XMCEngine(be, buckets=(2,), warmup=False, n_features=D)
+    engine.submit(np.zeros((1, D), np.float32))
+    time.sleep(0.05)
+    engine.step()
+    stats = engine.latency_summary()
+    assert stats["count"] == 1
+    assert stats["p50_ms"] >= 50.0                   # the queue wait is real
 
 
 def test_engine_bucket_warmup_counts():

@@ -7,7 +7,10 @@
 # The smoke leg runs `benchmarks.run --smoke` (train_pipeline +
 # tron_hotpath + serve_latency on tiny shapes) so the benchmark
 # entrypoints cannot silently rot: they import, run end-to-end, and keep
-# their bit-identity assertions live on every change.
+# their bit-identity assertions live on every change. serve_latency's
+# smoke includes the open-loop Poisson server gates: deadline launch
+# beats drain-on-full on p99, and admission control sheds overload with
+# bounded queue wait.
 #
 # The docs gate keeps the documentation surface honest: every intra-repo
 # link in README.md and docs/*.md must resolve (tools/check_docs.py), and
