@@ -39,6 +39,21 @@ batching PR's acceptance gates, wired into tools/verify.sh through
     bounded, instead of the unbounded queue growth an un-admission-
     controlled open loop produces.
 
+Part 4 is the int8 serving gate: the finer-block checkpoint of part 2 is
+served int8 (exhaustive "int8" backend and the shortlist backend's int8
+fine stage) against fp32 on identical requests, and the `int8_vs_fp32`
+record reports top-k agreement@k, the mean top-k Jaccard, the weight
+payload bytes ratio (int8 values + fp32 per-block scales vs fp32 blocks),
+and paired p50 latencies. Two assertions run live in --smoke (wired into
+tools/verify.sh through `benchmarks.run --smoke`): bytes_ratio <= 0.55 and
+topk agreement@k >= 0.99, for both the exhaustive int8 path and the
+shortlist-composed gathered-int8 path.
+
+Every record is stamped `"schema": 2` (closed-loop per-request
+percentiles, smoke floor of 32 requests); trend tooling should skip
+rows without it — pre-PR-6 rows were batched-drain timestamps with
+p50 == p99 by construction.
+
 This is the serving-side companion of table_prediction_speed (which
 measures raw predict calls without the queue/bucketing layer).
 """
@@ -58,10 +73,23 @@ from repro.xmc_api import CheckpointHandle
 
 OUT_JSON = "BENCH_serve.json"
 
+#: Record schema version stamped on every emitted row. 2 = closed-loop
+#: per-request percentiles with the 32-request smoke floor; rows without
+#: the field predate PR 6 (batched-drain timestamps, p50==p99).
+SCHEMA = 2
+
 N_REQUESTS = 64
-N_REQUESTS_SMOKE = 32                  # enough samples for distinct p50/p90
+SMOKE_FLOOR = 32          # no smoke config may serve fewer requests: below
+                          # this, percentiles degenerate (p50==p99 again)
+N_REQUESTS_SMOKE = max(32, SMOKE_FLOOR)
 MAX_ROWS = 8
 K = 5
+
+
+def emit(rec: dict) -> None:
+    """Append one schema-stamped record to the benchmark JSON."""
+    rec.setdefault("schema", SCHEMA)
+    emit_json(OUT_JSON, rec)
 
 # Part 2's finer-block demo model: the default serving checkpoint tiles
 # labels into 128-row blocks, which leaves the smoke model (64 labels) ONE
@@ -178,6 +206,17 @@ def recall_at_k(reference, candidate) -> float:
     return hits / total
 
 
+def topk_jaccard(reference, candidate) -> float:
+    """Mean per-instance Jaccard similarity of the two engines' top-k
+    label sets (1.0 = identical sets; order-insensitive)."""
+    vals = []
+    for ref, got in zip(reference, candidate):
+        for row_ref, row_got in zip(ref.labels, got.labels):
+            a, b = set(row_ref.tolist()), set(row_got.tolist())
+            vals.append(len(a & b) / len(a | b))
+    return float(np.mean(vals))
+
+
 def main(smoke: bool = False):
     n_requests = N_REQUESTS_SMOKE if smoke else N_REQUESTS
     demo = (dict(n_train=200, n_test=64, n_features=512, n_labels=64,
@@ -214,7 +253,7 @@ def main(smoke: bool = False):
                    "p50_ms": stats["p50_ms"], "p90_ms": stats["p90_ms"],
                    "p99_ms": stats["p99_ms"], "mean_ms": stats["mean_ms"],
                    "throughput_inst_per_s": n_inst / wall}
-            emit_json(OUT_JSON, rec)
+            emit(rec)
             rows_out.append({"backend": kind, "p50_ms": stats["p50_ms"],
                              "p99_ms": stats["p99_ms"],
                              "mean_ms": stats["mean_ms"],
@@ -223,8 +262,10 @@ def main(smoke: bool = False):
         # -- part 3: open-loop Poisson load through the async server ------
         # Same checkpoint; the load generator submits on its own clock.
         pool = np.asarray(data.X_test, np.float32)
-        low = SERVER_LOW_SMOKE if smoke else SERVER_LOW
-        over = SERVER_OVERLOAD_SMOKE if smoke else SERVER_OVERLOAD
+        low = dict(SERVER_LOW_SMOKE if smoke else SERVER_LOW)
+        over = dict(SERVER_OVERLOAD_SMOKE if smoke else SERVER_OVERLOAD)
+        low["n_requests"] = max(SMOKE_FLOOR, low["n_requests"])
+        over["n_requests"] = max(SMOKE_FLOOR, over["n_requests"])
         server_recs = {}
         for policy, delay_ms in (("deadline", low["deadline_ms"]),
                                  ("fill_only", FILL_ONLY_DELAY_MS)):
@@ -238,7 +279,7 @@ def main(smoke: bool = False):
             policy="overload_admission", smoke=smoke,
             max_queue=over["max_queue"], seed=3)
         for rec in server_recs.values():
-            emit_json(OUT_JSON, rec)
+            emit(rec)
 
     print_table("serving latency per backend "
                 f"({n_requests} ragged requests, {n_inst} instances, k={K})",
@@ -326,7 +367,7 @@ def main(smoke: bool = False):
                "mean_ms_exhaustive": ex_stats["mean_ms"],
                "throughput_inst_per_s_shortlist": n_inst / sl_wall,
                "throughput_inst_per_s_exhaustive": n_inst / ex_wall}
-        emit_json(OUT_JSON, rec)
+        emit(rec)
         print_table(
             f"shortlist vs exhaustive (L={demo2['n_labels']}, "
             f"R={backend.artifact.n_row_blocks} row blocks, B={backend.B})",
@@ -343,6 +384,74 @@ def main(smoke: bool = False):
             f"candidate fraction {fraction:.3f} not sub-linear (< 25%)"
         assert recall >= RECALL_GATE, \
             f"recall@{K} {recall:.3f} below the {RECALL_GATE} gate"
+
+        # -- part 4: int8 vs fp32 on the same finer-block checkpoint ------
+        from repro.checkpoint.io import load_block_sparse_int8
+
+        q_model, _ = load_block_sparse_int8(ckpt, model=model)
+        bl, bd = model.block_shape
+        fp32_bytes = 4 * model.n_blocks * bl * bd
+        bytes_ratio = q_model.payload_bytes() / fp32_bytes
+
+        i8_engine = handle.engine(ServeSpec(backend="int8", k=K))
+        i8_results, i8_wall = serve_closed_loop(i8_engine, requests)
+        i8_stats = i8_engine.latency_summary()
+        agreement = recall_at_k(ex_results, i8_results)
+        jaccard = topk_jaccard(ex_results, i8_results)
+
+        # Composition: the shortlist coarse gate over the gathered-int8
+        # fine stage, judged against the fp32 shortlist on the SAME
+        # candidate sets (the coarse stage is identical, so any
+        # disagreement is pure quantization).
+        sli8_engine = handle.engine(
+            ServeSpec(backend="shortlist", k=K,
+                      shortlist_blocks=SHORTLIST_B, int8=True))
+        assert getattr(sli8_engine.backend, "int8", False), \
+            "shortlist backend did not engage its int8 fine stage"
+        sli8_results, _ = serve_closed_loop(sli8_engine, requests)
+        sl_agreement = recall_at_k(sl_results, sli8_results)
+        sl_jaccard = topk_jaccard(sl_results, sli8_results)
+
+        rec = {"bench": "serve_latency", "backend": "int8_vs_fp32",
+               "smoke": smoke, "n_requests": n_requests,
+               "n_instances": n_inst, "k": K,
+               "n_labels": demo2["n_labels"], "n_blocks": model.n_blocks,
+               "block_shape": [bl, bd],
+               "bytes_int8": q_model.payload_bytes(),
+               "bytes_fp32": fp32_bytes, "bytes_ratio": bytes_ratio,
+               "topk_agreement_at_k": agreement, "topk_jaccard": jaccard,
+               "shortlist_topk_agreement_at_k": sl_agreement,
+               "shortlist_topk_jaccard": sl_jaccard,
+               "p50_ms_int8": i8_stats["p50_ms"],
+               "p50_ms_fp32": ex_stats["p50_ms"],
+               "mean_ms_int8": i8_stats["mean_ms"],
+               "mean_ms_fp32": ex_stats["mean_ms"],
+               "throughput_inst_per_s_int8": n_inst / i8_wall}
+        emit(rec)
+        print_table(
+            f"int8 vs fp32 (L={demo2['n_labels']}, {model.n_blocks} blocks "
+            f"of {bl}x{bd}, bytes ratio {bytes_ratio:.3f})",
+            [{"path": "exhaustive", "agreement@k": agreement,
+              "jaccard": jaccard, "p50_ms_int8": i8_stats["p50_ms"],
+              "p50_ms_fp32": ex_stats["p50_ms"]},
+             {"path": "shortlist", "agreement@k": sl_agreement,
+              "jaccard": sl_jaccard, "p50_ms_int8": None,
+              "p50_ms_fp32": sl_stats["p50_ms"]}],
+            ["path", "agreement@k", "jaccard", "p50_ms_int8",
+             "p50_ms_fp32"])
+
+        # Int8 acceptance gates, live in CI (tools/verify.sh --smoke):
+        # the quantized artifact must actually be small, and must not
+        # change what gets served — on the exhaustive path AND composed
+        # with the shortlist gate.
+        assert bytes_ratio <= 0.55, \
+            (f"int8 payload {q_model.payload_bytes()} bytes is "
+             f"{bytes_ratio:.3f}x fp32 (gate: <= 0.55)")
+        assert agreement >= 0.99, \
+            f"int8 top-{K} agreement {agreement:.4f} below the 0.99 gate"
+        assert sl_agreement >= 0.99, \
+            (f"shortlist-composed int8 top-{K} agreement "
+             f"{sl_agreement:.4f} below the 0.99 gate")
 
     print(f"\nwrote {OUT_JSON}")
 

@@ -28,10 +28,14 @@ def run() -> list[dict]:
         sparse_b = model.nnz * 8                     # (value, index) pairs
         bl, bd = bsr.block_shape
         bsr_b = bsr.n_blocks * (bl * bd * 4 + 8)     # blocks + coords
+        # int8 serving artifact: 1-byte block values + 4-byte per-block
+        # scale + the same 8-byte coords (checkpoint/io.py persists this
+        # next to the fp32 blocks; the ratio is what serve_latency gates).
+        int8_b = bsr.n_blocks * (bl * bd + 4 + 8)
         rows.append({
             "dataset": name, "L": W.shape[0], "D": W.shape[1],
             "dense_mb": dense_b / 1e6, "sparse_mb": sparse_b / 1e6,
-            "bsr_mb": bsr_b / 1e6,
+            "bsr_mb": bsr_b / 1e6, "int8_mb": int8_b / 1e6,
             "density": float(model.nnz) / W.size,
             "block_density": bsr.density,
         })
@@ -53,7 +57,7 @@ def main():
     rows = run()
     print_table("SS4.2 model size accounting", rows,
                 ["dataset", "L", "D", "dense_mb", "sparse_mb", "bsr_mb",
-                 "density", "block_density"])
+                 "int8_mb", "density", "block_density"])
     ex = paper_scale_extrapolation()
     print(f"\nPaper-scale check (WikiLSHTC-325K, 99.5% ambiguous):")
     print(f"  dense  : {ex['dense_gb']:.0f} GB analytic vs "

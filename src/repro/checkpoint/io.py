@@ -130,11 +130,16 @@ def save_block_sparse(model, directory: str, *, meta: dict | None = None):
     """Write a `BlockSparseModel` (+ optional serving metadata such as
     n_labels / delta) as one .npz + JSON index under `directory`, plus the
     shortlist artifact for two-stage serving."""
+    from repro.core.pruning import quantize_blocks       # deferred: no cycle
     from repro.serve.shortlist import build_shortlist    # deferred: no cycle
     os.makedirs(directory, exist_ok=True)
+    blocks = np.asarray(model.blocks)
+    blocks_int8, block_scales = quantize_blocks(blocks)
     np.savez_compressed(
         os.path.join(directory, BSR_ARRAYS),
-        blocks=np.asarray(model.blocks),
+        blocks=blocks,
+        blocks_int8=blocks_int8,
+        block_scales=block_scales,
         block_rows=np.asarray(model.block_rows),
         block_cols=np.asarray(model.block_cols),
         row_ptr=np.asarray(model.row_ptr))
@@ -144,7 +149,8 @@ def save_block_sparse(model, directory: str, *, meta: dict | None = None):
         "orig_shape": list(model.orig_shape or model.shape),
         "block_shape": list(model.block_shape),
         "n_blocks": model.n_blocks,
-        "dtype": str(np.asarray(model.blocks).dtype),
+        "dtype": str(blocks.dtype),
+        "int8": True,
         "meta": dict(meta or {}),
         "shortlist": save_shortlist(directory, build_shortlist(model)),
     }
@@ -338,7 +344,9 @@ class BlockSparseWriter:
         """Append one solved label batch (append-form `BlockSparseModel`,
         see `core.pruning.to_block_sparse(row_block_offset=...)`) and
         release this batch's lease (if any) in the same manifest commit."""
+        from repro.core.pruning import quantize_blocks   # deferred: no cycle
         blocks = np.asarray(part.blocks)
+        blocks_int8, block_scales = quantize_blocks(blocks)
         fname = f"shard-{batch:05d}.npz"
         path = os.path.join(self.directory, fname)
         # tmp + rename: a shard re-solved by a second worker (expired
@@ -349,6 +357,8 @@ class BlockSparseWriter:
         np.savez_compressed(
             tmp,
             blocks=blocks,
+            blocks_int8=blocks_int8,
+            block_scales=block_scales,
             block_rows=np.asarray(part.block_rows),
             block_cols=np.asarray(part.block_cols),
             row_ptr=np.asarray(part.row_ptr))
@@ -359,6 +369,7 @@ class BlockSparseWriter:
                 "n_rows": int(n_rows), "padded_rows": int(part.shape[0]),
                 "n_blocks": int(blocks.shape[0]),
                 "nnz": int(np.count_nonzero(blocks)),
+                "int8": True,
             }
             self.manifest["leases"].pop(str(int(batch)), None)
 
@@ -668,6 +679,61 @@ def load_block_sparse(directory: str):
         block_shape=tuple(index["block_shape"]),
         orig_shape=tuple(index.get("orig_shape", index["shape"])))
     return model, index["meta"]
+
+
+def _stream_int8_arrays(directory: str, manifest: dict):
+    """The persisted int8 block/scale arrays of a complete stream
+    checkpoint, stitched in the SAME order `concat_block_sparse` packs the
+    fp32 blocks (sorted batch id, first row_ptr[-1] blocks per shard), or
+    None when any shard predates the int8 artifact."""
+    qs, ss = [], []
+    for b in sorted(manifest["shards"], key=int):
+        entry = manifest["shards"][b]
+        data = np.load(os.path.join(directory, entry["file"]))
+        if "blocks_int8" not in data.files:
+            return None
+        n_p = int(np.asarray(data["row_ptr"])[-1])
+        if n_p:
+            qs.append(np.asarray(data["blocks_int8"])[:n_p])
+            ss.append(np.asarray(data["block_scales"])[:n_p])
+    if not qs:                       # fully pruned: mirror concat's sentinel
+        bl, bd = manifest["block_shape"]
+        return (np.zeros((1, bl, bd), np.int8), np.zeros((1,), np.float32))
+    return np.concatenate(qs, axis=0), np.concatenate(ss)
+
+
+def load_block_sparse_int8(directory: str, *, model=None):
+    """Returns (Int8BlockSparseModel, meta dict) for either layout.
+
+    Uses the persisted `blocks_int8` / `block_scales` arrays when the
+    checkpoint carries them; legacy (pre-int8) checkpoints quantize lazily
+    from the fp32 blocks — bit-identical to the persisted artifact, since
+    quantization is a deterministic function of the fp32 blocks. Pass the
+    already-loaded fp32 `model` to skip re-reading the block arrays (the
+    serving engine loads fp32 first for the shortlist artifact anyway)."""
+    from repro.core.pruning import (Int8BlockSparseModel,   # deferred: no
+                                    quantize_block_sparse)  # import cycle
+
+    index = load_block_sparse_meta(directory)
+    if model is None:
+        model, meta = load_block_sparse(directory)
+    else:
+        meta = index["meta"]
+
+    if index.get("layout") == "stream":
+        arrays = _stream_int8_arrays(directory, index["manifest"])
+    else:
+        data = np.load(os.path.join(directory, BSR_ARRAYS))
+        arrays = ((data["blocks_int8"], data["block_scales"])
+                  if "blocks_int8" in data.files else None)
+    if arrays is None or arrays[0].shape[0] != model.n_blocks:
+        return quantize_block_sparse(model), meta
+    q, scales = arrays
+    return Int8BlockSparseModel(
+        blocks=jnp.asarray(q), scales=jnp.asarray(scales),
+        block_rows=model.block_rows, block_cols=model.block_cols,
+        row_ptr=model.row_ptr, shape=model.shape,
+        block_shape=model.block_shape, orig_shape=model.orig_shape), meta
 
 
 def restore_pytree(template, directory: str):

@@ -105,6 +105,12 @@ class BlockSparseModel:
               cols[k] * bd:(cols[k] + 1) * bd] = blocks[k]
         return jnp.asarray(W)
 
+    def quantize(self, *, device: bool = True) -> "Int8BlockSparseModel":
+        """Symmetric per-block int8 artifact of this model (value payload
+        ~0.25x, per-block fp32 scales riding alongside) — the `"int8"`
+        serving backend's model. See `quantize_block_sparse`."""
+        return quantize_block_sparse(self, device=device)
+
     def save(self, directory: str, *, meta: dict | None = None) -> None:
         """Persist as the serving checkpoint artifact (checkpoint/io.py) —
         the paper's offline model files, in packed BSR form."""
@@ -116,6 +122,99 @@ class BlockSparseModel:
         """Returns (model, meta). Inverse of `save`."""
         from repro.checkpoint.io import load_block_sparse
         return load_block_sparse(directory)
+
+
+#: Symmetric int8 range: scale = max|block| / INT8_QMAX, values in
+#: [-INT8_QMAX, INT8_QMAX]. -128 is never produced, so negation round-trips.
+INT8_QMAX = 127
+
+
+def quantize_blocks(blocks) -> tuple[np.ndarray, np.ndarray]:
+    """Symmetric per-block int8 quantization of packed (nb, bl, bd) blocks.
+
+    Returns (q, scales): q int8 with q[k] ~= blocks[k] / scales[k], scales
+    float32 (nb,) with scales[k] = max|blocks[k]| / 127. Round-to-nearest-
+    even (np.rint) keeps the worst-case per-element error at scales[k] / 2.
+    An all-zero block (the fully-pruned sentinel) gets scale 0 and exact
+    int8 zeros. Deterministic in the fp32 blocks, so lazy quantization at
+    load reproduces the persisted artifact bit-for-bit.
+    """
+    b = np.asarray(blocks, np.float32)
+    amax = np.abs(b).max(axis=(1, 2))                       # (nb,)
+    scales = (amax / INT8_QMAX).astype(np.float32)
+    safe = np.where(scales > 0.0, scales, 1.0)[:, None, None]
+    q = np.clip(np.rint(b / safe), -INT8_QMAX, INT8_QMAX).astype(np.int8)
+    return q, scales
+
+
+def dequantize_blocks(q, scales) -> np.ndarray:
+    """Inverse of `quantize_blocks` up to the rounding error bound."""
+    return (np.asarray(q, np.float32)
+            * np.asarray(scales, np.float32)[:, None, None])
+
+
+@dataclasses.dataclass
+class Int8BlockSparseModel:
+    """Packed BSR with symmetric per-block int8 values + fp32 scales.
+
+    The serving-side compression artifact (paper §4.2's model-size lever,
+    taken one step past (value, index) pairs): each surviving (bl, bd)
+    block stores int8 values and ONE fp32 scale, quartering the dominant
+    payload — the predict kernel is bandwidth-bound, so HBM traffic drops
+    with it. Coordinates (`block_rows` / `block_cols` / `row_ptr`) and
+    shapes are shared with the fp32 `BlockSparseModel` it was quantized
+    from; the int8 Pallas kernels dequantize in-register against the
+    per-block scale and accumulate in fp32.
+    """
+    blocks: Array                     # (n_blocks, bl, bd) int8
+    scales: Array                     # (n_blocks,) float32
+    block_rows: Array
+    block_cols: Array
+    row_ptr: Array
+    shape: tuple[int, int]
+    block_shape: tuple[int, int]
+    orig_shape: tuple[int, int] | None = None
+
+    @property
+    def n_labels(self) -> int:
+        return (self.orig_shape or self.shape)[0]
+
+    @property
+    def n_features(self) -> int:
+        return (self.orig_shape or self.shape)[1]
+
+    @property
+    def n_blocks(self) -> int:
+        return int(self.blocks.shape[0])
+
+    def payload_bytes(self) -> int:
+        """Bytes of the quantized value payload (int8 blocks + scales) —
+        what the predict kernel streams from HBM per full pass."""
+        return (int(np.prod(self.blocks.shape))
+                + 4 * int(self.scales.shape[0]))
+
+    def dequantize(self) -> "BlockSparseModel":
+        """Back to a float32 `BlockSparseModel` (within the rounding
+        bound) — reference/debug path, never used by the serving kernels."""
+        return BlockSparseModel(
+            blocks=jnp.asarray(dequantize_blocks(self.blocks, self.scales)),
+            block_rows=self.block_rows, block_cols=self.block_cols,
+            row_ptr=self.row_ptr, shape=self.shape,
+            block_shape=self.block_shape, orig_shape=self.orig_shape)
+
+
+def quantize_block_sparse(model: "BlockSparseModel",
+                          *, device: bool = True) -> Int8BlockSparseModel:
+    """Quantize a packed fp32 model to the int8 serving artifact. The
+    coordinate arrays are shared (not copied); `device=False` keeps the
+    new arrays numpy for host-side checkpoint writers."""
+    q, scales = quantize_blocks(model.blocks)
+    put = jnp.asarray if device else np.asarray
+    return Int8BlockSparseModel(
+        blocks=put(q), scales=put(scales),
+        block_rows=model.block_rows, block_cols=model.block_cols,
+        row_ptr=model.row_ptr, shape=model.shape,
+        block_shape=model.block_shape, orig_shape=model.orig_shape)
 
 
 def to_block_sparse(W: Array, block_shape: tuple[int, int] = (128, 128),

@@ -18,31 +18,73 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.pruning import BlockSparseModel
-from repro.kernels.bsr_predict.kernel import (bsr_predict_gather_pallas,
+from repro.core.pruning import BlockSparseModel, Int8BlockSparseModel
+from repro.kernels.bsr_predict.kernel import (bsr_predict_gather_int8_pallas,
+                                              bsr_predict_gather_pallas,
+                                              bsr_predict_int8_pallas,
                                               bsr_predict_pallas)
 from repro.kernels.topk.kernel import NEG_INF
+
+
+def _pad_features(x: jax.Array, model) -> jax.Array:
+    """Pad x (n, D) to the model's padded feature width Dp.
+
+    D > Dp is a hard error with both dims named: the old D < Dp branch
+    silently fell through on oversized requests, which then shape-erred
+    deep inside the kernel's BlockSpec machinery (or mis-scored under jit
+    where the trace point is far from the caller).
+    """
+    Dp = model.shape[1]
+    D = x.shape[1]
+    if D > Dp:
+        raise ValueError(
+            f"request feature dim {D} exceeds the model's padded feature "
+            f"dim {Dp} (true feature dim {model.n_features}); bsr_predict "
+            "cannot score features the model never had — slice the request "
+            "or rebuild the model with the wider feature space")
+    if D < Dp:
+        x = jnp.pad(x, ((0, 0), (0, Dp - D)))
+    return x
+
+
+def _mask_empty_row_blocks(out: jax.Array, model) -> jax.Array:
+    # Mask empty row-blocks (undefined memory in the kernel output -- may be
+    # NaN in interpret mode, so select rather than multiply).
+    bl = model.block_shape[0]
+    counts = model.row_ptr[1:] - model.row_ptr[:-1]          # (Lp/bl,)
+    row_mask = jnp.repeat(counts > 0, bl)
+    return jnp.where(row_mask[None, :], out, 0.0)
 
 
 def bsr_predict(x: jax.Array, model: BlockSparseModel,
                 *, interpret: bool = True) -> jax.Array:
     """Scores (n, L) for a batch against a block-sparse model.
 
-    Pads x's feature dim to the padded model shape and zeroes out label
-    row-blocks that have no surviving blocks (never visited by the kernel).
+    Pads x's feature dim to the padded model shape (raising when the
+    request is WIDER than the model) and zeroes out label row-blocks that
+    have no surviving blocks (never visited by the kernel).
     """
     Lp, Dp = model.shape
     bl, bd = model.block_shape
-    n, D = x.shape
-    if D < Dp:
-        x = jnp.pad(x, ((0, 0), (0, Dp - D)))
+    x = _pad_features(x, model)
     out = bsr_predict_pallas(x, model.blocks, model.block_rows,
                              model.block_cols, Lp // bl, interpret=interpret)
-    # Mask empty row-blocks (undefined memory in the kernel output -- may be
-    # NaN in interpret mode, so select rather than multiply).
-    counts = model.row_ptr[1:] - model.row_ptr[:-1]          # (Lp/bl,)
-    row_mask = jnp.repeat(counts > 0, bl)
-    return jnp.where(row_mask[None, :], out, 0.0)
+    return _mask_empty_row_blocks(out, model)
+
+
+def bsr_predict_int8(x: jax.Array, model: Int8BlockSparseModel,
+                     *, interpret: bool = True) -> jax.Array:
+    """Scores (n, L) against the int8 per-block-scaled artifact — same
+    pad/mask conventions as `bsr_predict`, ~0.25x the model HBM traffic.
+    Scores match the fp32 path within the per-block quantization bound
+    (|w - scale*q| <= scale/2 elementwise)."""
+    Lp, Dp = model.shape
+    bl, bd = model.block_shape
+    x = _pad_features(x, model)
+    out = bsr_predict_int8_pallas(x, model.blocks, model.scales,
+                                  model.block_rows, model.block_cols,
+                                  Lp // bl, interpret=interpret)
+    return _mask_empty_row_blocks(out, model)
 
 
 def bsr_predict_topk(x: jax.Array, model: BlockSparseModel, k: int,
@@ -57,6 +99,25 @@ def bsr_predict_topk(x: jax.Array, model: BlockSparseModel, k: int,
     from repro.kernels.topk import ops as topk_ops   # deferred: no cycle
 
     scores = bsr_predict(x, model, interpret=interpret)
+    Lp = scores.shape[1]
+    if n_labels is not None and n_labels < Lp:
+        ids = jnp.arange(Lp)
+        scores = jnp.where(ids[None, :] < n_labels, scores, NEG_INF)
+    return topk_ops.topk(scores, k, interpret=interpret)
+
+
+def bsr_predict_int8_topk(x: jax.Array, model: Int8BlockSparseModel, k: int,
+                          *, n_labels: int | None = None,
+                          interpret: bool = True,
+                          ) -> tuple[jax.Array, jax.Array]:
+    """Fused int8 predict -> top-k: (vals, idx) each (n, k), idx in true
+    label ids — the `"int8"` backend's serving entry point. Padding labels
+    are masked to -inf between the kernels and fully pruned real labels
+    keep their exact-zero score (an all-zero block quantizes to scale 0),
+    matching the fp32 conventions."""
+    from repro.kernels.topk import ops as topk_ops   # deferred: no cycle
+
+    scores = bsr_predict_int8(x, model, interpret=interpret)
     Lp = scores.shape[1]
     if n_labels is not None and n_labels < Lp:
         ids = jnp.arange(Lp)
@@ -83,14 +144,27 @@ def bsr_predict_gather(x: jax.Array, model: BlockSparseModel,
     zero-initializes every selected output tile), so pruned labels keep
     the dense path's score convention without any extra masking.
     """
-    Lp, Dp = model.shape
-    n, D = x.shape
-    if D < Dp:
-        x = jnp.pad(x, ((0, 0), (0, Dp - D)))
+    x = _pad_features(x, model)
     if max_per_row is None:
         max_per_row = max_blocks_per_row(model)
     return bsr_predict_gather_pallas(
         x, model.blocks, model.block_cols, model.row_ptr,
+        jnp.asarray(sel, jnp.int32), max_per_row, interpret=interpret)
+
+
+def bsr_predict_gather_int8(x: jax.Array, model: Int8BlockSparseModel,
+                            sel: jax.Array, *,
+                            max_per_row: int | None = None,
+                            interpret: bool = True) -> jax.Array:
+    """Int8 scores for ONLY the row blocks listed in `sel` (B,) int32 —
+    the shortlist fine stage over the quantized artifact. Same contract
+    as `bsr_predict_gather` (exact-zero empty blocks included: their
+    packed sentinel quantizes to zeros)."""
+    x = _pad_features(x, model)
+    if max_per_row is None:
+        max_per_row = max_blocks_per_row(model)
+    return bsr_predict_gather_int8_pallas(
+        x, model.blocks, model.scales, model.block_cols, model.row_ptr,
         jnp.asarray(sel, jnp.int32), max_per_row, interpret=interpret)
 
 
@@ -124,6 +198,30 @@ def bsr_predict_gather_topk(x: jax.Array, model: BlockSparseModel,
     return vals, jnp.take(label_ids, idx)
 
 
+def bsr_predict_gather_int8_topk(x: jax.Array, model: Int8BlockSparseModel,
+                                 sel: jax.Array, k: int, *,
+                                 n_labels: int | None = None,
+                                 max_per_row: int | None = None,
+                                 interpret: bool = True,
+                                 ) -> tuple[jax.Array, jax.Array]:
+    """Fused gathered int8 predict -> top-k: the shortlist backend's fine
+    stage over the quantized artifact. Same contract as
+    `bsr_predict_gather_topk` (idx in true label ids, padding masked, sorted
+    full-coverage `sel` reproduces `bsr_predict_int8_topk` bit-for-bit —
+    the scale multiplies the same per-block fp32 dot in the same order)."""
+    from repro.kernels.topk import ops as topk_ops   # deferred: no cycle
+
+    bl = model.block_shape[0]
+    sel = jnp.asarray(sel, jnp.int32)
+    scores = bsr_predict_gather_int8(x, model, sel, max_per_row=max_per_row,
+                                     interpret=interpret)
+    label_ids = (sel[:, None] * bl + jnp.arange(bl)[None, :]).reshape(-1)
+    if n_labels is not None:
+        scores = jnp.where(label_ids[None, :] < n_labels, scores, NEG_INF)
+    vals, idx = topk_ops.topk(scores, k, interpret=interpret)
+    return vals, jnp.take(label_ids, idx)
+
+
 def gather_flops(model: BlockSparseModel, n: int, sel: np.ndarray) -> int:
     """FLOPs the gathered fine stage actually executes for one batch:
     2 * n * bl * bd per surviving block of the selected row blocks."""
@@ -144,3 +242,25 @@ def model_flops(model: BlockSparseModel, n: int) -> int:
 def dense_flops(model: BlockSparseModel, n: int) -> int:
     Lp, Dp = model.shape
     return 2 * n * Lp * Dp
+
+
+def predict_bytes(model: BlockSparseModel, n: int) -> int:
+    """Bytes the exhaustive fp32 predict must move through HBM: every
+    packed block once, plus x streamed per row block, plus the output."""
+    bl, bd = model.block_shape
+    Lp, Dp = model.shape
+    weights = 4 * model.n_blocks * bl * bd
+    x_bytes = 4 * n * Dp * (Lp // bl)        # x re-read per row block
+    out = 4 * n * Lp
+    return weights + x_bytes + out
+
+
+def predict_bytes_int8(model, n: int) -> int:
+    """Same traffic model for the int8 artifact: 1-byte blocks + 4-byte
+    per-block scales; x and the fp32 output are unchanged."""
+    bl, bd = model.block_shape
+    Lp, Dp = model.shape
+    weights = model.n_blocks * bl * bd + 4 * model.n_blocks
+    x_bytes = 4 * n * Dp * (Lp // bl)
+    out = 4 * n * Lp
+    return weights + x_bytes + out

@@ -6,12 +6,23 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
-from repro.core.pruning import BlockSparseModel
+from repro.core.pruning import BlockSparseModel, Int8BlockSparseModel
 
 
 def bsr_predict(x: jax.Array, model: BlockSparseModel) -> jax.Array:
     W = model.to_dense()
     return x.astype(jnp.float32) @ W.T.astype(jnp.float32)
+
+
+def bsr_predict_int8(x: jax.Array, model: Int8BlockSparseModel) -> jax.Array:
+    """Oracle for the int8 kernel: dequantize every block to fp32 (the
+    exact values the kernel reconstructs in-register) then dense matmul."""
+    return bsr_predict(x, model.dequantize())
+
+
+def bsr_predict_gather_int8(x: jax.Array, model: Int8BlockSparseModel,
+                            sel: jax.Array) -> jax.Array:
+    return bsr_predict_gather(x, model.dequantize(), sel)
 
 
 def bsr_predict_gather(x: jax.Array, model: BlockSparseModel,

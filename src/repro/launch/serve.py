@@ -39,7 +39,8 @@ from repro.configs.registry import ARCH_IDS, get_config
 
 #: --model value: NAME=CKPT_DIR[,key=value...]; these keys override the
 #: checkpoint's own ServeSpec for that model's server.
-MODEL_KEYS = ("backend", "k", "delay", "max_queue", "shortlist_blocks")
+MODEL_KEYS = ("backend", "k", "delay", "max_queue", "shortlist_blocks",
+              "int8")
 
 
 def parse_model_flag(value: str) -> tuple[str, str, dict]:
@@ -91,8 +92,9 @@ def serve_xmc(args) -> None:
     handle = CheckpointHandle.open(args.ckpt)
     engine = handle.engine(
         handle.spec.serve.replace(backend=args.backend, k=args.k,
-                                  shortlist_blocks=args.shortlist_blocks))
-    print(f"[xmc] backend={args.backend} loaded+warmed in "
+                                  shortlist_blocks=args.shortlist_blocks,
+                                  int8=args.int8))
+    print(f"[xmc] backend={args.backend} int8={args.int8} loaded+warmed in "
           f"{time.time() - t0:.1f}s "
           f"(L={engine.backend.n_labels}, k={engine.backend.k})")
 
@@ -150,7 +152,9 @@ def serve_xmc_server(args) -> None:
                        else args.max_queue),
             shortlist_blocks=(int(ov["shortlist_blocks"])
                               if "shortlist_blocks" in ov
-                              else args.shortlist_blocks))
+                              else args.shortlist_blocks),
+            int8=(ov["int8"].lower() in ("1", "true", "yes")
+                  if "int8" in ov else args.int8))
         router.add(name, handle.server(serve, name=name))
         pools[name] = np.asarray(d.X_test, np.float32)
         print(f"[server] model {name!r}: backend={serve.backend} "
@@ -251,6 +255,10 @@ def main() -> None:
     ap.add_argument("--shortlist-blocks", type=int, default=None,
                     help="XMC mode, shortlist backend: candidate row blocks "
                          "B per micro-batch (default: artifact's ~1/8)")
+    ap.add_argument("--int8", action="store_true",
+                    help="XMC mode: serve the per-block int8 weight "
+                         "artifact (~0.25x weight HBM traffic; composes "
+                         "with --backend shortlist's gathered fine stage)")
     ap.add_argument("--requests", type=int, default=32)
     ap.add_argument("--max-request-rows", type=int, default=8)
     ap.add_argument("--features", type=int, default=4096)

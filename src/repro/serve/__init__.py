@@ -23,7 +23,7 @@ from repro.serve.engine import generate, serve_batch
 from repro.serve.server import ModelRouter, Rejected, XMCFuture, XMCServer
 from repro.serve.shortlist import ShortlistArtifact, build_shortlist
 from repro.serve.xmc import (BACKENDS, BsrBackend, DenseBackend,
-                             PredictBackend, ShardedBackend,
+                             Int8Backend, PredictBackend, ShardedBackend,
                              ShortlistBackend, XMCEngine, XMCResult,
                              available_backends, make_backend,
                              register_backend, reset_warmup_cache,
@@ -31,7 +31,8 @@ from repro.serve.xmc import (BACKENDS, BsrBackend, DenseBackend,
 
 __all__ = ["generate", "serve_batch", "XMCEngine", "XMCResult",
            "XMCServer", "XMCFuture", "ModelRouter", "Rejected",
-           "PredictBackend", "DenseBackend", "BsrBackend", "ShardedBackend",
+           "PredictBackend", "DenseBackend", "BsrBackend", "Int8Backend",
+           "ShardedBackend",
            "ShortlistBackend", "ShortlistArtifact", "build_shortlist",
            "make_backend", "BACKENDS", "register_backend",
            "unregister_backend", "available_backends",

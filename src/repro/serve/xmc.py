@@ -33,8 +33,16 @@ One engine, four built-in interchangeable backends behind the
               (bsr_predict_gather_topk) scores only those blocks. Compute
               scales with B * block_size + R * D, not L * D. Falls back to
               exhaustive BSR when the checkpoint has no shortlist artifact.
+              `ShortlistBackend(int8=True)` swaps the fine stage to the
+              int8 gathered kernel — coarse gate AND quarter weight traffic.
+  int8      — the bsr path over the symmetric per-block int8 artifact
+              (`core.pruning.Int8BlockSparseModel`): int8 tiles + fp32
+              per-block scales dequantized in-register, ~0.25x the weight
+              HBM traffic of fp32 BSR at scores within the per-block
+              quantization bound (so top-k agreement, not bit equality).
 
-All built-ins produce identical top-k label ids on the same pruned model
+All built-ins except int8 produce identical top-k label ids on the same
+pruned model
 (the shortlist backend whenever its candidate set covers the true top-k;
 exactly, tie order included, when B equals the row-block count): padding
 labels a backend introduces (BSR block padding, shard divisibility padding)
@@ -71,7 +79,8 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core.prediction import predict_topk_sharded
-from repro.core.pruning import BlockSparseModel, to_block_sparse
+from repro.core.pruning import (BlockSparseModel, Int8BlockSparseModel,
+                                quantize_block_sparse, to_block_sparse)
 from repro.serve.batching import (DEFAULT_BUCKETS, LatencyStats,
                                   MicroBatchQueue)
 from repro.serve.shortlist import ShortlistArtifact, build_shortlist
@@ -79,7 +88,7 @@ from repro.serve.shortlist import ShortlistArtifact, build_shortlist
 Array = jax.Array
 
 #: Built-in backend kinds (the registry below may grow beyond these).
-BACKENDS = ("dense", "bsr", "sharded", "shortlist")
+BACKENDS = ("dense", "bsr", "sharded", "shortlist", "int8")
 
 
 class PredictBackend(Protocol):
@@ -157,6 +166,39 @@ def _shortlist_topk(x, centroids, blocks, block_rows, block_cols, row_ptr,
                                            interpret=interpret)
 
 
+@functools.partial(jax.jit, static_argnames=(
+    "shape", "block_shape", "orig_shape", "k", "n_labels", "interpret"))
+def _bsr_int8_topk(x, blocks, scales, block_rows, block_cols, row_ptr, *,
+                   shape, block_shape, orig_shape, k, n_labels, interpret):
+    from repro.kernels.bsr_predict import ops as bsr_ops   # deferred: no cycle
+    model = Int8BlockSparseModel(blocks=blocks, scales=scales,
+                                 block_rows=block_rows, block_cols=block_cols,
+                                 row_ptr=row_ptr, shape=shape,
+                                 block_shape=block_shape,
+                                 orig_shape=orig_shape)
+    return bsr_ops.bsr_predict_int8_topk(x, model, k, n_labels=n_labels,
+                                         interpret=interpret)
+
+
+@functools.partial(jax.jit, static_argnames=(
+    "shape", "block_shape", "orig_shape", "k", "n_labels", "B",
+    "max_per_row", "interpret"))
+def _shortlist_int8_topk(x, centroids, blocks, scales, block_rows,
+                         block_cols, row_ptr, *, shape, block_shape,
+                         orig_shape, k, n_labels, B, max_per_row, interpret):
+    from repro.kernels.bsr_predict import ops as bsr_ops   # deferred: no cycle
+    sel = _shortlist_select(x, centroids, B)
+    model = Int8BlockSparseModel(blocks=blocks, scales=scales,
+                                 block_rows=block_rows, block_cols=block_cols,
+                                 row_ptr=row_ptr, shape=shape,
+                                 block_shape=block_shape,
+                                 orig_shape=orig_shape)
+    return bsr_ops.bsr_predict_gather_int8_topk(x, model, sel, k,
+                                                n_labels=n_labels,
+                                                max_per_row=max_per_row,
+                                                interpret=interpret)
+
+
 class DenseBackend:
     """Reference semantics: jitted dense scores + lax.top_k."""
 
@@ -202,6 +244,45 @@ class BsrBackend:
                          n_labels=self.n_labels, interpret=self._interpret)
 
 
+class Int8Backend:
+    """Exhaustive BSR scoring over the int8 per-block-scaled artifact.
+
+    Accepts either the quantized artifact directly or a fp32
+    `BlockSparseModel` (quantized here — identical bytes to the persisted
+    checkpoint artifact, so legacy fp32-only checkpoints serve int8 too).
+    """
+
+    name = "int8"
+
+    def __init__(self, model, k: int, *, n_labels: int | None = None,
+                 interpret: bool = True):
+        if isinstance(model, BlockSparseModel):
+            model = quantize_block_sparse(model)
+        self.k = k
+        self.n_labels = int(n_labels if n_labels is not None
+                            else model.n_labels)
+        self.model = model
+        self._interpret = bool(interpret)
+
+    def warmup_key(self):
+        # Leads with a distinct kind tag AND the int8 dtype: an int8 backend
+        # over the same geometry as a fp32 bsr backend must never mark the
+        # fp32 bucket warm (different executable, different numerics).
+        m = self.model
+        return ("int8", m.blocks.shape, str(jnp.asarray(m.blocks).dtype),
+                m.shape, m.block_shape, m.orig_shape, self.k, self.n_labels,
+                self._interpret)
+
+    def topk(self, x: Array) -> tuple[Array, Array]:
+        m = self.model
+        return _bsr_int8_topk(x, m.blocks, m.scales, m.block_rows,
+                              m.block_cols, m.row_ptr, shape=m.shape,
+                              block_shape=m.block_shape,
+                              orig_shape=m.orig_shape, k=self.k,
+                              n_labels=self.n_labels,
+                              interpret=self._interpret)
+
+
 class ShortlistBackend:
     """Two-stage sub-linear scoring: coarse centroid shortlist + gathered
     fine stage over the packed BSR tiles of the selected row blocks only.
@@ -217,7 +298,8 @@ class ShortlistBackend:
 
     def __init__(self, model: BlockSparseModel, artifact: ShortlistArtifact,
                  k: int, *, n_labels: int | None = None,
-                 blocks: int | None = None, interpret: bool = True):
+                 blocks: int | None = None, interpret: bool = True,
+                 int8: bool = False, int8_model=None):
         from repro.kernels.bsr_predict import ops as bsr_ops
         artifact.validate_against(model)
         self.k = k
@@ -233,6 +315,15 @@ class ShortlistBackend:
         self._centroids = jnp.asarray(artifact.centroids)
         self._max_per_row = bsr_ops.max_blocks_per_row(model)
         self._interpret = bool(interpret)
+        # int8 composition: the coarse centroid stage is unchanged (fp32,
+        # R x Dp — tiny next to the fine stage), the gathered fine stage
+        # scores quantized tiles. Pass `int8_model` to reuse a persisted
+        # artifact; otherwise quantize here (bit-identical either way).
+        self.int8 = bool(int8)
+        self.int8_model = None
+        if self.int8:
+            self.int8_model = (int8_model if int8_model is not None
+                               else quantize_block_sparse(model))
 
     @property
     def candidate_fraction(self) -> float:
@@ -240,8 +331,11 @@ class ShortlistBackend:
         return self.B / self.artifact.n_row_blocks
 
     def warmup_key(self):
+        # `self.int8` is part of the key: the int8 and fp32 fine stages are
+        # different executables over the same geometry and must not alias
+        # each other's warm buckets.
         m = self.model
-        return ("shortlist", m.blocks.shape,
+        return ("shortlist", self.int8, m.blocks.shape,
                 str(jnp.asarray(m.blocks).dtype), m.shape, m.block_shape,
                 m.orig_shape, self._centroids.shape, self.B,
                 self._max_per_row, self.k, self.n_labels, self._interpret)
@@ -254,6 +348,14 @@ class ShortlistBackend:
             jnp.asarray(x, jnp.float32), self._centroids, self.B))
 
     def topk(self, x: Array) -> tuple[Array, Array]:
+        if self.int8:
+            q = self.int8_model
+            return _shortlist_int8_topk(
+                x, self._centroids, q.blocks, q.scales, q.block_rows,
+                q.block_cols, q.row_ptr, shape=q.shape,
+                block_shape=q.block_shape, orig_shape=q.orig_shape,
+                k=self.k, n_labels=self.n_labels, B=self.B,
+                max_per_row=self._max_per_row, interpret=self._interpret)
         m = self.model
         return _shortlist_topk(
             x, self._centroids, m.blocks, m.block_rows, m.block_cols,
@@ -342,7 +444,11 @@ def _make_dense_backend(bsr: BlockSparseModel, k: int, *, n_labels: int,
 
 @register_backend("bsr")
 def _make_bsr_backend(bsr: BlockSparseModel, k: int, *, n_labels: int,
-                      mesh, label_axis: str, interpret: bool):
+                      mesh, label_axis: str, interpret: bool,
+                      int8=False, int8_model=None):
+    if int8:      # ServeSpec(backend="bsr", int8=True) == the "int8" kind
+        return Int8Backend(int8_model if int8_model is not None else bsr,
+                           k, n_labels=n_labels, interpret=interpret)
     return BsrBackend(bsr, k, n_labels=n_labels, interpret=interpret)
 
 
@@ -356,23 +462,39 @@ def _make_sharded_backend(bsr: BlockSparseModel, k: int, *, n_labels: int,
                           mesh, label_axis=label_axis, n_labels=n_labels)
 
 
+@register_backend("int8")
+def _make_int8_backend(bsr: BlockSparseModel, k: int, *, n_labels: int,
+                       mesh, label_axis: str, interpret: bool,
+                       int8_model=None):
+    return Int8Backend(int8_model if int8_model is not None else bsr, k,
+                       n_labels=n_labels, interpret=interpret)
+
+
 @register_backend("shortlist")
 def _make_shortlist_backend(bsr: BlockSparseModel, k: int, *, n_labels: int,
                             mesh, label_axis: str, interpret: bool,
-                            shortlist=None, shortlist_blocks=None):
+                            shortlist=None, shortlist_blocks=None,
+                            int8=False, int8_model=None):
     if shortlist is None:
         # Legacy checkpoint (or in-memory model) without the artifact:
         # exhaustive BSR scoring, same results, no sub-linear gate.
+        if int8:
+            return Int8Backend(int8_model if int8_model is not None else bsr,
+                               k, n_labels=n_labels, interpret=interpret)
         return BsrBackend(bsr, k, n_labels=n_labels, interpret=interpret)
     return ShortlistBackend(bsr, shortlist, k, n_labels=n_labels,
-                            blocks=shortlist_blocks, interpret=interpret)
+                            blocks=shortlist_blocks, interpret=interpret,
+                            int8=int8, int8_model=int8_model)
 
 
 def make_backend(kind: str, bsr: BlockSparseModel, k: int, *,
                  n_labels: int | None = None, mesh=None,
                  label_axis: str = "model", interpret: bool = True,
                  shortlist: ShortlistArtifact | None = None,
-                 shortlist_blocks: int | None = None) -> PredictBackend:
+                 shortlist_blocks: int | None = None,
+                 int8: bool = False,
+                 int8_model: Int8BlockSparseModel | None = None,
+                 ) -> PredictBackend:
     """Build any registered backend from the one canonical model artifact
     (packed BSR) — a thin lookup over the registry.
 
@@ -380,6 +502,9 @@ def make_backend(kind: str, bsr: BlockSparseModel, k: int, *,
     block padding never surfaces; bsr serves the packed form directly (its
     kernel pads x internally and its top-k masks padding labels); shortlist
     adds the coarse candidate stage when a `ShortlistArtifact` is supplied.
+    kind="int8" (or shortlist with int8=True) serves the quantized artifact
+    — pass `int8_model` to reuse a checkpoint's persisted int8 arrays,
+    else the fp32 blocks are quantized on the spot (identical bytes).
 
     Factories registered before the shortlist kwargs existed keep working:
     keyword args are filtered down to what each factory's signature accepts
@@ -393,7 +518,8 @@ def make_backend(kind: str, bsr: BlockSparseModel, k: int, *,
     n_labels = int(n_labels if n_labels is not None else bsr.n_labels)
     kwargs = dict(n_labels=n_labels, mesh=mesh, label_axis=label_axis,
                   interpret=interpret, shortlist=shortlist,
-                  shortlist_blocks=shortlist_blocks)
+                  shortlist_blocks=shortlist_blocks, int8=int8,
+                  int8_model=int8_model)
     try:
         params = inspect.signature(factory).parameters
         if not any(p.kind is p.VAR_KEYWORD for p in params.values()):
@@ -472,20 +598,29 @@ class XMCEngine:
                         k: int = 5, mesh=None, interpret: bool = True,
                         buckets: Sequence[int] = DEFAULT_BUCKETS,
                         warmup: bool = True,
-                        shortlist_blocks: int | None = None) -> "XMCEngine":
+                        shortlist_blocks: int | None = None,
+                        int8: bool = False) -> "XMCEngine":
         """Serve the sparse artifact written by `BlockSparseModel.save`.
 
         Also picks up the shortlist artifact saved next to the BSR arrays
         when present — absent (legacy checkpoints), the "shortlist" backend
-        silently degrades to exhaustive BSR scoring.
+        silently degrades to exhaustive BSR scoring. backend="int8" (or
+        `int8=True` composing with shortlist) serves the checkpoint's
+        persisted int8 arrays, quantizing lazily when the checkpoint
+        predates them.
         """
-        from repro.checkpoint.io import load_shortlist   # deferred: no cycle
+        from repro.checkpoint.io import (load_block_sparse_int8,   # deferred:
+                                         load_shortlist)           # no cycle
         bsr, meta = BlockSparseModel.load(directory)
         n_labels = int(meta.get("n_labels", bsr.n_labels))
+        int8_model = None
+        if int8 or backend == "int8":
+            int8_model, _ = load_block_sparse_int8(directory, model=bsr)
         be = make_backend(backend, bsr, k, n_labels=n_labels, mesh=mesh,
                           interpret=interpret,
                           shortlist=load_shortlist(directory),
-                          shortlist_blocks=shortlist_blocks)
+                          shortlist_blocks=shortlist_blocks,
+                          int8=int8, int8_model=int8_model)
         return cls(be, buckets, warmup=warmup,
                    n_features=int(meta.get("n_features", bsr.n_features)))
 
@@ -495,14 +630,15 @@ class XMCEngine:
                     interpret: bool = True,
                     buckets: Sequence[int] = DEFAULT_BUCKETS,
                     warmup: bool = False,
-                    shortlist_blocks: int | None = None) -> "XMCEngine":
+                    shortlist_blocks: int | None = None,
+                    int8: bool = False) -> "XMCEngine":
         """Convenience: engine straight from an in-memory DiSMECModel (the
         shortlist artifact is built on the fly — no checkpoint needed)."""
         bsr = to_block_sparse(model.W, block_shape)
         be = make_backend(backend, bsr, k, n_labels=model.W.shape[0],
                           mesh=mesh, interpret=interpret,
                           shortlist=build_shortlist(bsr),
-                          shortlist_blocks=shortlist_blocks)
+                          shortlist_blocks=shortlist_blocks, int8=int8)
         return cls(be, buckets, warmup=warmup,
                    n_features=int(model.W.shape[1]))
 

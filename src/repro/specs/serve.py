@@ -39,6 +39,13 @@ class ServeSpec(Spec):
                 artifact's default (~1/8 of the row blocks); values above
                 the row-block count are clamped, and B = n_row_blocks is
                 exactly exhaustive scoring. Ignored by other backends.
+    int8      : serve the symmetric per-block int8 weight artifact instead
+                of fp32 blocks (~0.25x weight HBM traffic; top-k agreement
+                rather than bit equality). With backend="shortlist" the
+                gathered fine stage goes int8 (coarse stage stays fp32);
+                with backend="bsr" the engine serves the exhaustive int8
+                path. Checkpoints written before this field existed
+                deserialize with int8=False — fp32 serving, unchanged.
     max_batch_delay_ms : continuous-batching launch deadline for the async
                 server (`CheckpointHandle.server()`): a partially filled
                 bucket launches once its oldest request has waited this
@@ -55,6 +62,7 @@ class ServeSpec(Spec):
     interpret: Optional[bool] = None
     warmup: bool = True
     shortlist_blocks: Optional[int] = None
+    int8: bool = False
     max_batch_delay_ms: float = 2.0
     max_queue: Optional[int] = None
 

@@ -260,7 +260,7 @@ class CheckpointHandle:
             self.directory, backend=serve.backend, k=serve.k,
             mesh=mesh, interpret=serve.resolved_interpret(),
             buckets=tuple(serve.buckets), warmup=serve.warmup,
-            shortlist_blocks=serve.shortlist_blocks)
+            shortlist_blocks=serve.shortlist_blocks, int8=serve.int8)
 
     def server(self, serve_override: Optional[ServeSpec] = None, *,
                mesh=None, name: Optional[str] = None, start: bool = True):

@@ -8,9 +8,13 @@
 # tron_hotpath + serve_latency on tiny shapes) so the benchmark
 # entrypoints cannot silently rot: they import, run end-to-end, and keep
 # their bit-identity assertions live on every change. serve_latency's
-# smoke includes the open-loop Poisson server gates: deadline launch
-# beats drain-on-full on p99, and admission control sheds overload with
-# bounded queue wait.
+# smoke includes the open-loop Poisson server gates (deadline launch
+# beats drain-on-full on p99; admission control sheds overload with
+# bounded queue wait), the shortlist gate (candidate fraction < 25% at
+# recall@5 >= 0.95), and the int8 serving gates: the quantized artifact's
+# weight payload must be <= 0.55x the fp32 blocks, and int8 top-5
+# agreement vs fp32 must be >= 0.99 — on the exhaustive path AND the
+# shortlist-composed gathered-int8 path.
 #
 # The docs gate keeps the documentation surface honest: every intra-repo
 # link in README.md and docs/*.md must resolve (tools/check_docs.py), and
