@@ -1,0 +1,110 @@
+"""Warm-start sweep smoke: the lifecycle sweep driver as a CI gate.
+
+Runs a 2-arm Delta sweep through `repro.lifecycle.sweep` — the driver
+behind DiSMEC's Fig. 5 frontier — on a small synthetic problem and emits
+one `BENCH_lifecycle.json` record per arm plus a summary row. Three
+assertions run live in --smoke (wired into tools/verify.sh through
+`benchmarks.run --smoke`):
+
+  * **fixed point**: the arm whose spec equals the base's reproduces the
+    base checkpoint bit-for-bit from a warm start — the correctness
+    anchor that says `fit(init_from=)` re-derives a converged model
+    instead of drifting;
+  * **size monotonicity**: a coarser Delta never yields more nonzeros
+    (Fig. 5's x-axis moves the right way);
+  * **policy**: `max_precision_under_size_mb` with a budget strictly
+    between the two arm sizes must pick the arm that fits it — the
+    declarative winner rule actually binds.
+
+The full (non-smoke) run uses the paper-like shapes of fig5_delta_sweep's
+regime but still finishes in minutes; the frontier itself (many Deltas,
+real datasets) stays in fig5_delta_sweep — this module gates the DRIVER.
+"""
+
+from __future__ import annotations
+
+import tempfile
+import time
+
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks._common import emit_json, print_table
+from repro.data.xmc import make_xmc_dataset
+from repro.lifecycle import sweep
+from repro.specs import ScheduleSpec, SolverSpec, SweepPolicy
+from repro.xmc_api import XMCSpec
+
+OUT_JSON = "BENCH_lifecycle.json"
+SCHEMA = 1
+
+SMOKE = dict(n_train=200, n_test=64, n_features=512, n_labels=64,
+             label_batch=32, block_shape=(16, 16))
+FULL = dict(n_train=800, n_test=256, n_features=2048, n_labels=256,
+            label_batch=128, block_shape=(32, 128))
+HI_DELTA = 0.3
+
+
+def main(smoke: bool = False):
+    cfg = SMOKE if smoke else FULL
+    data = make_xmc_dataset(n_train=cfg["n_train"], n_test=cfg["n_test"],
+                            n_features=cfg["n_features"],
+                            n_labels=cfg["n_labels"], seed=0)
+    base_spec = XMCSpec(
+        solver=SolverSpec(C=1.0, delta=0.01, eps=1e-2),
+        schedule=ScheduleSpec(label_batch=cfg["label_batch"],
+                              block_shape=cfg["block_shape"]))
+    X, Y = jnp.asarray(data.X_train), jnp.asarray(data.Y_train)
+    holdout = (np.asarray(data.X_test, np.float32), np.asarray(data.Y_test))
+
+    with tempfile.TemporaryDirectory() as root:
+        t0 = time.monotonic()
+        report = sweep(X, Y, base_spec,
+                       {"same": {}, "hi": {"delta": HI_DELTA}},
+                       root, workers=2, holdout=holdout,
+                       policy=SweepPolicy(kind="max_precision", metric="P@5"))
+        wall = time.monotonic() - t0
+
+    base, same, hi = report.arms
+    for arm in report.arms:
+        emit_json(OUT_JSON, {"bench": "lifecycle_sweep", "schema": SCHEMA,
+                             "smoke": smoke, "mode": "arm",
+                             "winner": report.winner, **arm.row()})
+    emit_json(OUT_JSON, {"bench": "lifecycle_sweep", "schema": SCHEMA,
+                         "smoke": smoke, "mode": "summary", "wall_s": wall,
+                         **report.to_dict()})
+    print_table(
+        f"warm-start Delta sweep (L={cfg['n_labels']}, winner="
+        f"{report.winner} by {report.policy.kind})",
+        [{"arm": a.name, "delta": a.delta, "nnz": a.nnz,
+          "model_mb": a.model_mb, "int8_mb": a.int8_mb,
+          "P@5": a.metrics.get("P@5"), "fixed_pt": a.fixed_point,
+          "train_s": a.train_s}
+         for a in report.arms],
+        ["arm", "delta", "nnz", "model_mb", "int8_mb", "P@5", "fixed_pt",
+         "train_s"])
+
+    # Sweep-driver acceptance gates, live in CI (tools/verify.sh --smoke).
+    assert same.fixed_point is True, \
+        ("unchanged-spec arm is NOT bit-identical to its warm-start source "
+         "— the warm-start path drifted, every sweep number is suspect")
+    assert same.nnz == base.nnz
+    assert hi.nnz <= same.nnz and hi.model_mb <= same.model_mb, \
+        (f"Delta {HI_DELTA} produced MORE nonzeros than Delta "
+         f"{base_spec.solver.delta}: {hi.nnz} > {same.nnz}")
+    budget = (hi.model_mb + same.model_mb) / 2
+    pick = SweepPolicy(kind="max_precision_under_size_mb", metric="P@5",
+                       size_mb=budget).select(report.arms)
+    assert pick.model_mb <= budget, \
+        (f"size-budget policy picked {pick.name} at {pick.model_mb:.3f}MB "
+         f"over the {budget:.3f}MB budget despite a feasible arm")
+
+    print(f"\nwrote {OUT_JSON}")
+
+
+if __name__ == "__main__":
+    import argparse
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true")
+    args = ap.parse_args()
+    main(smoke=args.smoke)

@@ -19,11 +19,17 @@ Modules (deliverable d):
   tron_hotpath           CG matmul accounting + scheduler-overlap wall clock
   serve_latency          serving-engine p50/p99 per predict backend, the
                          shortlist-vs-exhaustive sub-linear gate (candidate
-                         fraction < 25% at recall@5 >= 0.95), and the
+                         fraction < 25% at recall@5 >= 0.95), the
                          open-loop Poisson server benchmark (deadline beats
                          drain-on-full on p99; overload sheds with bounded
-                         queue wait) — all live in --smoke, so
+                         queue wait), and the zero-downtime refresh gate
+                         (hot swap under load: zero drops, swap-window p99
+                         <= 2x steady state) — all live in --smoke, so
                          tools/verify.sh gates them
+  lifecycle_sweep        warm-start Delta sweep driver smoke: unchanged-spec
+                         arm bit-identical to its warm-start source, model
+                         size monotone in Delta, size-budget policy picks a
+                         feasible arm — live in --smoke
   roofline               deliverable (g): 3-term roofline from the dry-run
 """
 
@@ -48,13 +54,15 @@ MODULES = [
     "train_pipeline",
     "tron_hotpath",
     "serve_latency",
+    "lifecycle_sweep",
     "roofline",
 ]
 
 # --smoke: the pipeline benchmarks (train / hot path / serve) on tiny
 # shapes — a CI gate (tools/verify.sh) that keeps every benchmark
 # entrypoint importable and runnable without the full CPU cost.
-SMOKE_MODULES = ["train_pipeline", "tron_hotpath", "serve_latency"]
+SMOKE_MODULES = ["train_pipeline", "tron_hotpath", "serve_latency",
+                 "lifecycle_sweep"]
 
 
 def main():

@@ -49,6 +49,19 @@ tools/verify.sh through `benchmarks.run --smoke`): bytes_ratio <= 0.55 and
 topk agreement@k >= 0.99, for both the exhaustive int8 path and the
 shortlist-composed gathered-int8 path.
 
+Part 5 is the zero-downtime refresh gate: open-loop Poisson traffic
+flows through the async server while `XMCServer.swap()` installs a
+warm-started variant of the model (fit with `init_from=` the serving
+checkpoint, a different Delta) from a separate thread. The
+`mode="refresh_under_load"` record reports per-request latency split
+into the swap window vs steady state, the measured flip blackout
+(`swap_blackout_ms`, time the dispatch lock is held to flip engines) and
+off-thread warm time. Two assertions run live in --smoke (wired into
+tools/verify.sh): every accepted request resolves — zero drops, zero
+rejects, old and new model both answered — and the p99
+arrival-to-completion latency of requests in flight during the swap is
+<= 2x the steady-state p99 of the same run.
+
 Every record is stamped `"schema": 2` (closed-loop per-request
 percentiles, smoke floor of 32 requests); trend tooling should skip
 rows without it — pre-PR-6 rows were batched-drain timestamps with
@@ -60,6 +73,7 @@ measures raw predict calls without the queue/bucketing layer).
 
 from __future__ import annotations
 
+import os
 import tempfile
 import time
 
@@ -123,6 +137,17 @@ SERVER_LOW_SMOKE = dict(n_requests=40, rate_rps=60.0, deadline_ms=2.0)
 SERVER_OVERLOAD = dict(n_requests=160, max_queue=8)
 SERVER_OVERLOAD_SMOKE = dict(n_requests=80, max_queue=8)
 QUEUE_WAIT_BOUND_MS = 1000.0    # overload queue wait must stay bounded
+
+# Part 5 (refresh under load): offered load well below saturation so the
+# steady-state p99 is a meaningful baseline, and enough requests that the
+# swap window holds a usable sample. The window is the flip instant padded
+# by SWAP_WINDOW_PAD_MS on both sides — requests whose lifetime intersects
+# it are the "during swap" population.
+REFRESH_LOAD = dict(n_requests=400, rate_rps=150.0)
+REFRESH_LOAD_SMOKE = dict(n_requests=160, rate_rps=120.0)
+SWAP_WINDOW_PAD_MS = 75.0
+SWAP_P99_FACTOR = 2.0           # p99 during swap <= 2x steady-state p99
+REFRESH_DELTA = 0.2             # the variant model's pruning threshold
 
 
 def make_requests(X: np.ndarray, n_requests: int, seed: int = 0,
@@ -193,6 +218,145 @@ def run_open_loop(handle, pool: np.ndarray, *, n_requests: int,
             "mean_ms": st["latency"].get("mean_ms"),
             "queue_wait_p50_ms": st["queue_wait"].get("p50_ms"),
             "queue_wait_p99_ms": st["queue_wait"].get("p99_ms")}
+
+
+def run_refresh_under_load(*, smoke: bool, seed: int = 5) -> dict:
+    """Part 5: hot-swap a warm-started variant into a live server under
+    open-loop Poisson load and measure what the refresh costs the tail.
+
+    Gen-1 model: the shared demo checkpoint. Gen-2 model: `fit` with a
+    coarser Delta, warm-started from gen 1 (`init_from=`) — the exact
+    artifact a sweep/retrain hands to `ModelRouter.refresh`. A collector
+    thread timestamps completions in submission order (completions are
+    FIFO: single dispatch thread, FIFO queue), so every request carries a
+    client-side arrival-to-completion latency attributable to either the
+    swap window or steady state."""
+    import queue as queue_mod
+    import threading
+
+    import jax.numpy as jnp
+
+    from repro.specs import ScheduleSpec, SolverSpec
+    from repro.xmc_api import XMCSpec, fit
+
+    cfg = REFRESH_LOAD_SMOKE if smoke else REFRESH_LOAD
+    demo = (dict(n_train=200, n_test=64, n_features=512, n_labels=64,
+                 label_batch=32) if smoke else
+            dict(n_train=800, n_test=512, n_features=4096, n_labels=256,
+                 label_batch=128))
+    n = cfg["n_requests"]
+    with tempfile.TemporaryDirectory() as root:
+        base_dir = os.path.join(root, "gen1")
+        next_dir = os.path.join(root, "gen2")
+        data, _ = train_demo_checkpoint(base_dir, seed=0, **demo)
+        handle = CheckpointHandle.open(base_dir)
+        spec = XMCSpec(
+            solver=SolverSpec(C=1.0, delta=REFRESH_DELTA),
+            schedule=ScheduleSpec(label_batch=demo["label_batch"]))
+        variant = fit(jnp.asarray(data.X_train), jnp.asarray(data.Y_train),
+                      spec, next_dir, init_from=base_dir)
+        serve = ServeSpec(backend="dense", k=K, buckets=SERVER_BUCKETS,
+                          max_batch_delay_ms=2.0)
+        server = handle.server(serve)
+        new_engine = variant.engine(serve.replace(warmup=False))
+
+        # Reference answers from both generations, for attribution.
+        rng = np.random.default_rng(seed)
+        pool = np.asarray(data.X_test, np.float32)
+        requests = [pool[rng.integers(0, pool.shape[0], size=1)]
+                    for _ in range(n)]
+        ref_old = handle.engine(serve.replace(warmup=False))
+        expect_old = [np.asarray(ref_old.backend.topk(jnp.asarray(x))[1])
+                      for x in requests]
+        expect_new = [np.asarray(new_engine.backend.topk(jnp.asarray(x))[1])
+                      for x in requests]
+
+        gaps = rng.exponential(1.0 / cfg["rate_rps"], size=n)
+        swap_at = n // 2
+        swap_win = {}
+
+        def do_swap():
+            swap_win["t0"] = time.monotonic()
+            server.swap(new_engine)
+            swap_win["t1"] = time.monotonic()
+
+        swapper = threading.Thread(target=do_swap)
+        inbox: queue_mod.Queue = queue_mod.Queue()
+        t_sub = [0.0] * n
+        t_fin = [0.0] * n
+        results = [None] * n
+
+        def collect():
+            for _ in range(n):
+                i, fut = inbox.get()
+                results[i] = fut.result(timeout=120)
+                t_fin[i] = time.monotonic()
+
+        collector = threading.Thread(target=collect)
+        collector.start()
+        t_wall0 = time.monotonic()
+        t_next = t_wall0
+        for i, (x, gap) in enumerate(zip(requests, gaps)):
+            t_next += gap
+            now = time.monotonic()
+            if t_next > now:
+                time.sleep(t_next - now)
+            if i == swap_at:
+                swapper.start()
+            t_sub[i] = time.monotonic()
+            inbox.put((i, server.submit(x)))
+        swapper.join()
+        collector.join()
+        wall = time.monotonic() - t_wall0
+        server.stop()
+
+        # Zero-downtime accounting: every accepted request resolved, none
+        # rejected, and both generations actually answered traffic.
+        counters = dict(server.counters)
+        assert all(r is not None and not isinstance(r, Rejected)
+                   for r in results)
+        # Per-request attribution. The generations may agree on easy
+        # queries (same top-k under either Delta) — those are "both";
+        # "neither" means an answer matching no generation, which the
+        # no-torn-batch guarantee forbids.
+        n_old = n_new = n_neither = 0
+        for i, r in enumerate(results):
+            is_old = np.array_equal(r.labels, expect_old[i])
+            is_new = np.array_equal(r.labels, expect_new[i])
+            if is_old and not is_new:
+                n_old += 1
+            elif is_new and not is_old:
+                n_new += 1
+            elif not (is_old or is_new):
+                n_neither += 1
+
+        lat_ms = [(t_fin[i] - t_sub[i]) * 1e3 for i in range(n)]
+        pad = SWAP_WINDOW_PAD_MS / 1e3
+        w0, w1 = swap_win["t0"] - pad, swap_win["t1"] + pad
+        in_w = [i for i in range(n) if t_sub[i] <= w1 and t_fin[i] >= w0]
+        out_w = sorted(set(range(n)) - set(in_w))
+        p99_in = (float(np.percentile([lat_ms[i] for i in in_w], 99))
+                  if in_w else 0.0)
+        p99_out = float(np.percentile([lat_ms[i] for i in out_w], 99))
+        flip = server.last_swap
+        return {"bench": "serve_latency", "mode": "refresh_under_load",
+                "smoke": smoke, "backend": "dense", "k": K,
+                "n_offered": n, "offered_load_rps": cfg["rate_rps"],
+                "buckets": list(SERVER_BUCKETS), "wall_s": wall,
+                "delta_old": 0.01, "delta_new": REFRESH_DELTA,
+                "n_completed": counters["completed"],
+                "n_rejected": counters["rejected"],
+                "n_swaps": counters["swaps"],
+                "n_old_model": n_old, "n_new_model": n_new,
+                "n_unattributable": n_neither,
+                "swap_warm_ms": flip["warm_ms"],
+                "swap_blackout_ms": flip["flip_ms"],
+                "swap_window_ms": (w1 - w0) * 1e3,
+                "n_in_window": len(in_w),
+                "p99_ms_during_swap": p99_in,
+                "p99_ms_steady": p99_out,
+                "p50_ms_steady": float(np.percentile(
+                    [lat_ms[i] for i in out_w], 50))}
 
 
 def recall_at_k(reference, candidate) -> float:
@@ -310,6 +474,39 @@ def main(smoke: bool = False):
     assert ov["queue_wait_p99_ms"] < QUEUE_WAIT_BOUND_MS, \
         (f"accepted-request queue wait p99 {ov['queue_wait_p99_ms']:.1f}ms "
          f"not bounded under overload (limit {QUEUE_WAIT_BOUND_MS}ms)")
+
+    # -- part 5: zero-downtime refresh under open-loop load ---------------
+    refresh = run_refresh_under_load(smoke=smoke)
+    emit(refresh)
+    print_table(
+        f"refresh under load ({refresh['n_offered']} offered at "
+        f"{refresh['offered_load_rps']} rps, swap mid-stream)",
+        [{"p99_swap_ms": refresh["p99_ms_during_swap"],
+          "p99_steady_ms": refresh["p99_ms_steady"],
+          "blackout_ms": refresh["swap_blackout_ms"],
+          "warm_ms": refresh["swap_warm_ms"],
+          "old/new": f"{refresh['n_old_model']}/{refresh['n_new_model']}"}],
+        ["p99_swap_ms", "p99_steady_ms", "blackout_ms", "warm_ms",
+         "old/new"])
+
+    # Zero-downtime refresh gates, live in CI (tools/verify.sh --smoke):
+    # the swap drops nothing and both generations serve, and requests in
+    # flight during the swap keep a tail within 2x of steady state.
+    assert refresh["n_completed"] == refresh["n_offered"], \
+        (f"refresh dropped accepted requests: {refresh['n_completed']} of "
+         f"{refresh['n_offered']} completed")
+    assert refresh["n_rejected"] == 0 and refresh["n_swaps"] == 1
+    assert refresh["n_old_model"] > 0 and refresh["n_new_model"] > 0, \
+        ("swap did not split traffic across generations: "
+         f"{refresh['n_old_model']} old / {refresh['n_new_model']} new")
+    assert refresh["n_unattributable"] == 0, \
+        (f"{refresh['n_unattributable']} answers match neither generation "
+         "— a micro-batch was torn across the swap")
+    assert refresh["p99_ms_during_swap"] <= \
+        SWAP_P99_FACTOR * refresh["p99_ms_steady"], \
+        (f"p99 during swap {refresh['p99_ms_during_swap']:.1f}ms exceeds "
+         f"{SWAP_P99_FACTOR}x steady-state p99 "
+         f"{refresh['p99_ms_steady']:.1f}ms")
 
     # -- part 2: shortlist vs exhaustive on the finer-block checkpoint ----
     from repro.kernels.bsr_predict import ops as bsr_ops

@@ -22,6 +22,17 @@ Two on-disk layouts share one loader:
                  `BlockSparseModel` (pure row_ptr bookkeeping, no re-tiling)
                  so the serving engine never sees the difference.
 
+Both layouts carry a **generation counter**: every fresh write into a
+directory (one-shot `save_block_sparse`, or a `BlockSparseWriter` started
+with `resume=False`) records `generation = <prior generation> + 1`, and the
+counter becomes visible to readers only once the artifact is servable (the
+one-shot index exists / the stream manifest flips `complete`). A poller
+(`checkpoint_generation`, consumed by `lifecycle.refresh.CheckpointWatcher`)
+therefore sees a strictly increasing integer that changes exactly when a
+new *finished* model lands — never a half-written one. Resumed streams keep
+their generation: resuming is finishing the same model, not publishing a
+new one.
+
 Manifest version 2 adds a **batch-lease table** (`leases`) to the stream
 manifest: the paper's layer-1 dispatch of label batches across nodes,
 done as cooperative claiming over a shared filesystem. N independent
@@ -126,13 +137,55 @@ def load_shortlist(directory: str):
                              stat=str(data["stat"]))
 
 
+def _prior_generation(directory: str) -> int:
+    """Highest generation any artifact in `directory` has recorded —
+    complete or not — so the next fresh write publishes a strictly larger
+    one. 0 when the directory holds no checkpoint; artifacts that predate
+    the counter count as generation 1."""
+    gen = 0
+    for name in (BSR_INDEX, BSR_MANIFEST):
+        path = os.path.join(directory, name)
+        if os.path.exists(path):
+            try:
+                with open(path) as f:
+                    gen = max(gen, int(json.load(f).get("generation", 1)))
+            except (OSError, ValueError):
+                gen = max(gen, 1)
+    return gen
+
+
+def checkpoint_generation(directory: str) -> Optional[int]:
+    """Generation of the *servable* checkpoint in `directory`, or None when
+    nothing is servable yet (no checkpoint, or a stream whose manifest has
+    not flipped `complete`).
+
+    This is the cheap poll primitive behind zero-downtime refresh
+    (`lifecycle.refresh.CheckpointWatcher`): two small JSON reads, no
+    arrays touched. Checkpoints written before the counter existed report
+    generation 1.
+    """
+    index_path = os.path.join(directory, BSR_INDEX)
+    if os.path.exists(index_path):
+        with open(index_path) as f:
+            return int(json.load(f).get("generation", 1))
+    path = os.path.join(directory, BSR_MANIFEST)
+    if os.path.exists(path):
+        with open(path) as f:
+            manifest = json.load(f)
+        if manifest.get("complete"):
+            return int(manifest.get("generation", 1))
+    return None
+
+
 def save_block_sparse(model, directory: str, *, meta: dict | None = None):
     """Write a `BlockSparseModel` (+ optional serving metadata such as
     n_labels / delta) as one .npz + JSON index under `directory`, plus the
-    shortlist artifact for two-stage serving."""
+    shortlist artifact for two-stage serving. Stamps the next generation
+    (prior + 1) so pollers see the rewrite as a new model."""
     from repro.core.pruning import quantize_blocks       # deferred: no cycle
     from repro.serve.shortlist import build_shortlist    # deferred: no cycle
     os.makedirs(directory, exist_ok=True)
+    generation = _prior_generation(directory) + 1
     blocks = np.asarray(model.blocks)
     blocks_int8, block_scales = quantize_blocks(blocks)
     np.savez_compressed(
@@ -151,6 +204,7 @@ def save_block_sparse(model, directory: str, *, meta: dict | None = None):
         "n_blocks": model.n_blocks,
         "dtype": str(blocks.dtype),
         "int8": True,
+        "generation": generation,
         "meta": dict(meta or {}),
         "shortlist": save_shortlist(directory, build_shortlist(model)),
     }
@@ -227,6 +281,10 @@ class BlockSparseWriter:
         self.directory = directory
         os.makedirs(directory, exist_ok=True)
         self._path = os.path.join(directory, BSR_MANIFEST)
+        # Sample the prior generation before anything is removed: a fresh
+        # start over an old checkpoint (either layout) must publish a
+        # strictly larger generation once it finalizes.
+        prior_gen = _prior_generation(directory)
         # A single-shard artifact in the same directory would shadow the
         # stream on load (load_block_sparse prefers BSR_INDEX): refuse to
         # write behind it unless the caller explicitly starts fresh.
@@ -270,6 +328,9 @@ class BlockSparseWriter:
                         f"on {mismatch}; pass resume=False to start fresh")
                 self.manifest = existing
                 self.manifest.setdefault("leases", {})
+                # Resuming finishes the SAME model — keep its generation
+                # (pre-counter manifests adopt 1, the legacy default).
+                self.manifest.setdefault("generation", 1)
                 self.manifest["manifest_version"] = MANIFEST_VERSION
                 # Meta is creator-wins: a joiner only contributes keys the
                 # manifest does not have yet, and the merge is flushed here
@@ -290,6 +351,7 @@ class BlockSparseWriter:
                             pass
                 self.manifest = {**header,
                                  "manifest_version": MANIFEST_VERSION,
+                                 "generation": prior_gen + 1,
                                  "complete": False, "shards": {},
                                  "leases": {}, "meta": dict(meta or {})}
                 self._flush()
@@ -602,36 +664,70 @@ def has_block_sparse_checkpoint(directory: str) -> bool:
         return bool(json.load(f).get("complete"))
 
 
-def _stream_index(directory: str) -> dict:
+def _prefix_batches(manifest: dict) -> list[str]:
+    """The contiguous prefix 0..m-1 of written batches — the only part of
+    an incomplete stream that stitches into a well-formed (smaller) model:
+    label rows are batch-ordered, so a gap would leave absolute block_rows
+    pointing past the stitched row_ptr."""
+    done = manifest["shards"]
+    prefix = []
+    for b in range(int(manifest["n_batches"])):
+        if str(b) not in done:
+            break
+        prefix.append(str(b))
+    return prefix
+
+
+def _stream_index(directory: str, *, allow_incomplete: bool = False) -> dict:
     """Synthesize a single-shard-style index dict from a stream manifest so
-    pre-flight consumers (serving CLIs) see one schema for both layouts."""
+    pre-flight consumers (serving CLIs) see one schema for both layouts.
+
+    A still-streaming checkpoint raises unless `allow_incomplete=True` —
+    the refresh watcher and serving CLIs must never pick up a half-written
+    generation. With the opt-in, the index describes the contiguous prefix
+    of solved label batches (`orig_shape` shrinks to the rows covered) and
+    carries `complete: False` so callers can tell inspection from serving.
+    """
     with open(os.path.join(directory, BSR_MANIFEST)) as f:
         manifest = json.load(f)
-    if not manifest.get("complete"):
+    complete = bool(manifest.get("complete"))
+    if not complete and not allow_incomplete:
         raise ValueError(
             f"{directory} holds an incomplete streamed checkpoint "
             f"({len(manifest.get('shards', {}))}/{manifest.get('n_batches')} "
-            "batches); resume the training job to finish it")
+            "batches); resume the training job to finish it, or pass "
+            "allow_incomplete=True to inspect the partial model")
     bl, bd = manifest["block_shape"]
     L, D = manifest["n_labels"], manifest["n_features"]
-    shards = manifest["shards"]
+    batches = (sorted(manifest["shards"], key=int) if complete
+               else _prefix_batches(manifest))
+    shards = [manifest["shards"][b] for b in batches]
+    rows_done = (L if complete else
+                 (shards[-1]["row_start"] + shards[-1]["n_rows"]
+                  if shards else 0))
     return {
         "format": "bsr", "layout": "stream",
-        "shape": [sum(s["padded_rows"] for s in shards.values()),
+        "shape": [sum(s["padded_rows"] for s in shards),
                   -(-D // bd) * bd],
-        "orig_shape": [L, D],
+        "orig_shape": [rows_done, D],
         "block_shape": [bl, bd],
-        "n_blocks": sum(s["n_blocks"] for s in shards.values()),
+        "n_blocks": sum(s["n_blocks"] for s in shards),
         "dtype": "float32",
+        "complete": complete,
+        "generation": int(manifest.get("generation", 1)),
+        "batches": batches,
         "meta": manifest["meta"],
         "manifest": manifest,
     }
 
 
-def load_block_sparse_meta(directory: str) -> dict:
+def load_block_sparse_meta(directory: str, *,
+                           allow_incomplete: bool = False) -> dict:
     """The index of a block-sparse checkpoint (shapes + user meta) without
     touching the arrays — cheap pre-flight validation for serving CLIs.
-    Reads both the single-shard and the streamed multi-shard layout."""
+    Reads both the single-shard and the streamed multi-shard layout.
+    `allow_incomplete=True` opts in to inspecting a still-streaming
+    checkpoint (see `_stream_index`); the default raises on one."""
     if os.path.exists(os.path.join(directory, BSR_INDEX)):
         with open(os.path.join(directory, BSR_INDEX)) as f:
             index = json.load(f)
@@ -639,25 +735,35 @@ def load_block_sparse_meta(directory: str) -> dict:
             raise ValueError(f"{directory} is not a block-sparse checkpoint")
         return index
     if os.path.exists(os.path.join(directory, BSR_MANIFEST)):
-        return _stream_index(directory)
+        return _stream_index(directory, allow_incomplete=allow_incomplete)
     raise FileNotFoundError(
         f"no block-sparse checkpoint (index or manifest) in {directory}")
 
 
-def load_block_sparse(directory: str):
+def load_block_sparse(directory: str, *, allow_incomplete: bool = False):
     """Returns (BlockSparseModel, meta dict). Reads both layouts: the
     one-shot artifact written by `save_block_sparse` and the multi-shard
     stream written by `BlockSparseWriter` (shards are stitched by row_ptr
-    bookkeeping — no block is ever unpacked)."""
+    bookkeeping — no block is ever unpacked).
+
+    `allow_incomplete=True` loads the contiguous solved prefix of a
+    still-streaming checkpoint as a smaller model (first `orig_shape[0]`
+    labels) — for inspection/debugging; serving always loads complete
+    checkpoints (the default raises on incomplete ones)."""
     from repro.core.pruning import (BlockSparseModel,       # deferred: no
                                     concat_block_sparse)    # import cycle
 
-    index = load_block_sparse_meta(directory)
+    index = load_block_sparse_meta(directory,
+                                   allow_incomplete=allow_incomplete)
     if index.get("layout") == "stream":
+        if not index.get("batches") and not index.get("complete", True):
+            raise ValueError(
+                f"{directory}: no contiguous prefix of solved batches yet "
+                "— nothing loadable")
         manifest = index["manifest"]
         bl, bd = manifest["block_shape"]
         parts = []
-        for b in sorted(manifest["shards"], key=int):
+        for b in index["batches"]:
             entry = manifest["shards"][b]
             data = np.load(os.path.join(directory, entry["file"]))
             parts.append(BlockSparseModel(

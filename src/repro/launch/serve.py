@@ -30,7 +30,10 @@ XMC flags (--ckpt/--backend/--k/--max-batch-delay-ms/--max-queue).
 from __future__ import annotations
 
 import argparse
+import signal
+import threading
 import time
+from contextlib import contextmanager
 
 import jax
 import numpy as np
@@ -117,6 +120,33 @@ def serve_xmc(args) -> None:
           f"{sample.labels[:2].tolist()}")
 
 
+@contextmanager
+def drain_on_signals(router):
+    """SIGTERM/SIGINT (main thread only) raise SystemExit(128+sig) so the
+    enclosing `with router:` force-drains — every accepted future resolves
+    before the process exits — instead of dying with dispatcher threads
+    mid-batch. Prior handlers are restored on the way out."""
+    if threading.current_thread() is not threading.main_thread():
+        yield []                       # signals only reach the main thread
+        return
+    caught: list[int] = []
+
+    def _handler(signum, frame):
+        caught.append(signum)
+        raise SystemExit(128 + signum)
+
+    prev = [(s, signal.signal(s, _handler))
+            for s in (signal.SIGTERM, signal.SIGINT)]
+    try:
+        yield caught
+    finally:
+        for s, h in prev:
+            signal.signal(s, h)
+        if caught:
+            print(f"[server] caught signal {caught[0]}; router drained — "
+                  "every accepted request resolved", flush=True)
+
+
 def serve_xmc_server(args) -> None:
     """Multi-model continuous-batching server under open-loop Poisson load.
 
@@ -124,7 +154,11 @@ def serve_xmc_server(args) -> None:
     checkpoint first when the directory has none), routes a Poisson
     request stream across them through `ModelRouter`, and reports
     per-model arrival-to-completion percentiles, queue wait, goodput, and
-    reject rate.
+    reject rate. `--watch` attaches a `CheckpointWatcher` per model: a
+    newer finalized checkpoint generation in that model's directory is
+    hot-swapped in with zero downtime. SIGTERM/SIGINT at any point —
+    including mid-load — drain the router (every accepted future resolves)
+    before the process exits.
     """
     from repro.serve.server import ModelRouter, Rejected
     from repro.train.xmc import train_demo_checkpoint
@@ -135,66 +169,77 @@ def serve_xmc_server(args) -> None:
     router = ModelRouter()
     pools: dict[str, np.ndarray] = {}
     t0 = time.time()
-    for flag in model_flags:
-        name, ckpt, ov = parse_model_flag(flag) \
-            if isinstance(flag, str) else flag
-        d, _ = train_demo_checkpoint(
-            ckpt, n_train=600, n_test=max(args.requests, 64),
-            n_features=args.features, n_labels=args.labels,
-            label_batch=min(128, args.labels), seed=args.seed)
-        handle = CheckpointHandle.open(ckpt)
-        serve = handle.spec.serve.replace(
-            backend=ov.get("backend", args.backend),
-            k=int(ov.get("k", args.k)),
-            max_batch_delay_ms=float(ov.get("delay",
-                                            args.max_batch_delay_ms)),
-            max_queue=(int(ov["max_queue"]) if "max_queue" in ov
-                       else args.max_queue),
-            shortlist_blocks=(int(ov["shortlist_blocks"])
-                              if "shortlist_blocks" in ov
-                              else args.shortlist_blocks),
-            int8=(ov["int8"].lower() in ("1", "true", "yes")
-                  if "int8" in ov else args.int8))
-        router.add(name, handle.server(serve, name=name))
-        pools[name] = np.asarray(d.X_test, np.float32)
-        print(f"[server] model {name!r}: backend={serve.backend} "
-              f"k={serve.k} delay={serve.max_batch_delay_ms}ms "
-              f"max_queue={serve.max_queue} ({ckpt})")
-    print(f"[server] {len(router)} model(s) loaded+warmed in "
-          f"{time.time() - t0:.1f}s; offering ~{args.rate} req/s "
-          f"({args.requests} requests, Poisson arrivals)")
+    # The signal scope opens BEFORE models load: a SIGTERM during engine
+    # warm-up still drains whatever servers are already routed. `with
+    # router` guarantees the drain on every exit path (normal, exception,
+    # or signal-raised SystemExit).
+    with drain_on_signals(router), router:
+        for flag in model_flags:
+            name, ckpt, ov = parse_model_flag(flag) \
+                if isinstance(flag, str) else flag
+            d, _ = train_demo_checkpoint(
+                ckpt, n_train=600, n_test=max(args.requests, 64),
+                n_features=args.features, n_labels=args.labels,
+                label_batch=min(128, args.labels), seed=args.seed)
+            handle = CheckpointHandle.open(ckpt)
+            serve = handle.spec.serve.replace(
+                backend=ov.get("backend", args.backend),
+                k=int(ov.get("k", args.k)),
+                max_batch_delay_ms=float(ov.get("delay",
+                                                args.max_batch_delay_ms)),
+                max_queue=(int(ov["max_queue"]) if "max_queue" in ov
+                           else args.max_queue),
+                shortlist_blocks=(int(ov["shortlist_blocks"])
+                                  if "shortlist_blocks" in ov
+                                  else args.shortlist_blocks),
+                int8=(ov["int8"].lower() in ("1", "true", "yes")
+                      if "int8" in ov else args.int8))
+            router.add(name, handle.server(serve, name=name))
+            pools[name] = np.asarray(d.X_test, np.float32)
+            print(f"[server] model {name!r}: backend={serve.backend} "
+                  f"k={serve.k} delay={serve.max_batch_delay_ms}ms "
+                  f"max_queue={serve.max_queue} ({ckpt})")
+            if args.watch:
+                router.watch(name, ckpt, serve_override=serve,
+                             poll_interval_s=args.watch_interval)
+                print(f"[server] watching {ckpt} for newer generations "
+                      f"every {args.watch_interval}s")
+        print(f"[server] {len(router)} model(s) loaded+warmed in "
+              f"{time.time() - t0:.1f}s; offering ~{args.rate} req/s "
+              f"({args.requests} requests, Poisson arrivals)", flush=True)
 
-    rng = np.random.default_rng(args.seed)
-    names = router.models()
-    futures = []
-    t_start = time.monotonic()
-    t_next = t_start
-    for _ in range(args.requests):
-        t_next += rng.exponential(1.0 / args.rate)
-        now = time.monotonic()
-        if t_next > now:
-            time.sleep(t_next - now)
-        name = names[int(rng.integers(len(names)))]
-        pool = pools[name]
-        n_i = int(rng.integers(1, args.max_request_rows + 1))
-        futures.append((name, router.submit(
-            name, pool[rng.integers(0, pool.shape[0], size=n_i)])))
-    router.stop()                     # flush: every accepted future resolves
-    wall = time.monotonic() - t_start
+        rng = np.random.default_rng(args.seed)
+        names = router.models()
+        futures = []
+        t_start = time.monotonic()
+        t_next = t_start
+        for _ in range(args.requests):
+            t_next += rng.exponential(1.0 / args.rate)
+            now = time.monotonic()
+            if t_next > now:
+                time.sleep(t_next - now)
+            name = names[int(rng.integers(len(names)))]
+            pool = pools[name]
+            n_i = int(rng.integers(1, args.max_request_rows + 1))
+            futures.append((name, router.submit(
+                name, pool[rng.integers(0, pool.shape[0], size=n_i)])))
+        router.stop()                 # flush: every accepted future resolves
+        wall = time.monotonic() - t_start
 
-    for name in names:
-        st = router[name].stats()
-        lat, qw = st["latency"], st["queue_wait"]
-        print(f"[server] {name}: completed={st['completed']} "
-              f"rejected={st['rejected']} "
-              f"(reject_rate={st['reject_rate']:.3f}) "
-              f"p50={lat.get('p50_ms', float('nan')):.2f}ms "
-              f"p99={lat.get('p99_ms', float('nan')):.2f}ms "
-              f"queue_wait_p99={qw.get('p99_ms', float('nan')):.2f}ms")
-    done = sum(1 for _, f in futures
-               if not isinstance(f.result(0), Rejected))
-    print(f"[server] goodput {done / wall:.1f} req/s over {wall:.2f}s wall "
-          f"across {len(names)} model(s)")
+        for name in names:
+            st = router[name].stats()
+            lat, qw = st["latency"], st["queue_wait"]
+            print(f"[server] {name}: completed={st['completed']} "
+                  f"rejected={st['rejected']} "
+                  f"(reject_rate={st['reject_rate']:.3f}) "
+                  f"swaps={st['swaps']} "
+                  f"p50={lat.get('p50_ms', float('nan')):.2f}ms "
+                  f"p99={lat.get('p99_ms', float('nan')):.2f}ms "
+                  f"queue_wait_p99={qw.get('p99_ms', float('nan')):.2f}ms")
+        done = sum(1 for _, f in futures
+                   if not isinstance(f.result(0), Rejected))
+        print(f"[server] goodput {done / wall:.1f} req/s over {wall:.2f}s "
+              f"wall across {len(names)} model(s)")
 
 
 def serve_lm(args) -> None:
@@ -240,6 +285,12 @@ def main() -> None:
     ap.add_argument("--max-queue", type=int, default=None,
                     help="server mode: admission bound on queued requests "
                          "(default unbounded)")
+    ap.add_argument("--watch", action="store_true",
+                    help="server mode: poll each model's checkpoint dir and "
+                         "hot-swap newer finalized generations in with zero "
+                         "downtime (lifecycle.refresh.CheckpointWatcher)")
+    ap.add_argument("--watch-interval", type=float, default=2.0,
+                    help="server mode: --watch poll interval, seconds")
     ap.add_argument("--arch", default=None, choices=list(ARCH_IDS),
                     help="LM mode: architecture to serve")
     ap.add_argument("--smoke", action="store_true")

@@ -27,6 +27,17 @@ wraps an engine in an arrival-time-aware serving loop:
     dispatches by model name. Bucket warm-up compiles are shared
     process-wide for equal compile keys, so N models over equal-shaped
     checkpoints cost one compile set per (shape, k).
+  * **Zero-downtime hot swap** — `swap(engine)` replaces the serving model
+    between micro-batches: the new engine is warmed for this server's
+    buckets OFF the dispatcher thread (old model keeps serving through the
+    compiles), then the reference flips atomically under the server lock.
+    Micro-batches formed before the flip finish on the old model; requests
+    batched after it score on the new one — no accepted request is ever
+    dropped or re-queued. The previous engine is retained
+    (`previous_engine`) so rollback is just `swap` back.
+    `ModelRouter.refresh(name, dir)` is the checkpoint-level form, and
+    `lifecycle.refresh.CheckpointWatcher` (`ModelRouter.watch`) drives it
+    from a generation counter on disk.
 
 The batching policy itself lives in `serve.batching.MicroBatchQueue`
 (`next_batch`); the engine's synchronous `step()` path is untouched and
@@ -155,7 +166,9 @@ class XMCServer:
         self.latency = LatencyStats()        # arrival -> completion
         self.queue_wait = LatencyStats()     # arrival -> device dispatch
         self.counters = {"accepted": 0, "rejected": 0, "completed": 0,
-                         "batches": 0}
+                         "batches": 0, "swaps": 0}
+        self.previous_engine: Optional[XMCEngine] = None  # rollback target
+        self.last_swap: Optional[dict] = None   # timing of the latest swap
         self._cv = threading.Condition()
         self._by_rid: dict[int, _Assembly] = {}
         self._inflight: queue_mod.Queue = queue_mod.Queue(maxsize=max_inflight)
@@ -210,6 +223,63 @@ class XMCServer:
             self._complete_pending()
         self._complete_pending()
 
+    # -- hot swap -----------------------------------------------------------
+
+    def swap(self, engine: XMCEngine) -> XMCEngine:
+        """Replace the serving model with `engine`, zero downtime.
+
+        The swap state machine::
+
+            VALIDATE --> WARM (off-thread, old model still serving)
+                     --> FLIP (atomic, under the server lock, between
+                               micro-batches)
+
+        VALIDATE raises before anything changes: a feature-dim mismatch
+        (requests already accepted for D_old could never score on D_new)
+        or a stopped server. WARM compiles the new engine's top-k for THIS
+        server's buckets on the calling thread — the dispatcher keeps
+        serving the old model throughout, so warm-up cost never shows up
+        as request latency (equal-shaped models share compiles via the
+        process-wide warm-up ledger and pay ~nothing here). FLIP takes the
+        lock and replaces the engine reference: micro-batches already
+        formed (they captured the old engine in `_dispatch_once`) complete
+        on the old model; everything batched after the flip scores on the
+        new one. No accepted request is dropped or re-queued.
+
+        Returns the previous engine (also retained as `previous_engine`),
+        so rollback is `server.swap(server.previous_engine)`.
+        """
+        with self._cv:
+            if self._stopping:
+                raise RuntimeError("cannot swap on a stopped server")
+            old = self.engine
+        nf_old, nf_new = old.n_features, engine.n_features
+        if nf_new is None:
+            nf_new = nf_old
+            if nf_old is not None:
+                engine.adopt_n_features(nf_old)
+        if nf_old is not None and nf_new != nf_old:
+            raise ValueError(
+                f"cannot swap: new engine serves feature dim {nf_new}, "
+                f"server accepts feature dim {nf_old}")
+        t0 = time.monotonic()
+        if engine.n_features is not None:       # warm outside the lock
+            engine.warmup(self.queue.buckets)
+        t_warm = time.monotonic()
+        with self._cv:
+            if self._stopping:
+                raise RuntimeError("cannot swap on a stopped server")
+            prev = self.engine
+            self.engine = engine
+            self.previous_engine = prev
+            self.counters["swaps"] += 1
+            t_flip = time.monotonic()
+            self.last_swap = {"warm_ms": (t_warm - t0) * 1e3,
+                              "flip_ms": (t_flip - t_warm) * 1e3,
+                              "t_flip": t_flip}
+            self._cv.notify_all()
+        return prev
+
     # -- request path -------------------------------------------------------
 
     def submit(self, x: np.ndarray) -> XMCFuture:
@@ -253,12 +323,14 @@ class XMCServer:
         delay_s = self.max_batch_delay_ms / 1e3
         with self._cv:
             mb = self.queue.next_batch(max_delay_s=delay_s, force=force)
+            engine = self.engine     # captured with the batch: a concurrent
+            # swap() must not tear one micro-batch across two models
         if mb is None:
             return False
-        self.engine.ensure_warm(mb.bucket)
+        engine.ensure_warm(mb.bucket)
         xb = jnp.asarray(mb.x)                   # host pack -> device put
         t_dispatch = time.monotonic()
-        scores, labels = self.engine.backend.topk(xb)   # async dispatch
+        scores, labels = engine.backend.topk(xb)        # async dispatch
         self.counters["batches"] += 1
         self._inflight.put((mb, scores, labels, t_dispatch))
         return True
@@ -355,6 +427,7 @@ class ModelRouter:
 
     def __init__(self, servers: Optional[dict[str, XMCServer]] = None):
         self._servers: dict[str, XMCServer] = {}
+        self._watchers: list = []            # CheckpointWatchers we own
         for name, srv in (servers or {}).items():
             self.add(name, srv)
 
@@ -383,12 +456,56 @@ class ModelRouter:
                              f"{self.models()}") from None
         return server.submit(x)
 
+    def refresh(self, name: str, directory: str, *,
+                serve_override=None, mesh=None):
+        """Hot-swap the named server onto the checkpoint in `directory`.
+
+        Opens the checkpoint strictly (a still-streaming directory raises
+        — see `CheckpointHandle.open`), builds the engine its spec (or
+        `serve_override`) describes, and `swap`s it in: the server keeps
+        answering on the old model until the new one is warm, then flips
+        between micro-batches. Returns the previous engine (kept on the
+        server as `previous_engine`) for rollback.
+        """
+        try:
+            server = self._servers[name]
+        except KeyError:
+            raise ValueError(f"unknown model {name!r}; routed models: "
+                             f"{self.models()}") from None
+        from repro.xmc_api import CheckpointHandle      # deferred: no cycle
+        handle = CheckpointHandle.open(directory)
+        serve = (serve_override or handle.spec.serve).validate()
+        # swap() warms for the SERVER's buckets — skip the engine's own
+        # construction-time warm-up so nothing compiles twice.
+        engine = handle.engine(serve.replace(warmup=False), mesh=mesh)
+        return server.swap(engine)
+
+    def watch(self, name: str, directory: str, *, serve_override=None,
+              mesh=None, poll_interval_s: float = 2.0, on_swap=None):
+        """Attach a `lifecycle.refresh.CheckpointWatcher` that polls
+        `directory`'s generation counter and `refresh`es the named server
+        whenever a newer finalized checkpoint lands. The watcher thread is
+        owned by the router and joined by `stop()`. Returns the watcher
+        (use its `poll_once()` for deterministic tests)."""
+        if name not in self._servers:
+            raise ValueError(f"unknown model {name!r}; routed models: "
+                             f"{self.models()}")
+        from repro.lifecycle.refresh import CheckpointWatcher  # no cycle
+        watcher = CheckpointWatcher(
+            directory, self._servers[name], serve_override=serve_override,
+            mesh=mesh, poll_interval_s=poll_interval_s, on_swap=on_swap)
+        self._watchers.append(watcher)
+        watcher.start()
+        return watcher
+
     def start(self) -> "ModelRouter":
         for srv in self._servers.values():
             srv.start()
         return self
 
     def stop(self) -> None:
+        for w in self._watchers:     # watchers first: no swap mid-drain
+            w.stop()
         for srv in self._servers.values():
             srv.stop()
 

@@ -591,6 +591,18 @@ class XMCEngine:
         submitted request); None until either is known."""
         return self._n_features
 
+    def adopt_n_features(self, n_features: int) -> None:
+        """Pin the feature dim on an engine that does not know it yet (no
+        checkpoint meta, no request seen). `XMCServer.swap` uses this so an
+        in-memory replacement engine can be warmed for the server's buckets
+        before the flip; adopting a CONFLICTING dim is refused like a
+        mismatched request would be."""
+        n_features = int(n_features)
+        if self._n_features is not None and self._n_features != n_features:
+            raise ValueError(f"engine already serves feature dim "
+                             f"{self._n_features}, cannot adopt {n_features}")
+        self._n_features = n_features
+
     # -- model loading ------------------------------------------------------
 
     @classmethod

@@ -13,6 +13,9 @@ from repro.specs.schedule import ScheduleSpec
 from repro.specs.serve import DEFAULT_BUCKETS, ServeSpec
 from repro.specs.solver import (SOLVER_OPS_JNP, SOLVER_OPS_PALLAS,
                                 SolverSpec)
+from repro.specs.sweep import (SWEEP_POLICIES, SweepPolicy,
+                               register_sweep_policy)
 
 __all__ = ["Spec", "SolverSpec", "ScheduleSpec", "ServeSpec",
-           "DEFAULT_BUCKETS", "SOLVER_OPS_JNP", "SOLVER_OPS_PALLAS"]
+           "DEFAULT_BUCKETS", "SOLVER_OPS_JNP", "SOLVER_OPS_PALLAS",
+           "SweepPolicy", "SWEEP_POLICIES", "register_sweep_policy"]

@@ -218,13 +218,24 @@ class CheckpointHandle:
     directory: str
     spec: XMCSpec
     result: Optional[object] = None          # XMCTrainResult when from fit()
+    allow_incomplete: bool = False           # opened for inspection only
 
     @classmethod
-    def open(cls, directory: str) -> "CheckpointHandle":
-        """Re-open a checkpoint, recovering its spec from the manifest."""
+    def open(cls, directory: str, *,
+             allow_incomplete: bool = False) -> "CheckpointHandle":
+        """Re-open a checkpoint, recovering its spec from the manifest.
+
+        A still-streaming out_dir raises (a half-written model must never
+        reach serving — the refresh watcher relies on this). Pass
+        `allow_incomplete=True` to inspect a partial checkpoint anyway:
+        `index()`/`model()` then describe the contiguous solved prefix,
+        while `engine()`/`server()` still require a finalized checkpoint.
+        """
         from repro.checkpoint.io import load_block_sparse_meta
-        return cls(directory=directory,
-                   spec=_spec_from_index(load_block_sparse_meta(directory)))
+        index = load_block_sparse_meta(directory,
+                                       allow_incomplete=allow_incomplete)
+        return cls(directory=directory, spec=_spec_from_index(index),
+                   allow_incomplete=allow_incomplete)
 
     # -- introspection ----------------------------------------------------
 
@@ -233,16 +244,25 @@ class CheckpointHandle:
         from repro.checkpoint.io import has_block_sparse_checkpoint
         return has_block_sparse_checkpoint(self.directory)
 
+    @property
+    def generation(self) -> Optional[int]:
+        """Generation counter of the servable checkpoint (None while the
+        stream is still being written) — what `CheckpointWatcher` polls."""
+        from repro.checkpoint.io import checkpoint_generation
+        return checkpoint_generation(self.directory)
+
     def index(self) -> dict:
         """Pre-flight metadata (shapes, block counts, user meta) without
         touching the arrays."""
         from repro.checkpoint.io import load_block_sparse_meta
-        return load_block_sparse_meta(self.directory)
+        return load_block_sparse_meta(
+            self.directory, allow_incomplete=self.allow_incomplete)
 
     def model(self):
         """Load the packed `BlockSparseModel` (+ meta dict)."""
         from repro.checkpoint.io import load_block_sparse
-        return load_block_sparse(self.directory)
+        return load_block_sparse(
+            self.directory, allow_incomplete=self.allow_incomplete)
 
     # -- serving ----------------------------------------------------------
 

@@ -1,0 +1,422 @@
+"""Model lifecycle: generation counter, incomplete-checkpoint gating,
+zero-downtime hot swap (XMCServer.swap / ModelRouter.refresh / watcher),
+and the warm-start sweep driver (lifecycle.sweep)."""
+
+import json
+import os
+import signal
+import subprocess
+import sys
+import threading
+import time
+
+import numpy as np
+import pytest
+
+import jax.numpy as jnp
+
+from repro.checkpoint.io import (BSR_INDEX, BSR_MANIFEST,
+                                 checkpoint_generation, load_block_sparse,
+                                 save_block_sparse)
+from repro.core.pruning import prune, to_block_sparse
+from repro.lifecycle import (CheckpointWatcher, SweepReport,
+                             models_bit_identical, sweep)
+from repro.serve import ModelRouter, XMCEngine, XMCResult, XMCServer, \
+    make_backend
+from repro.specs import (ScheduleSpec, ServeSpec, SolverSpec, SweepPolicy)
+from repro.xmc_api import CheckpointHandle, XMCSpec, fit
+
+L, D = 48, 512
+SPEC = XMCSpec(solver=SolverSpec(eps=1e-2, delta=0.01),
+               schedule=ScheduleSpec(label_batch=16, block_shape=(16, 16)),
+               serve=ServeSpec(backend="bsr", k=3, buckets=(2, 4),
+                               max_batch_delay_ms=1.0))
+
+
+@pytest.fixture(scope="module")
+def xmc_data():
+    from repro.data.xmc import make_xmc_dataset
+    d = make_xmc_dataset(n_train=150, n_test=40, n_features=D, n_labels=L,
+                         seed=0)
+    return (jnp.asarray(d.X_train), jnp.asarray(d.Y_train),
+            np.asarray(d.X_test, np.float32), np.asarray(d.Y_test))
+
+
+def _dense_engine(W, *, k=3, buckets=(2, 4, 8)):
+    bsr = to_block_sparse(prune(jnp.asarray(W), 0.05), (128, 128))
+    be = make_backend("dense", bsr, k, n_labels=W.shape[0])
+    return XMCEngine(be, buckets=buckets, warmup=False,
+                     n_features=W.shape[1])
+
+
+# ---------------------------------------------------------------------------
+# Generation counter (checkpoint/io.py)
+# ---------------------------------------------------------------------------
+
+def test_generation_bumps_on_fresh_fit(xmc_data, tmp_path):
+    X, Y, _, _ = xmc_data
+    out = str(tmp_path / "gen")
+    fit(X, Y, SPEC, out)
+    assert checkpoint_generation(out) == 1
+    # Resuming (same spec, already complete) finishes the SAME model:
+    # the generation must not move.
+    fit(X, Y, SPEC, out)
+    assert checkpoint_generation(out) == 1
+    # A fresh refit (resume=False) publishes the next generation.
+    spec2 = SPEC.replace(solver=SPEC.solver.replace(delta=0.2))
+    fit(X, Y, spec2, out, resume=False)
+    assert checkpoint_generation(out) == 2
+    assert CheckpointHandle.open(out).generation == 2
+
+
+def test_generation_one_shot_and_legacy_default(tmp_path):
+    rng = np.random.default_rng(0)
+    model = to_block_sparse(
+        prune(jnp.asarray(rng.normal(size=(L, 128)).astype(np.float32)),
+              0.2), (16, 16))
+    out = str(tmp_path / "oneshot")
+    save_block_sparse(model, out, meta={"n_features": 128})
+    assert checkpoint_generation(out) == 1
+    save_block_sparse(model, out, meta={"n_features": 128})
+    assert checkpoint_generation(out) == 2
+    # A checkpoint written before the counter existed reads as gen 1.
+    path = os.path.join(out, BSR_INDEX)
+    with open(path) as f:
+        index = json.load(f)
+    del index["generation"]
+    with open(path, "w") as f:
+        json.dump(index, f)
+    assert checkpoint_generation(out) == 1
+
+
+def test_incomplete_stream_gated_and_inspectable(xmc_data, tmp_path):
+    X, Y, _, _ = xmc_data
+    out = str(tmp_path / "partial")
+    # One batch of L/label_batch=3: the stream stays incomplete.
+    fit(X, Y, SPEC, out, max_batches=1)
+    assert checkpoint_generation(out) is None     # not servable -> no gen
+    with pytest.raises(ValueError, match="incomplete"):
+        CheckpointHandle.open(out)
+    with pytest.raises(ValueError, match="incomplete"):
+        load_block_sparse(out)
+
+    handle = CheckpointHandle.open(out, allow_incomplete=True)
+    assert not handle.complete
+    index = handle.index()
+    assert index["complete"] is False
+    model, _ = handle.model()                      # contiguous solved prefix
+    assert model.orig_shape[0] == 16               # one 16-label batch
+    with pytest.raises(ValueError, match="incomplete"):
+        handle.engine()                            # serving stays strict
+
+    # Finishing the stream makes it servable at generation 1.
+    fit(X, Y, SPEC, out)
+    assert checkpoint_generation(out) == 1
+    assert CheckpointHandle.open(out).model()[0].orig_shape == (L, D)
+
+
+# ---------------------------------------------------------------------------
+# XMCServer.swap
+# ---------------------------------------------------------------------------
+
+def test_swap_flips_results_and_retains_previous():
+    rng = np.random.default_rng(3)
+    W = rng.normal(size=(96, 128)).astype(np.float32) * 0.1
+    eng_a, eng_b = _dense_engine(W), _dense_engine(-W)
+    x = rng.normal(size=(1, 128)).astype(np.float32)
+    la = np.asarray(eng_a.backend.topk(jnp.asarray(x))[1])
+    lb = np.asarray(eng_b.backend.topk(jnp.asarray(x))[1])
+    assert not np.array_equal(la, lb)
+
+    server = XMCServer(eng_a, max_batch_delay_ms=1.0)
+    try:
+        assert np.array_equal(server.submit(x).result(30).labels, la)
+        prev = server.swap(eng_b)
+        assert prev is eng_a and server.previous_engine is eng_a
+        assert server.counters["swaps"] == 1
+        # swap warmed the NEW engine for this server's buckets.
+        assert set(server.queue.buckets) <= eng_b._warm
+        assert server.last_swap["flip_ms"] < 1e3
+        assert np.array_equal(server.submit(x).result(30).labels, lb)
+        # Rollback is swap-back to the retained previous engine.
+        server.swap(server.previous_engine)
+        assert server.counters["swaps"] == 2
+        assert np.array_equal(server.submit(x).result(30).labels, la)
+    finally:
+        server.stop()
+
+
+def test_swap_feature_dim_mismatch_raises_before_flip():
+    rng = np.random.default_rng(4)
+    W = rng.normal(size=(96, 128)).astype(np.float32) * 0.1
+    W_wide = rng.normal(size=(96, 256)).astype(np.float32) * 0.1
+    server = XMCServer(_dense_engine(W), max_batch_delay_ms=1.0)
+    try:
+        old = server.engine
+        with pytest.raises(ValueError, match="feature dim"):
+            server.swap(_dense_engine(W_wide))
+        assert server.engine is old                # nothing flipped
+        assert server.counters["swaps"] == 0
+        x = rng.normal(size=(2, 128)).astype(np.float32)
+        assert isinstance(server.submit(x).result(30), XMCResult)
+    finally:
+        server.stop()
+
+
+def test_swap_on_stopped_server_raises():
+    rng = np.random.default_rng(5)
+    W = rng.normal(size=(96, 128)).astype(np.float32) * 0.1
+    server = XMCServer(_dense_engine(W), max_batch_delay_ms=1.0)
+    server.stop()
+    with pytest.raises(RuntimeError, match="stopped"):
+        server.swap(_dense_engine(W))
+
+
+def test_swap_under_poisson_load_zero_drops_clean_cut():
+    """Open-loop traffic while swap() fires from another thread: every
+    accepted request resolves, none rejected, and the completion stream is
+    a clean cut — old-model answers strictly before new-model answers."""
+    rng = np.random.default_rng(6)
+    W = rng.normal(size=(96, 128)).astype(np.float32) * 0.1
+    eng_a, eng_b = _dense_engine(W), _dense_engine(-W)
+    n = 60
+    # Single-row requests: never split across micro-batches, so each
+    # answer is attributable to exactly one model.
+    reqs = [rng.normal(size=(1, 128)).astype(np.float32) for _ in range(n)]
+    pred = {id(e): [np.asarray(e.backend.topk(jnp.asarray(x))[1])
+                    for x in reqs] for e in (eng_a, eng_b)}
+
+    server = XMCServer(eng_a, max_batch_delay_ms=1.0)
+    swapper = threading.Thread(target=lambda: server.swap(eng_b))
+    futures = []
+    try:
+        for i, x in enumerate(reqs):
+            futures.append(server.submit(x))
+            if i == n // 2:
+                swapper.start()
+            time.sleep(rng.exponential(1.5e-3))
+        swapper.join()
+    finally:
+        server.stop()
+
+    results = [f.result(60) for f in futures]
+    assert all(isinstance(r, XMCResult) for r in results)
+    assert server.counters["accepted"] == n
+    assert server.counters["completed"] == n
+    assert server.counters["rejected"] == 0
+    assert server.counters["swaps"] == 1
+
+    kinds = []
+    for i, r in enumerate(results):
+        if np.array_equal(r.labels, pred[id(eng_a)][i]):
+            kinds.append("a")
+        else:
+            assert np.array_equal(r.labels, pred[id(eng_b)][i])
+            kinds.append("b")
+    assert "a" in kinds                  # requests before the flip: old model
+    # Micro-batches are FIFO and the flip happens between them, so the
+    # submission-ordered answers are A...AB...B — never interleaved.
+    first_b = kinds.index("b") if "b" in kinds else len(kinds)
+    assert all(k == "b" for k in kinds[first_b:])
+
+
+# ---------------------------------------------------------------------------
+# CheckpointWatcher + ModelRouter.refresh/.watch
+# ---------------------------------------------------------------------------
+
+@pytest.fixture()
+def ckpt_pair(xmc_data, tmp_path):
+    """One served checkpoint dir (gen 1) + a second dir with a different
+    delta (for refresh), both over the same feature dim."""
+    X, Y, _, _ = xmc_data
+    a, b = str(tmp_path / "a"), str(tmp_path / "b")
+    fit(X, Y, SPEC, a)
+    fit(X, Y, SPEC.replace(solver=SPEC.solver.replace(delta=0.3)), b,
+        init_from=a)
+    return a, b
+
+
+def test_watcher_poll_once_swaps_on_new_generation(xmc_data, ckpt_pair):
+    X, Y, _, _ = xmc_data
+    a, _ = ckpt_pair
+    server = CheckpointHandle.open(a).server()
+    swaps = []
+    try:
+        watcher = CheckpointWatcher(
+            a, server, poll_interval_s=0.05,
+            on_swap=lambda gen, handle, prev: swaps.append(gen))
+        assert watcher.generation == 1             # baseline: already served
+        assert watcher.poll_once() is None         # nothing new
+        old_engine = server.engine
+
+        # A fresh refit into the SAME directory -> generation 2.
+        fit(X, Y, SPEC.replace(solver=SPEC.solver.replace(delta=0.25)), a,
+            resume=False)
+        handle = watcher.poll_once()
+        assert handle is not None and watcher.generation == 2
+        assert server.counters["swaps"] == 1
+        assert server.engine is not old_engine
+        assert swaps == [2]
+        assert watcher.poll_once() is None         # idempotent until gen 3
+    finally:
+        server.stop()
+
+
+def test_watcher_never_swaps_a_half_written_generation(xmc_data, ckpt_pair):
+    X, Y, _, _ = xmc_data
+    a, _ = ckpt_pair
+    server = CheckpointHandle.open(a).server()
+    try:
+        watcher = CheckpointWatcher(a, server, poll_interval_s=0.05)
+        spec3 = SPEC.replace(solver=SPEC.solver.replace(delta=0.05))
+        # Start streaming generation 2 but stop after one of three batches:
+        # the manifest exists, is newer, and is NOT complete.
+        fit(X, Y, spec3, a, resume=False, max_batches=1)
+        assert checkpoint_generation(a) is None
+        assert watcher.poll_once() is None
+        assert server.counters["swaps"] == 0
+        # Finishing the stream makes it swappable.
+        fit(X, Y, spec3, a)
+        assert watcher.poll_once() is not None
+        assert watcher.generation == 2
+        assert server.counters["swaps"] == 1
+    finally:
+        server.stop()
+
+
+def test_router_refresh_and_watch(xmc_data, ckpt_pair):
+    X, Y, _, _ = xmc_data
+    a, b = ckpt_pair
+    router = ModelRouter({"m": CheckpointHandle.open(a).server()})
+    try:
+        with pytest.raises(ValueError, match="unknown model"):
+            router.refresh("nope", b)
+        old = router["m"].engine
+        prev = router.refresh("m", b)
+        assert prev is old and router["m"].counters["swaps"] == 1
+        assert isinstance(router["m"].submit(
+            np.zeros((1, D), np.float32)).result(30), XMCResult)
+
+        # Background watcher through the router: a refit into `b` is
+        # picked up without any explicit refresh call.
+        watcher = router.watch("m", b, poll_interval_s=0.05)
+        fit(X, Y, SPEC.replace(solver=SPEC.solver.replace(delta=0.15)), b,
+            resume=False)
+        deadline = time.monotonic() + 60
+        while router["m"].counters["swaps"] < 2:
+            assert time.monotonic() < deadline, "watcher never swapped"
+            time.sleep(0.05)
+        assert watcher.swaps == 1 and watcher.generation == 2
+    finally:
+        router.stop()
+    assert watcher._thread is None                 # stop() joined the watcher
+
+
+# ---------------------------------------------------------------------------
+# Sweep driver
+# ---------------------------------------------------------------------------
+
+def test_sweep_fixed_point_monotonicity_and_policy(xmc_data, tmp_path):
+    X, Y, Xh, Yh = xmc_data
+    report = sweep(
+        X, Y, SPEC, {"same": {}, "hi": {"delta": 0.3}},
+        str(tmp_path / "sweepA"), workers=2, holdout=(Xh, Yh),
+        policy=SweepPolicy(kind="max_precision", metric="P@1"))
+    assert isinstance(report, SweepReport)
+    assert [a.name for a in report.arms] == ["base", "same", "hi"]
+
+    base, same, hi = report.arms
+    # Correctness anchor: the unchanged-spec arm warm-started from the
+    # converged base is a bit-identical fixed point.
+    assert same.fixed_point is True
+    assert models_bit_identical(same.out_dir, base.out_dir)
+    assert same.nnz == base.nnz
+    assert hi.fixed_point is None                  # different solution
+    # Fig. 5 monotonicity: a larger Delta prunes at least as hard.
+    assert hi.nnz <= same.nnz
+    assert hi.model_mb <= same.model_mb
+    for arm in report.arms:
+        assert arm.model_mb == pytest.approx(arm.nnz * 8 / 1e6)
+        assert 0.0 < arm.nnz_frac <= 1.0
+        assert arm.int8_mb > 0.0
+        assert "P@1" in arm.metrics and "P@3" in arm.metrics
+    assert base.warm_started is False and hi.warm_started is True
+
+    assert report.winner in ("base", "same", "hi")
+    assert report.winner_dir == report.arm(report.winner).out_dir
+    json.dumps(report.to_dict())                   # report is JSON-clean
+
+    # Declarative deployment policies over the same arms:
+    budget = (hi.model_mb + same.model_mb) / 2
+    under = SweepPolicy(kind="max_precision_under_size_mb", metric="P@1",
+                        size_mb=budget)
+    assert under.select(report.arms).name == "hi"
+    assert SweepPolicy(kind="min_size").select(report.arms).name == "hi"
+
+    # Re-running the sweep resumes every arm (no retraining) and lands on
+    # the same report, regardless of worker count.
+    again = sweep(X, Y, SPEC, {"same": {}, "hi": {"delta": 0.3}},
+                  str(tmp_path / "sweepA"), workers=1, holdout=(Xh, Yh),
+                  policy=SweepPolicy(kind="max_precision", metric="P@1"))
+    assert again.winner == report.winner
+    assert [a.nnz for a in again.arms] == [a.nnz for a in report.arms]
+    assert [a.metrics["P@1"] for a in again.arms] == \
+        [a.metrics["P@1"] for a in report.arms]
+
+
+def test_sweep_rejects_bad_arms(xmc_data, tmp_path):
+    X, Y, _, _ = xmc_data
+    with pytest.raises(ValueError, match="reserved"):
+        sweep(X, Y, SPEC, {"base": {}}, str(tmp_path / "s1"))
+    with pytest.raises(ValueError, match="plain directory"):
+        sweep(X, Y, SPEC, {"a/b": {}}, str(tmp_path / "s2"))
+    with pytest.raises(ValueError, match="workers"):
+        sweep(X, Y, SPEC, {"x": {}}, str(tmp_path / "s3"), workers=0)
+
+
+def test_sweep_policy_validation():
+    with pytest.raises(ValueError, match="unknown sweep policy"):
+        SweepPolicy(kind="nope").validate()
+    with pytest.raises(ValueError, match="size_mb"):
+        SweepPolicy(kind="max_precision_under_size_mb").validate()
+    with pytest.raises(ValueError, match="precision_floor"):
+        SweepPolicy(kind="min_size_at_precision").validate()
+    p = SweepPolicy(kind="max_precision_under_size_mb", size_mb=2.0,
+                    int8=True)
+    assert SweepPolicy.from_json(p.to_json()) == p
+
+
+# ---------------------------------------------------------------------------
+# launch/serve.py --server: signal-driven drain
+# ---------------------------------------------------------------------------
+
+def test_server_cli_sigterm_drains(tmp_path):
+    """SIGTERM mid-load must drain the router (every accepted future
+    resolves) and exit 143 — not kill dispatcher threads mid-batch."""
+    env = dict(os.environ, PYTHONPATH="src")
+    proc = subprocess.Popen(
+        [sys.executable, "-m", "repro.launch.serve", "--xmc", "--server",
+         "--ckpt", str(tmp_path / "cli_ckpt"), "--backend", "dense",
+         "--features", "512", "--labels", "64",
+         "--requests", "2000", "--rate", "20"],
+        cwd=os.path.dirname(os.path.dirname(os.path.abspath(__file__))),
+        env=env, stdout=subprocess.PIPE, stderr=subprocess.STDOUT,
+        text=True)
+    lines = []
+    try:
+        for line in proc.stdout:                   # blocks until EOF
+            lines.append(line)
+            if "offering" in line:
+                break
+        else:
+            proc.wait(timeout=30)
+            pytest.fail("server never started:\n" + "".join(lines))
+        time.sleep(1.0)                            # let some load flow
+        proc.send_signal(signal.SIGTERM)
+        rest, _ = proc.communicate(timeout=180)
+        lines.append(rest)
+    finally:
+        proc.kill()
+    out = "".join(lines)
+    assert proc.returncode == 128 + signal.SIGTERM, out
+    assert "router drained" in out, out

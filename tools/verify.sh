@@ -5,16 +5,21 @@
 #   tools/verify.sh --fast     # tier-1 pytest only
 #
 # The smoke leg runs `benchmarks.run --smoke` (train_pipeline +
-# tron_hotpath + serve_latency on tiny shapes) so the benchmark
-# entrypoints cannot silently rot: they import, run end-to-end, and keep
-# their bit-identity assertions live on every change. serve_latency's
-# smoke includes the open-loop Poisson server gates (deadline launch
-# beats drain-on-full on p99; admission control sheds overload with
-# bounded queue wait), the shortlist gate (candidate fraction < 25% at
-# recall@5 >= 0.95), and the int8 serving gates: the quantized artifact's
-# weight payload must be <= 0.55x the fp32 blocks, and int8 top-5
-# agreement vs fp32 must be >= 0.99 — on the exhaustive path AND the
-# shortlist-composed gathered-int8 path.
+# tron_hotpath + serve_latency + lifecycle_sweep on tiny shapes) so the
+# benchmark entrypoints cannot silently rot: they import, run end-to-end,
+# and keep their bit-identity assertions live on every change.
+# serve_latency's smoke includes the open-loop Poisson server gates
+# (deadline launch beats drain-on-full on p99; admission control sheds
+# overload with bounded queue wait), the shortlist gate (candidate
+# fraction < 25% at recall@5 >= 0.95), the int8 serving gates (quantized
+# payload <= 0.55x fp32, top-5 agreement >= 0.99 on the exhaustive AND
+# shortlist-composed paths), and the zero-downtime refresh gate: a hot
+# swap under open-loop Poisson load drops nothing (every accepted request
+# resolves, old model answers before the flip, new model after) and the
+# swap-window p99 stays <= 2x the steady-state p99. lifecycle_sweep's
+# smoke gates the warm-start sweep driver: the unchanged-spec arm is
+# bit-identical to its warm-start source, model size is monotone in
+# Delta, and the size-budget winner policy picks a feasible arm.
 #
 # The docs gate keeps the documentation surface honest: every intra-repo
 # link in README.md and docs/*.md must resolve (tools/check_docs.py), and
@@ -31,7 +36,7 @@ python -m pytest -x -q
 
 if [[ "${1:-}" != "--fast" ]]; then
     echo
-    echo "== benchmark smoke (train_pipeline + tron_hotpath + serve_latency) =="
+    echo "== benchmark smoke (train_pipeline + tron_hotpath + serve_latency + lifecycle_sweep) =="
     python -m benchmarks.run --smoke
 
     echo
