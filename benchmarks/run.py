@@ -24,8 +24,12 @@ Modules (deliverable d):
                          drain-on-full on p99; overload sheds with bounded
                          queue wait), and the zero-downtime refresh gate
                          (hot swap under load: zero drops, swap-window p99
-                         <= 2x steady state) — all live in --smoke, so
-                         tools/verify.sh gates them
+                         <= 2x steady state), and the coarse-stage gates
+                         (learned one-vs-rest coarse stage reaches the
+                         recall gate at strictly fewer candidate blocks
+                         than centroids; per-query ragged gather bit-exact
+                         at full width; legacy/v1 artifact fallback) — all
+                         live in --smoke, so tools/verify.sh gates them
   lifecycle_sweep        warm-start Delta sweep driver smoke: unchanged-spec
                          arm bit-identical to its warm-start source, model
                          size monotone in Delta, size-budget policy picks a

@@ -107,17 +107,31 @@ SHORTLIST_FILE = "shortlist.npz"
 def save_shortlist(directory: str, artifact) -> dict:
     """Persist a `serve.shortlist.ShortlistArtifact` next to the BSR arrays
     (tmp + atomic rename — cooperative finalizers may race, and both write
-    identical bytes). Returns the entry the index/manifest references."""
+    identical bytes). Returns the entry the index/manifest references.
+
+    Writes the v2 format: explicit `version` and `kind` keys, plus the
+    routing-tree arrays when `kind == "tree"`. v1 files (PR 6 — no version
+    key, always centroids) are still read by `load_shortlist`."""
+    from repro.serve.shortlist import SHORTLIST_VERSION  # deferred: no cycle
     path = os.path.join(directory, SHORTLIST_FILE)
     tmp = path + ".tmp.npz"
-    np.savez_compressed(
-        tmp,
+    arrays = dict(
+        version=np.int32(SHORTLIST_VERSION),
+        kind=np.str_(artifact.kind),
         centroids=np.asarray(artifact.centroids, np.float32),
         block_rows=np.int32(artifact.block_rows),
         n_labels=np.int32(artifact.n_labels),
         stat=np.str_(artifact.stat))
+    if artifact.kind == "tree":
+        arrays["tree_nodes"] = np.asarray(artifact.tree_nodes, np.float32)
+        arrays["tree_leaf_scores"] = np.asarray(artifact.tree_leaf_scores,
+                                                np.float32)
+        arrays["tree_depth"] = np.int32(artifact.tree_depth)
+    np.savez_compressed(tmp, **arrays)
     os.replace(tmp, path)
     return {"file": SHORTLIST_FILE,
+            "version": int(SHORTLIST_VERSION),
+            "kind": artifact.kind,
             "n_row_blocks": artifact.n_row_blocks,
             "block_rows": int(artifact.block_rows),
             "stat": artifact.stat}
@@ -125,16 +139,64 @@ def save_shortlist(directory: str, artifact) -> dict:
 
 def load_shortlist(directory: str):
     """The shortlist artifact of a checkpoint, or None when the checkpoint
-    predates two-stage scoring (legacy checkpoints serve exhaustively)."""
+    predates two-stage scoring (legacy checkpoints serve exhaustively).
+
+    Reads both formats: v2 (version/kind keys, optional tree arrays) and
+    v1 (PR 6 — centroids only, no version key), which loads as
+    kind="centroid"."""
     path = os.path.join(directory, SHORTLIST_FILE)
     if not os.path.exists(path):
         return None
     from repro.serve.shortlist import ShortlistArtifact  # deferred: no cycle
     data = np.load(path, allow_pickle=False)
+    kind = str(data["kind"]) if "version" in data.files else "centroid"
+    tree_kwargs = {}
+    if kind == "tree":
+        tree_kwargs = dict(tree_nodes=np.asarray(data["tree_nodes"]),
+                           tree_leaf_scores=np.asarray(
+                               data["tree_leaf_scores"]),
+                           tree_depth=int(data["tree_depth"]))
     return ShortlistArtifact(centroids=np.asarray(data["centroids"]),
                              block_rows=int(data["block_rows"]),
                              n_labels=int(data["n_labels"]),
-                             stat=str(data["stat"]))
+                             stat=str(data["stat"]),
+                             kind=kind, **tree_kwargs)
+
+
+def upgrade_shortlist(directory: str, artifact) -> dict:
+    """Replace a checkpoint's shortlist artifact (e.g. centroid -> learned
+    or tree, built by `fit()` once training data is in hand) and update the
+    index/manifest entry that references it, atomically for either layout.
+
+    Runs under `manifest_lock`, so cooperative workers that both reach the
+    post-finalize upgrade serialize; the builders are deterministic in
+    (checkpoint, data), so the racers write identical bytes and the
+    last-writer-wins rename is harmless. Returns the new entry."""
+    index_path = os.path.join(directory, BSR_INDEX)
+    manifest_path = os.path.join(directory, BSR_MANIFEST)
+    with manifest_lock(directory):
+        entry = save_shortlist(directory, artifact)
+        if os.path.exists(index_path):
+            with open(index_path) as f:
+                index = json.load(f)
+            index["shortlist"] = entry
+            tmp = index_path + ".tmp"
+            with open(tmp, "w") as f:
+                json.dump(index, f, indent=1)
+            os.replace(tmp, index_path)
+        elif os.path.exists(manifest_path):
+            with open(manifest_path) as f:
+                manifest = json.load(f)
+            manifest["shortlist"] = entry
+            tmp = manifest_path + ".tmp"
+            with open(tmp, "w") as f:
+                json.dump(manifest, f, indent=1, sort_keys=True)
+            os.replace(tmp, manifest_path)
+        else:
+            raise FileNotFoundError(
+                f"no block-sparse checkpoint (index or manifest) in "
+                f"{directory} to attach a shortlist to")
+        return entry
 
 
 def _prior_generation(directory: str) -> int:
@@ -177,11 +239,17 @@ def checkpoint_generation(directory: str) -> Optional[int]:
     return None
 
 
-def save_block_sparse(model, directory: str, *, meta: dict | None = None):
+def save_block_sparse(model, directory: str, *, meta: dict | None = None,
+                      label_order=None):
     """Write a `BlockSparseModel` (+ optional serving metadata such as
     n_labels / delta) as one .npz + JSON index under `directory`, plus the
     shortlist artifact for two-stage serving. Stamps the next generation
-    (prior + 1) so pollers see the rewrite as a new model."""
+    (prior + 1) so pollers see the rewrite as a new model.
+
+    `label_order` (optional, len n_labels) records the pack-time label
+    permutation: packed row j holds original label `label_order[j]`. The
+    serving engine maps top-k ids back through it, so reordered
+    checkpoints serve original label ids exactly."""
     from repro.core.pruning import quantize_blocks       # deferred: no cycle
     from repro.serve.shortlist import build_shortlist    # deferred: no cycle
     os.makedirs(directory, exist_ok=True)
@@ -208,8 +276,22 @@ def save_block_sparse(model, directory: str, *, meta: dict | None = None):
         "meta": dict(meta or {}),
         "shortlist": save_shortlist(directory, build_shortlist(model)),
     }
+    if label_order is not None:
+        index["label_order"] = _check_label_order(label_order,
+                                                  model.n_labels)
     with open(os.path.join(directory, BSR_INDEX), "w") as f:
         json.dump(index, f, indent=1)
+
+
+def _check_label_order(label_order, n_labels: int) -> list[int]:
+    """Validate a pack-time label permutation (length n_labels, a true
+    permutation of range(n_labels)) and return it JSON-ready."""
+    order = [int(v) for v in np.asarray(label_order).reshape(-1)]
+    if sorted(order) != list(range(int(n_labels))):
+        raise ValueError(
+            f"label_order must be a permutation of range({n_labels}); got "
+            f"length {len(order)}")
+    return order
 
 
 BSR_MANIFEST = "bsr_manifest.json"
@@ -273,12 +355,25 @@ class BlockSparseWriter:
     def __init__(self, directory: str, *, n_labels: int, n_features: int,
                  block_shape: tuple[int, int], label_batch: int,
                  n_batches: int, solver: dict | None = None,
-                 meta: dict | None = None, resume: bool = True):
+                 meta: dict | None = None, resume: bool = True,
+                 label_order=None, clock=time.time):
         """`solver` is an opaque dict of whatever determined the solution
         (hyperparameters, dataset fingerprint): it is stored in the manifest
         and must match exactly on resume — shards solved under different
-        settings must never be stitched into one 'complete' checkpoint."""
+        settings must never be stitched into one 'complete' checkpoint.
+
+        `label_order` (optional) is the pack-time label permutation: packed
+        row j of the checkpoint holds original label `label_order[j]`. It
+        lives in the identity-checked manifest header, so a resume under a
+        different (or no) permutation is rejected — shards packed in
+        different label orders must never be stitched together.
+
+        `clock` is the lease table's time source (seconds, `time.time`
+        semantics). Injected so lease-expiry logic is testable without
+        real wall-clock sleeps; production callers never pass it.
+        """
         self.directory = directory
+        self._clock = clock
         os.makedirs(directory, exist_ok=True)
         self._path = os.path.join(directory, BSR_MANIFEST)
         # Sample the prior generation before anything is removed: a fresh
@@ -308,6 +403,8 @@ class BlockSparseWriter:
             "label_batch": int(label_batch), "n_batches": int(n_batches),
             "solver": dict(solver or {}),
         }
+        if label_order is not None:
+            header["label_order"] = _check_label_order(label_order, n_labels)
         # Creation/validation runs under the manifest lock: co-workers
         # launched simultaneously must not both observe "no manifest yet"
         # and race to create it (one creates, the rest resume into it).
@@ -322,6 +419,13 @@ class BlockSparseWriter:
                 # and is upgraded in place on the next flush.
                 mismatch = {k: (existing.get(k), v) for k, v in header.items()
                             if existing.get(k) != v}
+                # label_order is identity both ways: a manifest packed under
+                # a permutation must not be resumed without it (absent from
+                # header => not caught by the loop above).
+                if ("label_order" in existing
+                        and "label_order" not in header):
+                    mismatch["label_order"] = (
+                        "<set>", None)
                 if mismatch:
                     raise ValueError(
                         f"cannot resume into {directory}: manifest disagrees "
@@ -465,7 +569,7 @@ class BlockSparseWriter:
         exclude = {int(b) for b in exclude}
         with manifest_lock(self.directory):
             self._reload()
-            now = time.time()
+            now = self._clock()
             shards, leases = self.manifest["shards"], self.manifest["leases"]
             for b in range(self.manifest["n_batches"]):
                 s = str(b)
@@ -488,7 +592,7 @@ class BlockSparseWriter:
             return
         with manifest_lock(self.directory):
             self._reload()
-            now = time.time()
+            now = self._clock()
             touched = False
             for b in batches:
                 lease = self.manifest["leases"].get(str(b))
@@ -522,7 +626,7 @@ class BlockSparseWriter:
         a worker sleeps when `claim_next_batch` returns None but the
         checkpoint is not finished (a co-worker may yet die mid-batch)."""
         with self._locked(write=False):
-            now = time.time()
+            now = self._clock()
             shards, leases = self.manifest["shards"], self.manifest["leases"]
             waits = []
             for b in range(self.manifest["n_batches"]):
@@ -705,7 +809,7 @@ def _stream_index(directory: str, *, allow_incomplete: bool = False) -> dict:
     rows_done = (L if complete else
                  (shards[-1]["row_start"] + shards[-1]["n_rows"]
                   if shards else 0))
-    return {
+    index = {
         "format": "bsr", "layout": "stream",
         "shape": [sum(s["padded_rows"] for s in shards),
                   -(-D // bd) * bd],
@@ -719,6 +823,9 @@ def _stream_index(directory: str, *, allow_incomplete: bool = False) -> dict:
         "meta": manifest["meta"],
         "manifest": manifest,
     }
+    if "label_order" in manifest:        # pack-time label permutation
+        index["label_order"] = manifest["label_order"]
+    return index
 
 
 def load_block_sparse_meta(directory: str, *,

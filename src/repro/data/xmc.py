@@ -70,6 +70,7 @@ def make_xmc_dataset(*, n_train: int = 2000, n_test: int = 500,
                      sig_per_label: int = 3,
                      bg_per_doc: int = 10, label_noise: float = 0.05,
                      multi_label_p: float = 0.3, label_locality: float = 0.0,
+                     scramble_labels: bool = False,
                      seed: int = 0, name: str = "synthetic") -> XMCDataset:
     """Generate a power-law XMC problem by a topic-model-like process.
 
@@ -91,6 +92,13 @@ def make_xmc_dataset(*, n_train: int = 2000, n_test: int = 500,
     first label instead of independently. 0 (default) keeps co-occurring
     labels independent; near 1 makes them cluster-adjacent, which is how
     co-occurring labels land in a cluster-ordered label space.
+
+    `scramble_labels` applies a final random permutation to the label ids
+    (columns of Y and rows of label_pools), destroying whatever locality
+    the knobs above arranged WITHOUT changing the learning problem — the
+    worst-case label order a contiguous-row-block candidate stage can
+    face, and the regime `ScheduleSpec.reorder_labels` is meant to repair
+    (its co-occurrence clustering should rediscover the structure).
     """
     rng = np.random.default_rng(seed)
     N = n_train + n_test
@@ -151,6 +159,14 @@ def make_xmc_dataset(*, n_train: int = 2000, n_test: int = 500,
             sig = pools[l][:sig_per_label]
             X[j, sig] += 1.0
             X[j] /= np.linalg.norm(X[j]) + 1e-8
+
+    if scramble_labels:
+        # Column permutation only: X and the per-instance label SETS are
+        # untouched, so any fixed relabeling of a model trained on the
+        # unscrambled data solves this dataset identically.
+        scram = rng.permutation(L)
+        Y = Y[:, scram]
+        pools = pools[scram]
 
     return XMCDataset(X_train=X[:n_train], Y_train=Y[:n_train],
                       X_test=X[n_train:], Y_test=Y[n_train:],

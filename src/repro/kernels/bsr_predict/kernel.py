@@ -251,3 +251,148 @@ def bsr_predict_gather_int8_pallas(x: jax.Array, blocks: jax.Array,
         out_shape=jax.ShapeDtypeStruct((n, B * bl), jnp.float32),
         interpret=interpret,
     )(sel, row_ptr, block_cols, scales, x, blocks)
+
+
+def _bsr_gather_pq_kernel(sel_ref, rptr_ref, cols_ref, x_ref, blk_ref, o_ref):
+    """Ragged per-query gather, grid step (q, i, j): j-th packed block of
+    row block sel[q, i] — query q's OWN i-th selected block, scored against
+    query q's single row.
+
+    o[q-th row, i-th tile] += x[q, cols[ptr]] @ blocks[ptr]^T  for
+    ptr = row_ptr[sel[q, i]] + j, gated on j < blocks-in-row exactly like
+    the shared-selection kernel; the (1, bl) output tile is zero-initialized
+    at j == 0. Each query walks its own block list, so a query whose
+    selection hits sparse row blocks does strictly less accumulation work
+    than one that hit dense rows — the shared-B union's worst-case cost is
+    gone.
+    """
+    del cols_ref
+    q, i, j = pl.program_id(0), pl.program_id(1), pl.program_id(2)
+    r = sel_ref[q, i]
+
+    @pl.when(j == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    @pl.when(rptr_ref[r] + j < rptr_ref[r + 1])
+    def _acc():
+        o_ref[...] += jax.lax.dot_general(
+            x_ref[...].astype(jnp.float32), blk_ref[0].astype(jnp.float32),
+            (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32)
+
+
+def bsr_predict_gather_pq_pallas(x: jax.Array, blocks: jax.Array,
+                                 block_cols: jax.Array, row_ptr: jax.Array,
+                                 sel: jax.Array, max_blocks_per_row: int,
+                                 *, interpret: bool = True) -> jax.Array:
+    """Per-query gathered-block BSR predict: row q scores only ITS row
+    blocks `sel[q]`.
+
+    x (n, Dp), blocks (nb, bl, bd) row-major packed, row_ptr (R + 1,),
+    sel (n, B) int32 — row q's B selected row-block ids (sorted, no
+    duplicates) -> scores (n, B * bl), where row q's columns
+    [i*bl, (i+1)*bl) are the scores of row block sel[q, i]'s labels (a
+    per-row ragged layout; ops.py owns the per-row label translation).
+
+    The grid is (n, B, max_blocks_per_row) with j innermost, so each
+    (1, bl) output tile stays resident across its row block's packed
+    blocks. Both index maps clamp the packed pointer to nb - 1 so padding
+    steps fetch a valid tile; the body gates their accumulation off.
+
+    Numerics note: the per-query dot is (1, bd) @ (bd, bl) — NOT bitwise
+    identical to one row of the shared kernel's (n, bd) @ (bd, bl) dot on
+    every backend, which is why `ShortlistBackend` collapses B == R (where
+    every per-query list provably equals the full sorted block list) to
+    the shared kernel: the full-width bit-exactness contract rides on the
+    proven path, and this kernel serves only genuinely ragged B < R work.
+    At n == 1 the shapes coincide and the two kernels ARE bit-identical
+    (tested).
+    """
+    n = x.shape[0]
+    nb, bl, bd = blocks.shape
+    B = sel.shape[1]
+
+    def _ptr(q, i, j, sel_a, rptr_a, cols_a):
+        return jnp.minimum(rptr_a[sel_a[q, i]] + j, nb - 1)
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=3,
+        grid=(n, B, max_blocks_per_row),
+        in_specs=[
+            pl.BlockSpec((1, bd),
+                         lambda q, i, j, sel_a, rptr_a, cols_a:
+                         (q, cols_a[_ptr(q, i, j, sel_a, rptr_a, cols_a)])),
+            pl.BlockSpec((1, bl, bd),
+                         lambda q, i, j, sel_a, rptr_a, cols_a:
+                         (_ptr(q, i, j, sel_a, rptr_a, cols_a), 0, 0)),
+        ],
+        out_specs=pl.BlockSpec(
+            (1, bl), lambda q, i, j, sel_a, rptr_a, cols_a: (q, i)),
+    )
+    return pl.pallas_call(
+        _bsr_gather_pq_kernel, grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((n, B * bl), jnp.float32),
+        interpret=interpret,
+    )(sel, row_ptr, block_cols, x, blocks)
+
+
+def _bsr_gather_pq_int8_kernel(sel_ref, rptr_ref, cols_ref, scales_ref,
+                               x_ref, blk_ref, o_ref):
+    """Int8 variant of `_bsr_gather_pq_kernel`: identical clamp/gate
+    structure, with the in-bounds packed pointer indexing the per-block
+    scale and the scale applied to the fp32 partial product — the same
+    in-register dequantization as every other int8 kernel in this file."""
+    del cols_ref
+    q, i, j = pl.program_id(0), pl.program_id(1), pl.program_id(2)
+    r = sel_ref[q, i]
+
+    @pl.when(j == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    @pl.when(rptr_ref[r] + j < rptr_ref[r + 1])
+    def _acc():
+        ptr = rptr_ref[r] + j            # in-bounds inside the gate
+        o_ref[...] += scales_ref[ptr] * jax.lax.dot_general(
+            x_ref[...].astype(jnp.float32), blk_ref[0].astype(jnp.float32),
+            (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32)
+
+
+def bsr_predict_gather_pq_int8_pallas(x: jax.Array, blocks: jax.Array,
+                                      scales: jax.Array,
+                                      block_cols: jax.Array,
+                                      row_ptr: jax.Array, sel: jax.Array,
+                                      max_blocks_per_row: int,
+                                      *, interpret: bool = True) -> jax.Array:
+    """Per-query gathered-block int8 predict: same contract as
+    `bsr_predict_gather_pq_pallas` with (blocks int8, scales fp32)
+    replacing the fp32 blocks."""
+    n = x.shape[0]
+    nb, bl, bd = blocks.shape
+    B = sel.shape[1]
+
+    def _ptr(q, i, j, sel_a, rptr_a, cols_a, scales_a):
+        return jnp.minimum(rptr_a[sel_a[q, i]] + j, nb - 1)
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=4,
+        grid=(n, B, max_blocks_per_row),
+        in_specs=[
+            pl.BlockSpec((1, bd),
+                         lambda q, i, j, sel_a, rptr_a, cols_a, scales_a:
+                         (q, cols_a[_ptr(q, i, j, sel_a, rptr_a, cols_a,
+                                         scales_a)])),
+            pl.BlockSpec((1, bl, bd),
+                         lambda q, i, j, sel_a, rptr_a, cols_a, scales_a:
+                         (_ptr(q, i, j, sel_a, rptr_a, cols_a, scales_a),
+                          0, 0)),
+        ],
+        out_specs=pl.BlockSpec(
+            (1, bl),
+            lambda q, i, j, sel_a, rptr_a, cols_a, scales_a: (q, i)),
+    )
+    return pl.pallas_call(
+        _bsr_gather_pq_int8_kernel, grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((n, B * bl), jnp.float32),
+        interpret=interpret,
+    )(sel, row_ptr, block_cols, scales, x, blocks)

@@ -21,6 +21,8 @@ import numpy as np
 from repro.core.pruning import BlockSparseModel, Int8BlockSparseModel
 from repro.kernels.bsr_predict.kernel import (bsr_predict_gather_int8_pallas,
                                               bsr_predict_gather_pallas,
+                                              bsr_predict_gather_pq_int8_pallas,
+                                              bsr_predict_gather_pq_pallas,
                                               bsr_predict_int8_pallas,
                                               bsr_predict_pallas)
 from repro.kernels.topk.kernel import NEG_INF
@@ -222,6 +224,90 @@ def bsr_predict_gather_int8_topk(x: jax.Array, model: Int8BlockSparseModel,
     return vals, jnp.take(label_ids, idx)
 
 
+def bsr_predict_gather_pq(x: jax.Array, model: BlockSparseModel,
+                          sel: jax.Array, *,
+                          max_per_row: int | None = None,
+                          interpret: bool = True) -> jax.Array:
+    """Per-query gathered scores: row q scores ONLY its blocks `sel[q]`.
+
+    sel (n, B) int32 (each row sorted, no duplicates) -> (n, B * bl): row
+    q's columns [i*bl, (i+1)*bl) are row block sel[q, i]'s label scores —
+    a per-row ragged layout; the topk wrapper owns the per-row label
+    translation. Same pad/zero-init conventions as `bsr_predict_gather`.
+    """
+    x = _pad_features(x, model)
+    if max_per_row is None:
+        max_per_row = max_blocks_per_row(model)
+    return bsr_predict_gather_pq_pallas(
+        x, model.blocks, model.block_cols, model.row_ptr,
+        jnp.asarray(sel, jnp.int32), max_per_row, interpret=interpret)
+
+
+def bsr_predict_gather_pq_int8(x: jax.Array, model: Int8BlockSparseModel,
+                               sel: jax.Array, *,
+                               max_per_row: int | None = None,
+                               interpret: bool = True) -> jax.Array:
+    """Per-query gathered int8 scores — `bsr_predict_gather_pq` over the
+    quantized artifact."""
+    x = _pad_features(x, model)
+    if max_per_row is None:
+        max_per_row = max_blocks_per_row(model)
+    return bsr_predict_gather_pq_int8_pallas(
+        x, model.blocks, model.scales, model.block_cols, model.row_ptr,
+        jnp.asarray(sel, jnp.int32), max_per_row, interpret=interpret)
+
+
+def _pq_translate_topk(scores: jax.Array, sel: jax.Array, bl: int, k: int,
+                       n_labels: int | None, interpret: bool,
+                       ) -> tuple[jax.Array, jax.Array]:
+    """Shared tail of the per-query topk wrappers: mask block padding per
+    row and translate merged top-k back to true label ids via each row's
+    own candidate list."""
+    from repro.kernels.topk import ops as topk_ops   # deferred: no cycle
+
+    # (n, B*bl): row q's candidate column c is label sel[q, c//bl]*bl + c%bl.
+    label_ids = (sel[:, :, None] * bl
+                 + jnp.arange(bl)[None, None, :]).reshape(sel.shape[0], -1)
+    if n_labels is not None:
+        scores = jnp.where(label_ids < n_labels, scores, NEG_INF)
+    vals, idx = topk_ops.topk(scores, k, interpret=interpret)
+    return vals, jnp.take_along_axis(label_ids, idx, axis=1)
+
+
+def bsr_predict_gather_pq_topk(x: jax.Array, model: BlockSparseModel,
+                               sel: jax.Array, k: int, *,
+                               n_labels: int | None = None,
+                               max_per_row: int | None = None,
+                               interpret: bool = True,
+                               ) -> tuple[jax.Array, jax.Array]:
+    """Fused per-query gathered predict -> top-k over each row's own
+    shortlist. (vals, idx) each (n, k); idx in TRUE label ids (row q's
+    candidates translated through sel[q]). Padding labels are masked to
+    -inf between the kernels, same as every other topk wrapper here."""
+    bl = model.block_shape[0]
+    sel = jnp.asarray(sel, jnp.int32)
+    scores = bsr_predict_gather_pq(x, model, sel, max_per_row=max_per_row,
+                                   interpret=interpret)
+    return _pq_translate_topk(scores, sel, bl, k, n_labels, interpret)
+
+
+def bsr_predict_gather_pq_int8_topk(x: jax.Array,
+                                    model: Int8BlockSparseModel,
+                                    sel: jax.Array, k: int, *,
+                                    n_labels: int | None = None,
+                                    max_per_row: int | None = None,
+                                    interpret: bool = True,
+                                    ) -> tuple[jax.Array, jax.Array]:
+    """Fused per-query gathered int8 predict -> top-k: same contract as
+    `bsr_predict_gather_pq_topk` over the quantized artifact."""
+    bl = model.block_shape[0]
+    sel = jnp.asarray(sel, jnp.int32)
+    scores = bsr_predict_gather_pq_int8(x, model, sel,
+                                        max_per_row=max_per_row,
+                                        interpret=interpret)
+    return _pq_translate_topk(scores, sel, bl, k, n_labels, interpret)
+
+
 def gather_flops(model: BlockSparseModel, n: int, sel: np.ndarray) -> int:
     """FLOPs the gathered fine stage actually executes for one batch:
     2 * n * bl * bd per surviving block of the selected row blocks."""
@@ -230,6 +316,17 @@ def gather_flops(model: BlockSparseModel, n: int, sel: np.ndarray) -> int:
     sel = np.asarray(sel)
     n_sel_blocks = int((ptr[sel + 1] - ptr[sel]).sum())
     return 2 * n * bl * bd * n_sel_blocks
+
+
+def gather_pq_flops(model: BlockSparseModel, sel: np.ndarray) -> int:
+    """FLOPs of the per-query fine stage: 2 * bl * bd per surviving block
+    of each ROW's selected row blocks — each query pays only for its own
+    list (sel is (n, B)), which is the whole point of the ragged kernel."""
+    bl, bd = model.block_shape
+    ptr = np.asarray(model.row_ptr)
+    sel = np.asarray(sel)
+    n_sel_blocks = int((ptr[sel + 1] - ptr[sel]).sum())
+    return 2 * bl * bd * n_sel_blocks
 
 
 def model_flops(model: BlockSparseModel, n: int) -> int:

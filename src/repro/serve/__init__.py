@@ -12,8 +12,11 @@ async request-path server.
               routing (`ModelRouter`). Spec-driven entry:
               `CheckpointHandle.server()`.
   shortlist — the coarse candidate stage of two-stage scoring: row-block
-              centroids built from the packed BSR checkpoint, persisted by
-              checkpoint/io.py, consumed by the "shortlist" backend.
+              centroids, a learned one-vs-rest meta-classifier, or a
+              fastxml-style routing tree built over the packed BSR
+              checkpoint, persisted by checkpoint/io.py, consumed by the
+              "shortlist" backend; also the pack-time co-occurrence label
+              reordering (`cooccurrence_label_order`).
   batching  — request-side machinery everything above shares: ragged
               padding, size-bucketed micro-batch queue with arrival
               timestamps and deadline launch, latency accounting.
@@ -21,19 +24,23 @@ async request-path server.
 
 from repro.serve.engine import generate, serve_batch
 from repro.serve.server import ModelRouter, Rejected, XMCFuture, XMCServer
-from repro.serve.shortlist import ShortlistArtifact, build_shortlist
+from repro.serve.shortlist import (ShortlistArtifact, build_learned_shortlist,
+                                   build_shortlist, build_tree_shortlist,
+                                   coarse_scores, cooccurrence_label_order)
 from repro.serve.xmc import (BACKENDS, BsrBackend, DenseBackend,
-                             Int8Backend, PredictBackend, ShardedBackend,
-                             ShortlistBackend, XMCEngine, XMCResult,
-                             available_backends, make_backend,
+                             Int8Backend, PredictBackend, RelabelBackend,
+                             ShardedBackend, ShortlistBackend, XMCEngine,
+                             XMCResult, available_backends, make_backend,
                              register_backend, reset_warmup_cache,
                              unregister_backend, warmup_cache_stats)
 
 __all__ = ["generate", "serve_batch", "XMCEngine", "XMCResult",
            "XMCServer", "XMCFuture", "ModelRouter", "Rejected",
            "PredictBackend", "DenseBackend", "BsrBackend", "Int8Backend",
-           "ShardedBackend",
-           "ShortlistBackend", "ShortlistArtifact", "build_shortlist",
+           "ShardedBackend", "ShortlistBackend", "RelabelBackend",
+           "ShortlistArtifact", "build_shortlist",
+           "build_learned_shortlist", "build_tree_shortlist",
+           "coarse_scores", "cooccurrence_label_order",
            "make_backend", "BACKENDS", "register_backend",
            "unregister_backend", "available_backends",
            "reset_warmup_cache", "warmup_cache_stats"]

@@ -27,14 +27,20 @@ One engine, four built-in interchangeable backends behind the
   sharded   — label-sharded local-topk + all-gather merge
               (core.prediction.predict_topk_sharded) on a device mesh; only
               k*n_shards candidates ever cross the interconnect.
-  shortlist — two-stage sub-linear scoring: a coarse row-block centroid
-              matmul (serve/shortlist.py) picks the top-B BSR row blocks
-              per micro-batch, then the gathered-block Pallas kernel
+  shortlist — two-stage sub-linear scoring: a coarse stage
+              (serve/shortlist.py — block centroids, a learned one-vs-rest
+              meta-classifier, or a fastxml-style routing tree, whichever
+              the checkpoint's artifact holds) picks the top-B BSR row
+              blocks, then the gathered-block Pallas kernel
               (bsr_predict_gather_topk) scores only those blocks. Compute
               scales with B * block_size + R * D, not L * D. Falls back to
               exhaustive BSR when the checkpoint has no shortlist artifact.
               `ShortlistBackend(int8=True)` swaps the fine stage to the
               int8 gathered kernel — coarse gate AND quarter weight traffic.
+              `per_query=True` selects top-B blocks per QUERY and scores
+              each row's own list through the ragged-gather kernel
+              (bsr_predict_gather_pq_topk); B = n_row_blocks collapses back
+              to the shared exhaustive-equivalent path.
   int8      — the bsr path over the symmetric per-block int8 artifact
               (`core.pruning.Int8BlockSparseModel`): int8 tiles + fp32
               per-block scales dequantized in-register, ~0.25x the weight
@@ -70,6 +76,7 @@ from __future__ import annotations
 
 import dataclasses
 import functools
+import hashlib
 import inspect
 import time
 from typing import Iterable, Protocol, Sequence
@@ -146,6 +153,131 @@ def _shortlist_select(x: Array, centroids: Array, B: int) -> Array:
     coarse = xf @ centroids.T                      # (n, R)
     _, sel = jax.lax.top_k(coarse.max(axis=0), B)
     return jnp.sort(sel)
+
+
+@functools.partial(jax.jit, static_argnames=("B",))
+def _shortlist_select_pq(x: Array, centroids: Array, B: int) -> Array:
+    """Per-query coarse stage: top-B row blocks for EACH row of the
+    micro-batch, each row's list sorted ascending. The ragged-gather fine
+    stage scores row q against exactly its own list — easy queries stop
+    paying for the batch union's width. Only reached for B < n_row_blocks
+    (full width collapses to `_shortlist_select`, see ShortlistBackend)."""
+    Dp = centroids.shape[1]
+    xf = x.astype(jnp.float32)
+    if xf.shape[1] < Dp:
+        xf = jnp.pad(xf, ((0, 0), (0, Dp - xf.shape[1])))
+    coarse = xf @ centroids.T                      # (n, R)
+    _, sel = jax.lax.top_k(coarse, B)              # (n, B) per-row
+    return jnp.sort(sel, axis=1)
+
+
+@functools.partial(jax.jit, static_argnames=("depth",))
+def _tree_coarse(x: Array, nodes: Array, leaf_scores: Array,
+                 depth: int) -> Array:
+    """Tree-routing coarse scores: descend the complete binary tree of
+    hyperplanes (level-order `nodes`, one (Dp,) normal each) for `depth`
+    static steps, then read the reached leaf's per-row-block score row.
+    Returns (n, R) — fed to the same shared/per-query block selection as
+    the matrix coarse kinds."""
+    Dp = nodes.shape[1]
+    xf = x.astype(jnp.float32)
+    if xf.shape[1] < Dp:
+        xf = jnp.pad(xf, ((0, 0), (0, Dp - xf.shape[1])))
+    idx = jnp.zeros((xf.shape[0],), jnp.int32)
+    for _ in range(depth):                         # static, tiny depth
+        w = nodes[idx]                             # (n, Dp) routed normals
+        go_right = (jnp.sum(xf * w, axis=1) >= 0.0).astype(jnp.int32)
+        idx = 2 * idx + 1 + go_right
+    leaf = idx - (2 ** depth - 1)
+    return leaf_scores[leaf]                       # (n, R)
+
+
+@functools.partial(jax.jit, static_argnames=("B",))
+def _select_shared_from(coarse: Array, B: int) -> Array:
+    """Shared top-B selection from precomputed (n, R) coarse scores."""
+    _, sel = jax.lax.top_k(coarse.max(axis=0), B)
+    return jnp.sort(sel)
+
+
+@functools.partial(jax.jit, static_argnames=("B",))
+def _select_pq_from(coarse: Array, B: int) -> Array:
+    """Per-query top-B selection from precomputed (n, R) coarse scores."""
+    _, sel = jax.lax.top_k(coarse, B)
+    return jnp.sort(sel, axis=1)
+
+
+@functools.partial(jax.jit, static_argnames=(
+    "shape", "block_shape", "orig_shape", "k", "n_labels", "max_per_row",
+    "interpret"))
+def _gather_topk(x, sel, blocks, block_rows, block_cols, row_ptr, *, shape,
+                 block_shape, orig_shape, k, n_labels, max_per_row,
+                 interpret):
+    """Shared-selection fine stage with the (B,) selection as a runtime
+    argument (the tree coarse stage computes it outside this trace)."""
+    from repro.kernels.bsr_predict import ops as bsr_ops   # deferred: no cycle
+    model = BlockSparseModel(blocks=blocks, block_rows=block_rows,
+                             block_cols=block_cols, row_ptr=row_ptr,
+                             shape=shape, block_shape=block_shape,
+                             orig_shape=orig_shape)
+    return bsr_ops.bsr_predict_gather_topk(x, model, sel, k,
+                                           n_labels=n_labels,
+                                           max_per_row=max_per_row,
+                                           interpret=interpret)
+
+
+@functools.partial(jax.jit, static_argnames=(
+    "shape", "block_shape", "orig_shape", "k", "n_labels", "max_per_row",
+    "interpret"))
+def _gather_int8_topk(x, sel, blocks, scales, block_rows, block_cols,
+                      row_ptr, *, shape, block_shape, orig_shape, k,
+                      n_labels, max_per_row, interpret):
+    from repro.kernels.bsr_predict import ops as bsr_ops   # deferred: no cycle
+    model = Int8BlockSparseModel(blocks=blocks, scales=scales,
+                                 block_rows=block_rows, block_cols=block_cols,
+                                 row_ptr=row_ptr, shape=shape,
+                                 block_shape=block_shape,
+                                 orig_shape=orig_shape)
+    return bsr_ops.bsr_predict_gather_int8_topk(x, model, sel, k,
+                                                n_labels=n_labels,
+                                                max_per_row=max_per_row,
+                                                interpret=interpret)
+
+
+@functools.partial(jax.jit, static_argnames=(
+    "shape", "block_shape", "orig_shape", "k", "n_labels", "max_per_row",
+    "interpret"))
+def _gather_pq_topk(x, sel, blocks, block_rows, block_cols, row_ptr, *,
+                    shape, block_shape, orig_shape, k, n_labels,
+                    max_per_row, interpret):
+    """Per-query ragged fine stage: sel is (n, B), row q scores only its
+    own block list through the prefetch-steered ragged-gather kernel."""
+    from repro.kernels.bsr_predict import ops as bsr_ops   # deferred: no cycle
+    model = BlockSparseModel(blocks=blocks, block_rows=block_rows,
+                             block_cols=block_cols, row_ptr=row_ptr,
+                             shape=shape, block_shape=block_shape,
+                             orig_shape=orig_shape)
+    return bsr_ops.bsr_predict_gather_pq_topk(x, model, sel, k,
+                                              n_labels=n_labels,
+                                              max_per_row=max_per_row,
+                                              interpret=interpret)
+
+
+@functools.partial(jax.jit, static_argnames=(
+    "shape", "block_shape", "orig_shape", "k", "n_labels", "max_per_row",
+    "interpret"))
+def _gather_pq_int8_topk(x, sel, blocks, scales, block_rows, block_cols,
+                         row_ptr, *, shape, block_shape, orig_shape, k,
+                         n_labels, max_per_row, interpret):
+    from repro.kernels.bsr_predict import ops as bsr_ops   # deferred: no cycle
+    model = Int8BlockSparseModel(blocks=blocks, scales=scales,
+                                 block_rows=block_rows, block_cols=block_cols,
+                                 row_ptr=row_ptr, shape=shape,
+                                 block_shape=block_shape,
+                                 orig_shape=orig_shape)
+    return bsr_ops.bsr_predict_gather_pq_int8_topk(x, model, sel, k,
+                                                   n_labels=n_labels,
+                                                   max_per_row=max_per_row,
+                                                   interpret=interpret)
 
 
 @functools.partial(jax.jit, static_argnames=(
@@ -284,14 +416,28 @@ class Int8Backend:
 
 
 class ShortlistBackend:
-    """Two-stage sub-linear scoring: coarse centroid shortlist + gathered
-    fine stage over the packed BSR tiles of the selected row blocks only.
+    """Two-stage sub-linear scoring: coarse block shortlist + gathered fine
+    stage over the packed BSR tiles of the selected row blocks only.
+
+    The coarse stage is whatever the artifact holds (`artifact.kind`):
+    "centroid" and "learned" are both one (n, Dp) x (Dp, R) matmul (block
+    means vs a trained one-vs-rest meta-classifier — same serving math,
+    different matrix), "tree" routes each query down a fixed-depth
+    hyperplane tree to a leaf's per-block score row. Selection is shared
+    per micro-batch by default; `per_query=True` gives each row its own
+    top-B list, scored through the ragged-gather kernel.
 
     B (the shortlist width, in row blocks) is static per backend: one XLA
-    compile per bucket, candidate fraction B / R. One caveat inherited from
-    bucket padding: the coarse max runs over the padded micro-batch, and a
-    padding row's coarse score is exactly 0 — on models whose true coarse
-    scores are all negative, padding can steer (never widen) the selection.
+    compile per bucket, candidate fraction B / R. At B == R every
+    per-query sorted top-B list provably equals the one shared sorted full
+    list, so full width ALWAYS collapses to the shared kernel: the
+    exhaustive bit-exactness contract rides on the proven path, and the
+    ragged kernel serves only genuinely sub-linear B < R work. One caveat
+    inherited from bucket padding: the shared coarse max runs over the
+    padded micro-batch, and a padding row's coarse score is exactly 0 — on
+    models whose true coarse scores are all negative, padding can steer
+    (never widen) the selection. Per-query selection is immune: padding
+    rows select for themselves and their results are dropped at un-pad.
     """
 
     name = "shortlist"
@@ -299,7 +445,8 @@ class ShortlistBackend:
     def __init__(self, model: BlockSparseModel, artifact: ShortlistArtifact,
                  k: int, *, n_labels: int | None = None,
                  blocks: int | None = None, interpret: bool = True,
-                 int8: bool = False, int8_model=None):
+                 int8: bool = False, int8_model=None,
+                 per_query: bool = False):
         from repro.kernels.bsr_predict import ops as bsr_ops
         artifact.validate_against(model)
         self.k = k
@@ -307,18 +454,27 @@ class ShortlistBackend:
                             else model.n_labels)
         self.model = model
         self.artifact = artifact
+        self.kind = artifact.kind
         R = artifact.n_row_blocks
         self.B = min(int(blocks if blocks is not None
                          else artifact.default_blocks()), R)
         if self.B < 1:
             raise ValueError(f"shortlist width must be >= 1, got {self.B}")
+        # Full-width collapse (see class docstring): B == R means every
+        # query's sorted list is 0..R-1 — identical to the shared list.
+        self.per_query = bool(per_query) and self.B < R
         self._centroids = jnp.asarray(artifact.centroids)
+        self._tree = None
+        if self.kind == "tree":
+            self._tree = (jnp.asarray(artifact.tree_nodes),
+                          jnp.asarray(artifact.tree_leaf_scores),
+                          int(artifact.tree_depth))
         self._max_per_row = bsr_ops.max_blocks_per_row(model)
         self._interpret = bool(interpret)
-        # int8 composition: the coarse centroid stage is unchanged (fp32,
-        # R x Dp — tiny next to the fine stage), the gathered fine stage
-        # scores quantized tiles. Pass `int8_model` to reuse a persisted
-        # artifact; otherwise quantize here (bit-identical either way).
+        # int8 composition: the coarse stage is unchanged (fp32 — tiny next
+        # to the fine stage), the gathered fine stage scores quantized
+        # tiles. Pass `int8_model` to reuse a persisted artifact; otherwise
+        # quantize here (bit-identical either way).
         self.int8 = bool(int8)
         self.int8_model = None
         if self.int8:
@@ -327,42 +483,116 @@ class ShortlistBackend:
 
     @property
     def candidate_fraction(self) -> float:
-        """Fraction of row blocks the fine stage scores per micro-batch."""
+        """Fraction of row blocks the fine stage scores per query (shared
+        selection charges the whole micro-batch the same B)."""
         return self.B / self.artifact.n_row_blocks
 
     def warmup_key(self):
-        # `self.int8` is part of the key: the int8 and fp32 fine stages are
-        # different executables over the same geometry and must not alias
-        # each other's warm buckets.
+        # `self.int8`, `self.kind` and `self.per_query` are part of the
+        # key: int8 vs fp32 fine stages, tree vs matrix coarse stages, and
+        # ragged vs shared gathers are different executables over the same
+        # geometry and must not alias each other's warm buckets.
         m = self.model
-        return ("shortlist", self.int8, m.blocks.shape,
-                str(jnp.asarray(m.blocks).dtype), m.shape, m.block_shape,
-                m.orig_shape, self._centroids.shape, self.B,
+        return ("shortlist", self.kind, self.per_query, self.int8,
+                m.blocks.shape, str(jnp.asarray(m.blocks).dtype), m.shape,
+                m.block_shape, m.orig_shape, self._centroids.shape, self.B,
                 self._max_per_row, self.k, self.n_labels, self._interpret)
 
+    def _select(self, x: Array) -> Array:
+        """The selection the fine stage will score: (B,) shared, or (n, B)
+        per-query, row-sorted either way."""
+        if self.kind == "tree":
+            nodes, leaf_scores, depth = self._tree
+            coarse = _tree_coarse(x, nodes, leaf_scores, depth)
+            if self.per_query:
+                return _select_pq_from(coarse, self.B)
+            return _select_shared_from(coarse, self.B)
+        if self.per_query:
+            return _shortlist_select_pq(x, self._centroids, self.B)
+        return _shortlist_select(x, self._centroids, self.B)
+
     def select_blocks(self, x: Array) -> np.ndarray:
-        """Coarse-stage introspection: the (B,) sorted row-block ids the
-        fine stage would score for this batch (benchmarks measure recall
-        and candidate fraction through this)."""
-        return np.asarray(_shortlist_select(
-            jnp.asarray(x, jnp.float32), self._centroids, self.B))
+        """Coarse-stage introspection: the sorted row-block ids the fine
+        stage would score for this batch — (B,) shared or (n, B) per-query
+        (benchmarks measure recall and candidate fraction through this)."""
+        return np.asarray(self._select(jnp.asarray(x, jnp.float32)))
 
     def topk(self, x: Array) -> tuple[Array, Array]:
+        if self.kind != "tree" and not self.per_query:
+            # Matrix coarse + shared selection: the original fused paths,
+            # byte-for-byte untouched (the B == R bit-exactness contract
+            # and all pre-v2 serving behavior ride on these).
+            if self.int8:
+                q = self.int8_model
+                return _shortlist_int8_topk(
+                    x, self._centroids, q.blocks, q.scales, q.block_rows,
+                    q.block_cols, q.row_ptr, shape=q.shape,
+                    block_shape=q.block_shape, orig_shape=q.orig_shape,
+                    k=self.k, n_labels=self.n_labels, B=self.B,
+                    max_per_row=self._max_per_row, interpret=self._interpret)
+            m = self.model
+            return _shortlist_topk(
+                x, self._centroids, m.blocks, m.block_rows, m.block_cols,
+                m.row_ptr, shape=m.shape, block_shape=m.block_shape,
+                orig_shape=m.orig_shape, k=self.k, n_labels=self.n_labels,
+                B=self.B, max_per_row=self._max_per_row,
+                interpret=self._interpret)
+        sel = self._select(x)
         if self.int8:
             q = self.int8_model
-            return _shortlist_int8_topk(
-                x, self._centroids, q.blocks, q.scales, q.block_rows,
-                q.block_cols, q.row_ptr, shape=q.shape,
-                block_shape=q.block_shape, orig_shape=q.orig_shape,
-                k=self.k, n_labels=self.n_labels, B=self.B,
-                max_per_row=self._max_per_row, interpret=self._interpret)
+            fn = _gather_pq_int8_topk if self.per_query else _gather_int8_topk
+            return fn(x, sel, q.blocks, q.scales, q.block_rows, q.block_cols,
+                      q.row_ptr, shape=q.shape, block_shape=q.block_shape,
+                      orig_shape=q.orig_shape, k=self.k,
+                      n_labels=self.n_labels, max_per_row=self._max_per_row,
+                      interpret=self._interpret)
         m = self.model
-        return _shortlist_topk(
-            x, self._centroids, m.blocks, m.block_rows, m.block_cols,
-            m.row_ptr, shape=m.shape, block_shape=m.block_shape,
-            orig_shape=m.orig_shape, k=self.k, n_labels=self.n_labels,
-            B=self.B, max_per_row=self._max_per_row,
-            interpret=self._interpret)
+        fn = _gather_pq_topk if self.per_query else _gather_topk
+        return fn(x, sel, m.blocks, m.block_rows, m.block_cols, m.row_ptr,
+                  shape=m.shape, block_shape=m.block_shape,
+                  orig_shape=m.orig_shape, k=self.k, n_labels=self.n_labels,
+                  max_per_row=self._max_per_row, interpret=self._interpret)
+
+
+class RelabelBackend:
+    """Pack-time reorder unmapping: wraps any backend serving a checkpoint
+    packed under a `label_order` permutation and maps its packed top-k ids
+    back to original label ids (`order[packed_id]`), scores untouched.
+
+    Sits at the backend layer (not the engine) so both the synchronous
+    `step()` drain and the async server's direct `backend.topk` dispatch
+    unmap identically; everything else — kernels, selection, warm-up —
+    stays oblivious to the reorder. `__getattr__` delegates introspection
+    (`select_blocks`, `model`, `candidate_fraction`, ...) to the inner
+    backend."""
+
+    def __init__(self, inner: PredictBackend, label_order):
+        order = np.asarray(label_order, np.int64).reshape(-1)
+        n = int(getattr(inner, "n_labels", order.shape[0]))
+        if (order.shape[0] != n
+                or not np.array_equal(np.sort(order), np.arange(n))):
+            raise ValueError(
+                f"label_order must be a permutation of range({n})")
+        self.inner = inner
+        self.name = inner.name
+        self.k = inner.k
+        self.n_labels = n
+        self._order = jnp.asarray(order, jnp.int32)
+        self._digest = hashlib.sha1(order.tobytes()).hexdigest()[:16]
+
+    def warmup_key(self):
+        key = getattr(self.inner, "warmup_key", lambda: None)()
+        # The gather is one extra executable per shape; two engines over
+        # the same inner geometry but different permutations must not mark
+        # each other warm, hence the order digest.
+        return None if key is None else ("relabel", self._digest, key)
+
+    def topk(self, x: Array) -> tuple[Array, Array]:
+        scores, labels = self.inner.topk(x)
+        return scores, jnp.take(self._order, labels, axis=0)
+
+    def __getattr__(self, name):
+        return getattr(self.inner, name)
 
 
 class ShardedBackend:
@@ -474,7 +704,8 @@ def _make_int8_backend(bsr: BlockSparseModel, k: int, *, n_labels: int,
 def _make_shortlist_backend(bsr: BlockSparseModel, k: int, *, n_labels: int,
                             mesh, label_axis: str, interpret: bool,
                             shortlist=None, shortlist_blocks=None,
-                            int8=False, int8_model=None):
+                            int8=False, int8_model=None,
+                            shortlist_per_query=False):
     if shortlist is None:
         # Legacy checkpoint (or in-memory model) without the artifact:
         # exhaustive BSR scoring, same results, no sub-linear gate.
@@ -484,7 +715,8 @@ def _make_shortlist_backend(bsr: BlockSparseModel, k: int, *, n_labels: int,
         return BsrBackend(bsr, k, n_labels=n_labels, interpret=interpret)
     return ShortlistBackend(bsr, shortlist, k, n_labels=n_labels,
                             blocks=shortlist_blocks, interpret=interpret,
-                            int8=int8, int8_model=int8_model)
+                            int8=int8, int8_model=int8_model,
+                            per_query=shortlist_per_query)
 
 
 def make_backend(kind: str, bsr: BlockSparseModel, k: int, *,
@@ -494,6 +726,8 @@ def make_backend(kind: str, bsr: BlockSparseModel, k: int, *,
                  shortlist_blocks: int | None = None,
                  int8: bool = False,
                  int8_model: Int8BlockSparseModel | None = None,
+                 shortlist_per_query: bool = False,
+                 label_order=None,
                  ) -> PredictBackend:
     """Build any registered backend from the one canonical model artifact
     (packed BSR) — a thin lookup over the registry.
@@ -505,6 +739,10 @@ def make_backend(kind: str, bsr: BlockSparseModel, k: int, *,
     kind="int8" (or shortlist with int8=True) serves the quantized artifact
     — pass `int8_model` to reuse a checkpoint's persisted int8 arrays,
     else the fp32 blocks are quantized on the spot (identical bytes).
+    `shortlist_per_query` flips the shortlist backend to per-query ragged
+    selection. `label_order` (the pack-time reorder permutation recorded in
+    the checkpoint manifest) wraps ANY backend in `RelabelBackend` so
+    returned ids are original label ids.
 
     Factories registered before the shortlist kwargs existed keep working:
     keyword args are filtered down to what each factory's signature accepts
@@ -519,7 +757,8 @@ def make_backend(kind: str, bsr: BlockSparseModel, k: int, *,
     kwargs = dict(n_labels=n_labels, mesh=mesh, label_axis=label_axis,
                   interpret=interpret, shortlist=shortlist,
                   shortlist_blocks=shortlist_blocks, int8=int8,
-                  int8_model=int8_model)
+                  int8_model=int8_model,
+                  shortlist_per_query=shortlist_per_query)
     try:
         params = inspect.signature(factory).parameters
         if not any(p.kind is p.VAR_KEYWORD for p in params.values()):
@@ -527,7 +766,10 @@ def make_backend(kind: str, bsr: BlockSparseModel, k: int, *,
     except (TypeError, ValueError):      # uninspectable callable: old contract
         kwargs = dict(n_labels=n_labels, mesh=mesh, label_axis=label_axis,
                       interpret=interpret)
-    return factory(bsr, k, **kwargs)
+    be = factory(bsr, k, **kwargs)
+    if label_order is not None:
+        be = RelabelBackend(be, label_order)
+    return be
 
 
 # ---------------------------------------------------------------------------
@@ -611,7 +853,8 @@ class XMCEngine:
                         buckets: Sequence[int] = DEFAULT_BUCKETS,
                         warmup: bool = True,
                         shortlist_blocks: int | None = None,
-                        int8: bool = False) -> "XMCEngine":
+                        int8: bool = False,
+                        shortlist_per_query: bool = False) -> "XMCEngine":
         """Serve the sparse artifact written by `BlockSparseModel.save`.
 
         Also picks up the shortlist artifact saved next to the BSR arrays
@@ -619,10 +862,13 @@ class XMCEngine:
         silently degrades to exhaustive BSR scoring. backend="int8" (or
         `int8=True` composing with shortlist) serves the checkpoint's
         persisted int8 arrays, quantizing lazily when the checkpoint
-        predates them.
+        predates them. A checkpoint packed under a `label_order`
+        permutation (ScheduleSpec.reorder_labels) is unmapped here: EVERY
+        backend's returned ids are original label ids, exactly.
         """
         from repro.checkpoint.io import (load_block_sparse_int8,   # deferred:
-                                         load_shortlist)           # no cycle
+                                         load_block_sparse_meta,   # no cycle
+                                         load_shortlist)
         bsr, meta = BlockSparseModel.load(directory)
         n_labels = int(meta.get("n_labels", bsr.n_labels))
         int8_model = None
@@ -632,7 +878,10 @@ class XMCEngine:
                           interpret=interpret,
                           shortlist=load_shortlist(directory),
                           shortlist_blocks=shortlist_blocks,
-                          int8=int8, int8_model=int8_model)
+                          int8=int8, int8_model=int8_model,
+                          shortlist_per_query=shortlist_per_query,
+                          label_order=load_block_sparse_meta(
+                              directory).get("label_order"))
         return cls(be, buckets, warmup=warmup,
                    n_features=int(meta.get("n_features", bsr.n_features)))
 
@@ -643,14 +892,16 @@ class XMCEngine:
                     buckets: Sequence[int] = DEFAULT_BUCKETS,
                     warmup: bool = False,
                     shortlist_blocks: int | None = None,
-                    int8: bool = False) -> "XMCEngine":
+                    int8: bool = False,
+                    shortlist_per_query: bool = False) -> "XMCEngine":
         """Convenience: engine straight from an in-memory DiSMECModel (the
         shortlist artifact is built on the fly — no checkpoint needed)."""
         bsr = to_block_sparse(model.W, block_shape)
         be = make_backend(backend, bsr, k, n_labels=model.W.shape[0],
                           mesh=mesh, interpret=interpret,
                           shortlist=build_shortlist(bsr),
-                          shortlist_blocks=shortlist_blocks, int8=int8)
+                          shortlist_blocks=shortlist_blocks, int8=int8,
+                          shortlist_per_query=shortlist_per_query)
         return cls(be, buckets, warmup=warmup,
                    n_features=int(model.W.shape[1]))
 

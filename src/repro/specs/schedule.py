@@ -42,6 +42,17 @@ class ScheduleSpec(Spec):
     lease_ttl    : seconds before an unrefreshed batch lease expires and
                    the batch is re-dealt (crash recovery latency; solves
                    are heartbeat-refreshed well inside it).
+    reorder_labels : pack the label space under a deterministic
+                   co-occurrence clustering permutation
+                   (`serve.shortlist.cooccurrence_label_order`): fit()
+                   trains over `Y[:, order]`, the permutation is recorded
+                   in the manifest as `label_order`, and the serving
+                   engine maps top-k ids back exactly. Makes real label
+                   spaces block-local (co-occurring labels share BSR row
+                   blocks) so a small shortlist width covers correlated
+                   top-k sets. Changes the packed checkpoint, so it is
+                   part of the resume fingerprint (dropped when False to
+                   keep pre-knob checkpoints resumable).
     """
     # The paper's per-node batch is ~1000; the default is rounded to the
     # BSR block grid so the no-argument spec is already normalized (a
@@ -57,6 +68,7 @@ class ScheduleSpec(Spec):
     max_inflight: int = 2
     workers: int = 1
     lease_ttl: float = 300.0
+    reorder_labels: bool = False
 
     def validate(self) -> "ScheduleSpec":
         if self.label_batch < 1:
@@ -143,4 +155,10 @@ class ScheduleSpec(Spec):
         d = self.to_dict()
         for k in self.RUNTIME_FIELDS:
             d.pop(k)
+        # reorder_labels changes the packed checkpoint, so True must be in
+        # the fingerprint — but the default False is dropped so fingerprints
+        # stored before the knob existed still match (pre-knob checkpoints
+        # stay resumable).
+        if not d.get("reorder_labels"):
+            d.pop("reorder_labels", None)
         return d

@@ -55,6 +55,21 @@ class ServeSpec(Spec):
                 while this many are already queued get an immediate
                 `Rejected` result instead of growing the queue without
                 bound. None = unbounded. Ignored by `engine()`.
+    shortlist_kind : which coarse-stage artifact `fit()` leaves on the
+                checkpoint for two-stage serving: "centroid" (block means,
+                free, the default and the pre-v2 behavior), "learned" (a
+                one-vs-rest meta-classifier over row blocks trained at
+                finalize from the run's own data), or "tree" (a
+                fastxml-style routing tree). Serving reads whatever
+                artifact is on disk; this knob decides what gets built.
+                Old manifests deserialize to "centroid" — unchanged.
+    shortlist_per_query : select top-B row blocks per QUERY instead of one
+                shared selection per micro-batch (the ragged-gather fine
+                stage: easy queries stop paying for the batch union's
+                width). B = n_row_blocks collapses to the shared
+                exhaustive-equivalent path. Ignored by other backends.
+                Old manifests deserialize to False — shared selection,
+                unchanged.
     """
     backend: str = "bsr"
     k: int = 5
@@ -65,6 +80,8 @@ class ServeSpec(Spec):
     int8: bool = False
     max_batch_delay_ms: float = 2.0
     max_queue: Optional[int] = None
+    shortlist_kind: str = "centroid"
+    shortlist_per_query: bool = False
 
     def validate(self) -> "ServeSpec":
         if self.k < 1:
@@ -84,6 +101,10 @@ class ServeSpec(Spec):
         if self.max_queue is not None and self.max_queue < 1:
             raise ValueError(f"max_queue must be >= 1 (or None for "
                              f"unbounded), got {self.max_queue}")
+        if self.shortlist_kind not in ("centroid", "learned", "tree"):
+            raise ValueError(
+                f"shortlist_kind must be 'centroid', 'learned' or 'tree', "
+                f"got {self.shortlist_kind!r}")
         return self
 
     def resolved_interpret(self) -> bool:

@@ -197,7 +197,7 @@ class XMCTrainJob:
             max_batches: Optional[int] = None, meta: Optional[dict] = None,
             on_batch: Optional[Callable[[int, int], None]] = None,
             init_from: Optional[str] = None, worker: Optional[str] = None,
-            ) -> XMCTrainResult:
+            label_order=None) -> XMCTrainResult:
         """Train X (N, D), Y (N, L) into `out_dir` (streamed multi-shard
         checkpoint) and/or an in-memory model.
 
@@ -238,8 +238,19 @@ class XMCTrainJob:
                        (still heartbeating, never committing) blocks
                        completion until an operator kills it and its lease
                        expires.
+        label_order  : pack-time label permutation (len L): the run trains
+                       and streams `Y[:, label_order]`, so packed row j of
+                       the checkpoint holds original label label_order[j].
+                       Recorded in the manifest (identity-checked on
+                       resume, both directions) and unmapped exactly by
+                       the serving engine. `fit()` computes it from
+                       `ScheduleSpec.reorder_labels` via
+                       `serve.shortlist.cooccurrence_label_order`.
         """
         Yn = np.asarray(Y)
+        if label_order is not None:
+            label_order = np.asarray(label_order, np.int64).reshape(-1)
+            Yn = Yn[:, label_order]       # train/pack in permuted order
         N, L = Yn.shape
         D = int(X.shape[1])
         batches = self.label_batches(L)
@@ -299,7 +310,7 @@ class XMCTrainJob:
                 out_dir, n_labels=L, n_features=D,
                 block_shape=self.block_shape, label_batch=lb,
                 n_batches=len(batches), resume=resume, solver=solver_id,
-                meta=meta_full)
+                meta=meta_full, label_order=label_order)
             done = writer.done_batches
 
         X_dev = jnp.asarray(X, jnp.float32)

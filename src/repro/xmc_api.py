@@ -50,6 +50,7 @@ import dataclasses
 from typing import Callable, Optional
 
 import jax
+import numpy as np
 
 from repro.specs import ScheduleSpec, ServeSpec, SolverSpec
 from repro.specs.base import Spec
@@ -162,14 +163,56 @@ def fit(X: Array, Y: Array, spec: XMCSpec, out_dir: str, *,
                 their leases expire — dead workers recover automatically),
                 so on a normal return `result.complete` is True; it is
                 False only when `max_batches` stopped this worker early.
+
+    Two spec knobs act at fit time beyond the solve itself:
+    `schedule.reorder_labels` packs the label space under the deterministic
+    co-occurrence permutation (trained as `Y[:, order]`, recorded in the
+    manifest, unmapped exactly at serve time), and
+    `serve.shortlist_kind != "centroid"` replaces the finalize-time
+    centroid shortlist with a learned one-vs-rest meta-classifier or a
+    routing tree built from the run's own training data (the only moment
+    it is in scope). Both builders are deterministic, so cooperative
+    workers racing the upgrade write identical bytes.
     """
     spec = spec.normalized()
     job = job_from_spec(spec)
+    label_order = None
+    if spec.schedule.reorder_labels:
+        from repro.serve.shortlist import cooccurrence_label_order
+        label_order = cooccurrence_label_order(
+            np.asarray(Y), block_rows=int(spec.schedule.block_shape[0]))
     res = job.run(X, Y, out_dir, resume=resume, init_from=init_from,
                   max_batches=max_batches, on_batch=on_batch, worker=worker,
+                  label_order=label_order,
                   meta={**(meta or {}),
                         "xmc_spec": spec.canonical().to_dict()})
+    if res.complete and spec.serve.shortlist_kind != "centroid":
+        _upgrade_coarse_stage(out_dir, spec, X, Y, label_order)
     return CheckpointHandle(directory=out_dir, spec=spec, result=res)
+
+
+def _upgrade_coarse_stage(out_dir: str, spec: XMCSpec, X, Y,
+                          label_order) -> None:
+    """Swap the finalize-time centroid shortlist for the coarse artifact
+    `spec.serve.shortlist_kind` names, trained from the run's own data.
+
+    Runs after `try_finalize` because the training data is only in scope
+    here — the writer's finalize path (which any co-worker may win) knows
+    nothing about X/Y and always leaves the free centroid artifact; this
+    upgrade then replaces it under the manifest lock. Y is permuted into
+    packed label order first, so block membership matches the rows the
+    checkpoint actually holds."""
+    from repro.checkpoint.io import load_block_sparse, upgrade_shortlist
+    from repro.serve.shortlist import (build_learned_shortlist,
+                                       build_tree_shortlist)
+    model, _ = load_block_sparse(out_dir)
+    Yn = np.asarray(Y)
+    if label_order is not None:
+        Yn = Yn[:, np.asarray(label_order)]
+    build = (build_learned_shortlist
+             if spec.serve.shortlist_kind == "learned"
+             else build_tree_shortlist)
+    upgrade_shortlist(out_dir, build(model, np.asarray(X), Yn))
 
 
 def _spec_from_index(index: dict) -> XMCSpec:
@@ -280,7 +323,8 @@ class CheckpointHandle:
             self.directory, backend=serve.backend, k=serve.k,
             mesh=mesh, interpret=serve.resolved_interpret(),
             buckets=tuple(serve.buckets), warmup=serve.warmup,
-            shortlist_blocks=serve.shortlist_blocks, int8=serve.int8)
+            shortlist_blocks=serve.shortlist_blocks, int8=serve.int8,
+            shortlist_per_query=serve.shortlist_per_query)
 
     def server(self, serve_override: Optional[ServeSpec] = None, *,
                mesh=None, name: Optional[str] = None, start: bool = True):

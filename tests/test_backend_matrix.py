@@ -1,0 +1,117 @@
+"""Backend-equivalence matrix: every registered predict backend x
+{fp32, int8} x {legacy, shortlist-v1, shortlist-v2} checkpoint state must
+return the SAME full-width top-k label ids as the dense reference.
+
+This is the serving stack's one cross-cutting contract stated as a single
+parametrized test instead of per-backend suites: whatever coarse artifact
+generation is on disk (none at all, the pre-v2 centroid npz, or the v2
+learned artifact) and whatever weight dtype serves the fine stage, a
+full-width (B = n_row_blocks) configuration is exhaustive scoring and must
+agree with dense top-k exactly, label ids included. The reference flips
+with the dtype that actually serves: an int8 fine stage is compared
+against dense scoring over the DEQUANTIZED model (quantization moves the
+weights; it must not move the ranking relative to those moved weights).
+
+The per-query knob rides the same matrix: at full width it must collapse
+to the shared path and stay bit-identical (the ragged kernel never touches
+a B = R request).
+"""
+
+import os
+
+import numpy as np
+import pytest
+
+import jax.numpy as jnp
+
+from repro.checkpoint.io import (SHORTLIST_FILE, load_block_sparse,
+                                 load_shortlist, upgrade_shortlist)
+from repro.core.pruning import (BlockSparseModel, dequantize_blocks, prune,
+                                quantize_block_sparse, to_block_sparse)
+from repro.serve import XMCEngine, available_backends
+from repro.serve.shortlist import build_learned_shortlist
+from repro.serve.xmc import DenseBackend
+
+L, D, K = 140, 300, 5
+BLOCK = (16, 128)
+STATES = ("legacy", "v1", "v2")
+
+
+@pytest.fixture(scope="module")
+def ckpts(tmp_path_factory):
+    """One pruned model saved in all three shortlist-artifact generations:
+    legacy (no artifact file), v1 (the pre-versioned centroid npz, written
+    by hand with exactly the old keys), v2 (the learned artifact installed
+    by `upgrade_shortlist`)."""
+    rng = np.random.default_rng(21)
+    W = rng.normal(size=(L, D)).astype(np.float32) * 0.1
+    W = np.array(prune(jnp.asarray(W), 0.05))
+    bsr = to_block_sparse(jnp.asarray(W), BLOCK)
+    x = rng.normal(size=(6, D)).astype(np.float32)
+    dirs = {}
+    for state in STATES:
+        d = str(tmp_path_factory.mktemp(state))
+        bsr.save(d, meta={"n_labels": L, "n_features": D})
+        path = os.path.join(d, SHORTLIST_FILE)
+        if state == "legacy":
+            os.remove(path)                      # checkpoint predates PR 6
+        elif state == "v1":
+            art = load_shortlist(d)              # centroid payload...
+            np.savez(path,                       # ...re-written as v1 keys
+                     centroids=np.asarray(art.centroids, np.float32),
+                     block_rows=np.int64(art.block_rows),
+                     n_labels=np.int64(art.n_labels),
+                     stat=np.asarray(art.stat))
+            assert load_shortlist(d).kind == "centroid"   # v1 read path
+        else:
+            model, _ = load_block_sparse(d)
+            Y = (x @ W.T > 0).astype(np.int8)    # any labels; builder only
+            upgrade_shortlist(d, build_learned_shortlist(model, x, Y,
+                                                         max_newton=3))
+            assert load_shortlist(d).kind == "learned"
+        dirs[state] = d
+    return dirs, W, x
+
+
+def _dequant_dense(W):
+    """Dense weights after a quantize->dequantize round trip — the scoring
+    matrix an int8 fine stage actually serves (deterministic in W)."""
+    q = quantize_block_sparse(to_block_sparse(jnp.asarray(W), BLOCK))
+    deq = BlockSparseModel(
+        blocks=jnp.asarray(dequantize_blocks(np.asarray(q.blocks),
+                                             np.asarray(q.scales))),
+        block_rows=q.block_rows, block_cols=q.block_cols, row_ptr=q.row_ptr,
+        shape=q.shape, block_shape=q.block_shape, orig_shape=q.orig_shape)
+    return np.asarray(deq.to_dense())[:L, :D]
+
+
+@pytest.mark.parametrize("state", STATES)
+@pytest.mark.parametrize("dtype", ["fp32", "int8"])
+@pytest.mark.parametrize("kind", sorted(available_backends()))
+def test_full_width_topk_identity(ckpts, kind, dtype, state):
+    dirs, W, x = ckpts
+    R = -(-L // BLOCK[0])
+    int8 = dtype == "int8"
+    eng = XMCEngine.from_checkpoint(dirs[state], backend=kind, k=K,
+                                    warmup=False, buckets=(8,),
+                                    shortlist_blocks=R, int8=int8)
+    got = eng.serve([x])[0]
+    # dense/sharded have no int8 path: requesting int8 leaves them fp32
+    # (make_backend filters the kwarg), so they compare against fp32 dense.
+    int8_served = kind == "int8" or (int8 and kind in ("bsr", "shortlist"))
+    Wref = _dequant_dense(W) if int8_served else W
+    ref = DenseBackend(jnp.asarray(Wref), K, n_labels=L)
+    _, want = ref.topk(jnp.asarray(x))           # dense rows are independent
+    np.testing.assert_array_equal(got.labels, np.asarray(want))
+
+    if kind == "shortlist":
+        # Full-width per-query must collapse to the shared path: same
+        # executable, bit-identical output, ragged kernel never engaged.
+        eng_pq = XMCEngine.from_checkpoint(
+            dirs[state], backend=kind, k=K, warmup=False, buckets=(8,),
+            shortlist_blocks=R, int8=int8, shortlist_per_query=True)
+        if state != "legacy":                    # legacy falls back to bsr
+            assert eng_pq.backend.per_query is False
+        res = eng_pq.serve([x])[0]
+        np.testing.assert_array_equal(res.labels, got.labels)
+        np.testing.assert_array_equal(res.scores, got.scores)

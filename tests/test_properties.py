@@ -1,0 +1,173 @@
+"""Property-based invariants for the pack/quantize/serve pipeline.
+
+Runs under real hypothesis when installed; otherwise tests/_hyp_compat.py
+replays each property on a handful of fixed-seed examples, so the suite is
+deterministic in the offline CI image either way.
+
+Three families:
+
+  * symmetric int8 quantization: per-element error is bounded by half the
+    per-block scale, and all-zero (fully-pruned sentinel) blocks round-trip
+    exactly — the bound the int8 serving kernels' accuracy story rests on;
+  * BSR packing algebra: packing row-block-aligned slices independently and
+    stitching them with `concat_block_sparse` is FIELD-exact (same packed
+    blocks, coordinates, and row_ptr) as packing the whole matrix at once —
+    the invariant that lets the streaming trainer emit per-batch slices;
+  * pack-time label reorder: permute labels -> pack -> serve -> unmap via
+    `RelabelBackend` returns exactly the ids and scores of serving the
+    un-permuted model, for any permutation.
+"""
+
+import numpy as np
+
+import jax.numpy as jnp
+
+from repro.core.pruning import (INT8_QMAX, concat_block_sparse,
+                                dequantize_blocks, prune, quantize_blocks,
+                                to_block_sparse)
+from repro.serve.xmc import DenseBackend, make_backend
+
+from _hyp_compat import given, settings, st
+
+SEEDS = st.integers(min_value=0, max_value=2 ** 31 - 1)
+
+
+# ---------------------------------------------------------------------------
+# int8 quantization
+# ---------------------------------------------------------------------------
+
+@settings(deadline=None, max_examples=25)
+@given(seed=SEEDS,
+       nb=st.integers(min_value=1, max_value=6),
+       bl=st.sampled_from([1, 3, 8, 16]),
+       bd=st.sampled_from([1, 4, 32]),
+       scale=st.floats(min_value=1e-3, max_value=1e3))
+def test_quantize_error_within_half_scale(seed, nb, bl, bd, scale):
+    """|dequant - x| <= scales[k] / 2 element-wise, every block."""
+    rng = np.random.default_rng(seed)
+    b = (rng.standard_normal((nb, bl, bd)) * scale).astype(np.float32)
+    q, scales = quantize_blocks(b)
+    assert q.dtype == np.int8 and np.abs(q).max(initial=0) <= INT8_QMAX
+    err = np.abs(dequantize_blocks(q, scales) - b)
+    # exact bound is scales/2 (round-to-nearest); tiny fp32 slack on top
+    bound = scales[:, None, None] * (0.5 + 1e-5)
+    assert np.all(err <= bound)
+
+
+@settings(deadline=None, max_examples=25)
+@given(seed=SEEDS, nb=st.integers(min_value=2, max_value=6))
+def test_quantize_zero_blocks_exact(seed, nb):
+    """Fully-pruned (all-zero) blocks get scale 0 and reconstruct EXACTLY —
+    quantization may never resurrect a pruned block."""
+    rng = np.random.default_rng(seed)
+    b = rng.standard_normal((nb, 4, 8)).astype(np.float32)
+    zeros = rng.choice(nb, size=nb // 2, replace=False)
+    b[zeros] = 0.0
+    q, scales = quantize_blocks(b)
+    assert np.all(scales[zeros] == 0.0)
+    assert np.all(q[zeros] == 0)
+    assert np.all(dequantize_blocks(q, scales)[zeros] == 0.0)
+    # and quantization is deterministic (lazy re-quantization at load must
+    # reproduce the persisted artifact bit-for-bit)
+    q2, scales2 = quantize_blocks(b)
+    np.testing.assert_array_equal(q, q2)
+    np.testing.assert_array_equal(scales, scales2)
+
+
+# ---------------------------------------------------------------------------
+# BSR packing algebra
+# ---------------------------------------------------------------------------
+
+def _random_pruned(rng, L, D, delta=0.06):
+    W = (rng.standard_normal((L, D)) * 0.1).astype(np.float32)
+    return np.asarray(prune(jnp.asarray(W), delta))
+
+
+@settings(deadline=None, max_examples=15)
+@given(seed=SEEDS,
+       bl=st.sampled_from([4, 8, 16]),
+       n_splits=st.integers(min_value=1, max_value=5))
+def test_split_pack_concat_field_exact(seed, bl, n_splits):
+    """Packing random row-block-aligned slices + concat == packing whole."""
+    rng = np.random.default_rng(seed)
+    L, D = int(rng.integers(3 * bl, 8 * bl)), 96   # ragged final row block
+    block = (bl, 32)
+    W = _random_pruned(rng, L, D)
+    whole = to_block_sparse(jnp.asarray(W), block)
+
+    nbl = -(-L // bl)
+    cuts = np.unique(rng.integers(1, nbl, size=n_splits)) * bl
+    bounds = [0, *cuts.tolist(), L]
+    parts = [
+        to_block_sparse(jnp.asarray(W[a:b]), block,
+                        row_block_offset=a // bl, sentinel_if_empty=False)
+        for a, b in zip(bounds[:-1], bounds[1:])
+    ]
+    merged = concat_block_sparse(parts, orig_shape=(L, D))
+
+    assert merged.shape == whole.shape
+    assert merged.orig_shape == whole.orig_shape
+    assert merged.block_shape == whole.block_shape
+    np.testing.assert_array_equal(np.asarray(merged.row_ptr),
+                                  np.asarray(whole.row_ptr))
+    np.testing.assert_array_equal(np.asarray(merged.block_rows),
+                                  np.asarray(whole.block_rows))
+    np.testing.assert_array_equal(np.asarray(merged.block_cols),
+                                  np.asarray(whole.block_cols))
+    np.testing.assert_array_equal(np.asarray(merged.blocks),
+                                  np.asarray(whole.blocks))
+
+
+# ---------------------------------------------------------------------------
+# pack-time label reorder round trip
+# ---------------------------------------------------------------------------
+
+@settings(deadline=None, max_examples=10)
+@given(seed=SEEDS, kind=st.sampled_from(["dense", "bsr"]))
+def test_permute_pack_serve_unmap_is_identity(seed, kind):
+    """For ANY label permutation: pack the rows in permuted order, serve,
+    unmap through `RelabelBackend` -> exactly the ids of serving the
+    original order (scores to fp32 tolerance: block accumulation order
+    differs from the dense reference). Continuous random weights make
+    score ties a measure-zero event, so top-k id sequences must match
+    exactly."""
+    rng = np.random.default_rng(seed)
+    L, D, k = 60, 64, 4
+    W = _random_pruned(rng, L, D)
+    x = rng.standard_normal((3, D)).astype(np.float32)
+    order = rng.permutation(L).astype(np.int64)   # packed row i = label order[i]
+
+    packed = to_block_sparse(jnp.asarray(W[order]), (8, 32))
+    be = make_backend(kind, packed, k, n_labels=L, label_order=order)
+    scores, labels = be.topk(jnp.asarray(x))
+
+    ref_s, ref_l = DenseBackend(jnp.asarray(W), k, n_labels=L).topk(
+        jnp.asarray(x))
+    np.testing.assert_array_equal(np.asarray(labels), np.asarray(ref_l))
+    np.testing.assert_allclose(np.asarray(scores), np.asarray(ref_s),
+                               rtol=1e-5, atol=1e-6)
+
+
+@settings(deadline=None, max_examples=10)
+@given(seed=SEEDS, bl=st.sampled_from([4, 8]))
+def test_cooccurrence_order_recovers_planted_blocks(seed, bl):
+    """`cooccurrence_label_order` on data with planted label groups (each
+    group's labels always co-occur, never across groups) is a permutation
+    that reunites every group into one row block — for any scramble."""
+    from repro.serve.shortlist import cooccurrence_label_order
+    rng = np.random.default_rng(seed)
+    n_groups, docs_per = 6, 4
+    L = n_groups * bl
+    scram = rng.permutation(L)
+    Y = np.zeros((n_groups * docs_per, L), np.int8)
+    for g in range(n_groups):
+        members = scram[g * bl:(g + 1) * bl]          # scattered label ids
+        Y[g * docs_per:(g + 1) * docs_per][:, members] = 1
+    order = cooccurrence_label_order(Y, block_rows=bl)
+    assert sorted(order.tolist()) == list(range(L))   # a true permutation
+    group_of = np.empty(L, np.int64)
+    for g in range(n_groups):
+        group_of[scram[g * bl:(g + 1) * bl]] = g
+    packed_groups = group_of[order].reshape(n_groups, bl)
+    for row in packed_groups:                         # block-pure packing
+        assert len(set(row.tolist())) == 1

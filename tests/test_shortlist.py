@@ -298,3 +298,227 @@ def test_warmup_shared_across_bsr_and_shortlist_instances():
             assert warmup_cache_stats()["shared_hits"] == expected_hits
     finally:
         reset_warmup_cache()
+
+
+# ---------------------------------------------------------------------------
+# v2 coarse stages: learned / tree artifacts, per-query selection
+# ---------------------------------------------------------------------------
+
+def _clustered_model_and_data(seed=11):
+    """Small clustered problem + analytic OvR weights (shared by the v2
+    coarse-stage tests): pool_stride/label_locality put co-occurring labels
+    in adjacent ids, the regime every coarse stage targets."""
+    L, D = 96, 768
+    data = make_xmc_dataset(n_train=48, n_test=16, n_features=D, n_labels=L,
+                            pool_stride=2, label_locality=0.9,
+                            multi_label_p=0.9, seed=seed)
+    W = np.zeros((L, D), np.float32)
+    for l in range(L):
+        W[l, data.label_pools[l]] = 1.0
+    return data, W, to_block_sparse(jnp.asarray(W), (8, 128))
+
+
+def test_v2_artifact_roundtrip_learned_and_tree(tmp_path):
+    """save_shortlist/load_shortlist preserve the v2 payload exactly for
+    both new kinds — including the tree arrays, which v1 never had."""
+    from repro.serve.shortlist import (build_learned_shortlist,
+                                       build_tree_shortlist)
+    data, _, bsr = _clustered_model_and_data()
+    X, Y = np.asarray(data.X_train), np.asarray(data.Y_train)
+    for art in (build_learned_shortlist(bsr, X, Y, max_newton=3),
+                build_tree_shortlist(bsr, X, Y, depth=2)):
+        d = str(tmp_path / art.kind)
+        os.makedirs(d)
+        save_shortlist(d, art)
+        back = load_shortlist(d)
+        assert (back.kind, back.stat, back.block_rows, back.n_labels) == \
+            (art.kind, art.stat, art.block_rows, art.n_labels)
+        np.testing.assert_array_equal(back.centroids, art.centroids)
+        if art.kind == "tree":
+            assert back.tree_depth == art.tree_depth
+            np.testing.assert_array_equal(back.tree_nodes, art.tree_nodes)
+            np.testing.assert_array_equal(back.tree_leaf_scores,
+                                          art.tree_leaf_scores)
+        else:
+            assert back.tree_depth == 0 and back.tree_nodes is None
+        back.validate_against(bsr)                    # loads stay servable
+
+
+def test_learned_and_tree_full_width_equal_exhaustive():
+    """B = R with a learned or tree coarse stage is still exhaustive
+    scoring: identical scores AND ids vs the plain BSR backend (the coarse
+    stage may only ever RANK blocks, never perturb fine scores)."""
+    from repro.serve.shortlist import (build_learned_shortlist,
+                                       build_tree_shortlist)
+    data, W, bsr = _clustered_model_and_data(seed=12)
+    L, k = W.shape[0], 5
+    X, Y = np.asarray(data.X_train), np.asarray(data.Y_train)
+    R = bsr.shape[0] // bsr.block_shape[0]
+    x = jnp.asarray(np.asarray(data.X_test[:4], np.float32))
+    ex = make_backend("bsr", bsr, k, n_labels=L)
+    v2, i2 = ex.topk(x)
+    for art in (build_learned_shortlist(bsr, X, Y, max_newton=3),
+                build_tree_shortlist(bsr, X, Y, depth=3)):
+        sl = make_backend("shortlist", bsr, k, n_labels=L, shortlist=art,
+                          shortlist_blocks=R)
+        assert sl.kind == art.kind
+        v1, i1 = sl.topk(x)
+        np.testing.assert_array_equal(np.asarray(v1), np.asarray(v2))
+        np.testing.assert_array_equal(np.asarray(i1), np.asarray(i2))
+
+
+def test_per_query_selection_is_per_row_topB():
+    """per_query=True: `select_blocks` returns each ROW's own top-B coarse
+    blocks (sorted), matching the host-side reference selection — not the
+    batch-union the shared path uses."""
+    from repro.serve.shortlist import coarse_scores
+    _, W, bsr = _clustered_model_and_data(seed=13)
+    L, k, B = W.shape[0], 5, 3
+    rng = np.random.default_rng(14)
+    x = rng.normal(size=(5, W.shape[1])).astype(np.float32)
+    art = build_shortlist(bsr)
+    sl = make_backend("shortlist", bsr, k, n_labels=L, shortlist=art,
+                      shortlist_blocks=B, shortlist_per_query=True)
+    assert sl.per_query is True
+    sel = sl.select_blocks(jnp.asarray(x))
+    want = np.sort(np.argsort(-coarse_scores(art, x), axis=1)[:, :B], axis=1)
+    assert sel.shape == (5, B)
+    np.testing.assert_array_equal(np.sort(sel, axis=1), want)
+
+
+def test_per_query_single_row_matches_shared():
+    """For n = 1 the per-query selection IS the shared union, so the ragged
+    path must be bit-identical to the shared gather on single-row batches
+    (the equivalence the serving benchmark's per-query gate leans on)."""
+    _, W, bsr = _clustered_model_and_data(seed=15)
+    L, k, B = W.shape[0], 5, 4
+    art = build_shortlist(bsr)
+    shared = make_backend("shortlist", bsr, k, n_labels=L, shortlist=art,
+                          shortlist_blocks=B)
+    pq = make_backend("shortlist", bsr, k, n_labels=L, shortlist=art,
+                      shortlist_blocks=B, shortlist_per_query=True)
+    rng = np.random.default_rng(16)
+    for _ in range(4):
+        x = jnp.asarray(rng.normal(size=(1, W.shape[1])).astype(np.float32))
+        vs, ls = shared.topk(x)
+        vp, lp = pq.topk(x)
+        np.testing.assert_array_equal(np.asarray(vs), np.asarray(vp))
+        np.testing.assert_array_equal(np.asarray(ls), np.asarray(lp))
+
+
+def test_per_query_collapses_to_shared_at_full_width():
+    """B = R per-query collapses to the shared executable (the ragged
+    kernel never sees a full-width request)."""
+    _, W, bsr = _clustered_model_and_data(seed=17)
+    L = W.shape[0]
+    R = bsr.shape[0] // bsr.block_shape[0]
+    art = build_shortlist(bsr)
+    pq = make_backend("shortlist", bsr, 5, n_labels=L, shortlist=art,
+                      shortlist_blocks=R, shortlist_per_query=True)
+    assert pq.per_query is False
+
+
+def test_validate_rejects_inconsistent_artifacts():
+    """validate_against: unknown kinds and torn tree payloads must fail
+    loudly at load, not at first query."""
+    _, _, bsr = _clustered_model_and_data(seed=18)
+    base = build_shortlist(bsr)
+    bad_kind = ShortlistArtifact(centroids=base.centroids,
+                                 block_rows=base.block_rows,
+                                 n_labels=base.n_labels, kind="ann")
+    with pytest.raises(ValueError, match="unknown shortlist kind"):
+        bad_kind.validate_against(bsr)
+    torn_tree = ShortlistArtifact(centroids=base.centroids,
+                                  block_rows=base.block_rows,
+                                  n_labels=base.n_labels, kind="tree",
+                                  tree_nodes=None, tree_leaf_scores=None,
+                                  tree_depth=3)
+    with pytest.raises(ValueError, match="tree shortlist artifact"):
+        torn_tree.validate_against(bsr)
+
+
+def test_per_query_int8_single_row_matches_shared_int8():
+    """The ragged int8 fine stage: single-row batches must be bit-identical
+    to the shared gathered-int8 path (same collapse argument as fp32)."""
+    _, W, bsr = _clustered_model_and_data(seed=19)
+    L, k, B = W.shape[0], 5, 4
+    art = build_shortlist(bsr)
+    shared = make_backend("shortlist", bsr, k, n_labels=L, shortlist=art,
+                          shortlist_blocks=B, int8=True)
+    pq = make_backend("shortlist", bsr, k, n_labels=L, shortlist=art,
+                      shortlist_blocks=B, int8=True,
+                      shortlist_per_query=True)
+    assert shared.int8 and pq.int8 and pq.per_query
+    rng = np.random.default_rng(20)
+    for _ in range(3):
+        x = jnp.asarray(rng.normal(size=(1, W.shape[1])).astype(np.float32))
+        vs, ls = shared.topk(x)
+        vp, lp = pq.topk(x)
+        np.testing.assert_array_equal(np.asarray(vs), np.asarray(vp))
+        np.testing.assert_array_equal(np.asarray(ls), np.asarray(lp))
+
+
+def test_tree_backend_selection_matches_host_reference():
+    """The jitted tree routing (`_tree_coarse`) agrees with the host-side
+    `coarse_scores` reference: the backend's shared B-block selection is
+    exactly the reference's top-B of the batch-max leaf scores."""
+    from repro.serve.shortlist import build_tree_shortlist, coarse_scores
+    data, W, bsr = _clustered_model_and_data(seed=21)
+    L, k, B = W.shape[0], 5, 3
+    X, Y = np.asarray(data.X_train), np.asarray(data.Y_train)
+    art = build_tree_shortlist(bsr, X, Y, depth=3)
+    sl = make_backend("shortlist", bsr, k, n_labels=L, shortlist=art,
+                      shortlist_blocks=B)
+    assert sl.kind == "tree"
+    x = np.asarray(data.X_test[:6], np.float32)
+    sel = np.sort(np.asarray(sl.select_blocks(jnp.asarray(x))))
+    coarse = coarse_scores(art, x)                    # host tree routing
+    want = np.sort(np.argsort(-coarse.max(axis=0))[:B])
+    np.testing.assert_array_equal(sel, want)
+
+
+def test_fit_reorder_learned_per_query_end_to_end(tmp_path):
+    """The fit-time tentpole path in one session: scrambled-label data +
+    `ScheduleSpec(reorder_labels=True)` + `ServeSpec(shortlist_kind=
+    "learned", shortlist_per_query=True)` -> the checkpoint persists a
+    nontrivial `label_order` and a learned artifact, and the served
+    full-width top-k ids are EXACTLY the dense reference of the packed
+    model unmapped through that order (ids out are original label ids)."""
+    from repro.serve.xmc import DenseBackend
+    from repro.specs import ScheduleSpec, ServeSpec
+    from repro.xmc_api import XMCSpec, fit
+
+    L, D = 64, 1024
+    data = make_xmc_dataset(n_train=160, n_test=24, n_features=D,
+                            n_labels=L, pool_stride=2, label_locality=0.9,
+                            multi_label_p=0.9, scramble_labels=True, seed=23)
+    spec = XMCSpec(
+        schedule=ScheduleSpec(label_batch=32, block_shape=(8, 128),
+                              reorder_labels=True),
+        serve=ServeSpec(backend="shortlist", k=5, shortlist_kind="learned",
+                        shortlist_per_query=True, warmup=False))
+    out = str(tmp_path / "ck")
+    handle = fit(jnp.asarray(data.X_train), jnp.asarray(data.Y_train),
+                 spec, out)
+    assert handle.result.complete
+
+    order = load_block_sparse_meta(out).get("label_order")
+    assert order is not None
+    order = np.asarray(order)
+    assert sorted(order.tolist()) == list(range(L))        # permutation
+    assert not np.array_equal(order, np.arange(L))         # and nontrivial
+    assert load_shortlist(out).kind == "learned"           # fit upgraded it
+
+    model, _ = load_block_sparse(out)
+    R = model.shape[0] // model.block_shape[0]
+    eng = handle.engine(ServeSpec(backend="shortlist", k=5,
+                                  shortlist_kind="learned",
+                                  shortlist_blocks=R, warmup=False))
+    x = np.asarray(data.X_test[:6], np.float32)
+    res = eng.serve([x])[0]
+
+    Wp = np.asarray(model.to_dense())[:L, :D]              # packed order
+    _, packed_ids = DenseBackend(jnp.asarray(Wp), 5, n_labels=L).topk(
+        jnp.asarray(x))
+    np.testing.assert_array_equal(np.asarray(res.labels),
+                                  order[np.asarray(packed_ids)])

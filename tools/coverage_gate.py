@@ -1,0 +1,128 @@
+#!/usr/bin/env python
+"""Stdlib line-coverage floor for the serving layer (no `coverage` module
+in the CI image, and installing one is off the table).
+
+Runs the serving-layer test files in-process under a `sys.settrace` line
+tracer restricted to the target modules, computes executed / executable
+lines per module (executable = `dis.findlinestarts` over the compiled
+module's code objects, recursively), and fails if any module drops below
+its ratcheted floor.
+
+The floors are deliberately a few points under today's measured coverage:
+the gate exists to catch a serving-path regression (a new backend branch
+or artifact kind the test matrix no longer reaches), not to force 100%.
+Raise a floor when coverage durably improves; never lower one to make a
+PR pass — add the missing test instead.
+
+  PYTHONPATH=src python tools/coverage_gate.py            # gate
+  PYTHONPATH=src python tools/coverage_gate.py --report   # per-file lines
+"""
+
+from __future__ import annotations
+
+import argparse
+import dis
+import os
+import sys
+import threading
+import types
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+#: module path (repo-relative) -> minimum covered/executable line fraction.
+FLOORS = {
+    "src/repro/serve/shortlist.py": 0.90,
+    "src/repro/serve/xmc.py": 0.85,
+    "src/repro/kernels/bsr_predict/ops.py": 0.80,
+}
+
+#: The serving-layer suites the floor is measured over — the equivalence
+#: matrix + the shortlist/property/int8 suites, which together are meant
+#: to reach every backend kind, artifact generation, and dtype path.
+TEST_FILES = [
+    "tests/test_backend_matrix.py",
+    "tests/test_shortlist.py",
+    "tests/test_properties.py",
+    "tests/test_int8_serving.py",
+]
+
+
+def executable_lines(path: str) -> set[int]:
+    """All line numbers the compiled module can start executing — the
+    denominator `coverage.py` would report (module, class and def
+    statements included; blank lines, comments and docstring bodies not)."""
+    with open(path, encoding="utf-8") as f:
+        code = compile(f.read(), path, "exec")
+    lines: set[int] = set()
+    stack = [code]
+    while stack:
+        c = stack.pop()
+        lines.update(ln for _, ln in dis.findlinestarts(c) if ln is not None)
+        stack.extend(k for k in c.co_consts if isinstance(k, types.CodeType))
+    return lines
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--report", action="store_true",
+                    help="also print the uncovered line numbers per file")
+    args = ap.parse_args()
+
+    os.chdir(REPO)
+    targets = {os.path.abspath(p): p for p in FLOORS}
+    hit: dict[str, set[int]] = {p: set() for p in FLOORS}
+
+    def tracer(frame, event, arg):
+        fn = frame.f_code.co_filename
+        if fn not in targets:
+            return None                       # never trace foreign frames
+        rel = targets[fn]
+
+        def local(frame, event, arg):
+            if event == "line":
+                hit[rel].add(frame.f_lineno)
+            return local
+
+        if event == "call":
+            hit[rel].add(frame.f_lineno)
+            return local
+        return None
+
+    import pytest
+
+    threading.settrace(tracer)                # serving tests spawn threads
+    sys.settrace(tracer)
+    try:
+        rc = pytest.main(["-x", "-q", "--no-header", *TEST_FILES])
+    finally:
+        sys.settrace(None)
+        threading.settrace(None)              # type: ignore[arg-type]
+    if rc != 0:
+        print(f"coverage_gate: test run failed (exit {rc}); "
+              "coverage not evaluated", file=sys.stderr)
+        return int(rc)
+
+    failed = False
+    print(f"\n{'module':44s} {'lines':>11s} {'cover':>7s} {'floor':>7s}")
+    for rel, floor in FLOORS.items():
+        want = executable_lines(rel)
+        got = hit[rel] & want
+        frac = len(got) / len(want)
+        ok = frac >= floor
+        failed |= not ok
+        print(f"{rel:44s} {len(got):5d}/{len(want):5d} {frac:7.3f} "
+              f"{floor:7.2f}  {'ok' if ok else 'BELOW FLOOR'}")
+        if args.report and want - got:
+            missing = sorted(want - got)
+            print(f"  uncovered: {missing}")
+    if failed:
+        print("\ncoverage_gate: FAILED — a serving path lost its test "
+              "coverage; add a test (do not lower the floor)",
+              file=sys.stderr)
+        return 1
+    print("\ncoverage_gate: OK")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

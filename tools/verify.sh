@@ -16,10 +16,21 @@
 # shortlist-composed paths), and the zero-downtime refresh gate: a hot
 # swap under open-loop Poisson load drops nothing (every accepted request
 # resolves, old model answers before the flip, new model after) and the
-# swap-window p99 stays <= 2x the steady-state p99. lifecycle_sweep's
+# swap-window p99 stays <= 2x the steady-state p99, and the coarse-stage
+# gates: the learned one-vs-rest coarse stage reaches recall@5 >= 0.95 at
+# a STRICTLY smaller candidate width than the centroid baseline, per-query
+# ragged selection is bit-exact vs exhaustive at B = n_row_blocks, and
+# legacy / v1-artifact checkpoints keep serving via fallback.
+# lifecycle_sweep's
 # smoke gates the warm-start sweep driver: the unchanged-spec arm is
 # bit-identical to its warm-start source, model size is monotone in
 # Delta, and the size-budget winner policy picks a feasible arm.
+#
+# The coverage leg (tools/coverage_gate.py, stdlib settrace — the image
+# has no coverage module) re-runs the serving-layer suites under a line
+# tracer and enforces ratcheted per-module floors on serve/shortlist.py,
+# serve/xmc.py and kernels/bsr_predict/ops.py, so a new backend branch or
+# artifact kind cannot silently land untested.
 #
 # The docs gate keeps the documentation surface honest: every intra-repo
 # link in README.md and docs/*.md must resolve (tools/check_docs.py), and
@@ -38,6 +49,10 @@ if [[ "${1:-}" != "--fast" ]]; then
     echo
     echo "== benchmark smoke (train_pipeline + tron_hotpath + serve_latency + lifecycle_sweep) =="
     python -m benchmarks.run --smoke
+
+    echo
+    echo "== serving-layer coverage floor =="
+    python tools/coverage_gate.py
 
     echo
     echo "== docs gate (link check + quickstart smoke) =="
